@@ -1,0 +1,65 @@
+"""Shared training-loop runner for the algorithm-comparison benchmarks.
+
+Runs the sim backend (vmapped M workers on CPU) for LOSS/ACCURACY curves and
+the event-driven simulator (repro.core.simulator) for WALL-CLOCK per
+iteration, then joins them — the paper's plots are metric-vs-wallclock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus, get_algorithm, make_sim_trainer
+from repro.core.simulator import HardwareModel, simulate
+from repro.optim import constant, linear_warmup_cosine, momentum
+
+
+@dataclass
+class RunResult:
+    losses: np.ndarray
+    disagreement: np.ndarray
+    eval_metric: np.ndarray  # accuracy or perplexity at eval points
+    eval_steps: np.ndarray
+    iter_time: float
+    total_time: float
+    mfu: float
+
+
+def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
+                  M: int, steps: int, batch_per_worker: int, lr: float,
+                  hw: HardwareModel, eval_every: int = 25,
+                  straggler_delays: Optional[np.ndarray] = None,
+                  warmup: int = 20, seed: int = 0) -> RunResult:
+    from repro.data.synthetic import make_worker_batches
+    algo = get_algorithm(algo_name)
+    sched = linear_warmup_cosine(lr, warmup, steps,
+                                 warmup_lr=lr * 0.3)
+    init_fn, step_fn = make_sim_trainer(algo, loss_fn, momentum(0.9),
+                                        sched, M,
+                                        straggler_delays=straggler_delays)
+    st = init_fn(jax.random.PRNGKey(seed),
+                 init_params_fn(jax.random.PRNGKey(seed + 1)))
+    rng = jax.random.PRNGKey(seed + 2)
+    losses, dis, evals, esteps = [], [], [], []
+    for t in range(steps):
+        batch = jax.tree.map(jnp.asarray,
+                             make_worker_batches(ds, M, batch_per_worker, t))
+        rng, r = jax.random.split(rng)
+        st, metrics = step_fn(st, batch, r)
+        losses.append(float(metrics["loss"]))
+        dis.append(float(metrics["disagreement"]))
+        if (t + 1) % eval_every == 0 or t == steps - 1:
+            xbar = consensus(st.params, st.weights)
+            evals.append(float(eval_fn(xbar)))
+            esteps.append(t + 1)
+
+    sim = simulate(algo_name if algo_name != "layup-block" else "gosgd",
+                   M=M, iters=steps, hw=hw,
+                   straggler_delays=straggler_delays)
+    return RunResult(np.array(losses), np.array(dis), np.array(evals),
+                     np.array(esteps), sim.total_time / steps,
+                     sim.total_time, sim.mfu)

@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: CSV emission, sim-clock based TTC/TTA."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+RESULTS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    RESULTS.append(line)
+    print(line, flush=True)
+
+
+def section(title: str):
+    print(f"\n# === {title} ===", flush=True)
+
+
+def time_to_target(values: np.ndarray, per_step_time: float, target: float,
+                   mode: str = "below") -> Optional[float]:
+    """First wall-clock time at which the metric crosses the target."""
+    ok = values < target if mode == "below" else values > target
+    idx = np.argmax(ok)
+    if not ok.any():
+        return None
+    return float((idx + 1) * per_step_time)

@@ -1,0 +1,47 @@
+"""Paper Fig. 3 analogue: straggler robustness.
+
+A: final task accuracy as a function of the injected delay (sim backend —
+   the straggler computes/updates only every (delay+1) iterations for async
+   methods; sync methods wait).
+B: total training time as a function of delay (event-driven simulator).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.algo_runner import run_algorithm
+from benchmarks.common import emit, section
+from benchmarks.table1_vision import HW, _problem
+from repro.core.simulator import straggler_sweep
+
+ALGOS = ["ddp", "co2", "slowmo", "gosgd", "adpsgd", "layup"]
+DELAYS = (0, 1, 2, 4, 8)
+
+
+def main(steps=250, M=8, quick=False):
+    section("Fig 3A analogue — accuracy vs straggler delay")
+    if quick:
+        steps = 120
+    ds, init, loss_fn, eval_fn = _problem(M)
+    delays_list = (0, 4) if quick else (0, 2, 8)
+    for d in delays_list:
+        dl = np.zeros(M, int)
+        dl[0] = d
+        for algo in ALGOS:
+            r = run_algorithm(algo, ds=ds, init_params_fn=init,
+                              loss_fn=loss_fn, eval_fn=eval_fn, M=M,
+                              steps=steps, batch_per_worker=64, lr=0.08,
+                              hw=HW, straggler_delays=dl,
+                              eval_every=steps)
+            emit(f"fig3a.{algo}.delay{d}", 0.0,
+                 f"acc={r.eval_metric[-1]:.4f}")
+
+    section("Fig 3B analogue — training time vs straggler delay")
+    sweep = straggler_sweep(ALGOS, M=M, iters=steps, hw=HW, delays=DELAYS)
+    for algo, times in sweep.items():
+        for d, t in zip(DELAYS, times):
+            emit(f"fig3b.{algo}.delay{d}", t / steps * 1e6, f"total_s={t:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Kernel microbenchmarks: us_per_call for the pure-jnp reference paths
+(XLA-compiled) and, on small shapes, the interpret-mode Pallas kernels
+(correctness-path timing only — interpret mode is not representative of TPU
+throughput; the kernels are TPU deployment artifacts)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section
+from repro.kernels import ops, ref
+from repro.models.layers import flash_attention_jnp
+
+
+def _bench(fn, *args, iters=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(quick=False):
+    section("kernel microbenchmarks (CPU; Pallas timings are interpret-mode)")
+    rng = jax.random.PRNGKey(0)
+
+    # flash attention — jnp path at realistic-ish shape
+    B, Hq, Hkv, S, D = 1, 8, 2, 1024, 64
+    q = jax.random.normal(rng, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    f = jax.jit(lambda q, k, v: flash_attention_jnp(
+        q, k, v, q_positions=pos, k_positions=pos, block_k=256))
+    us = _bench(f, q, k, v)
+    flops = 2 * B * Hq * S * S * D * 2 / 2  # causal
+    emit("kernel.flash_jnp.b1h8s1024", us,
+         f"gflops={flops / us / 1e3:.1f}")
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    us = _bench(jax.jit(lambda a, b, c: ref.attention_ref(a, b, c)), qt, kt, vt)
+    emit("kernel.attention_naive.b1h8s1024", us, "")
+
+    # ssd — jnp chunked vs sequential
+    from repro.models.ssm import ssd_chunked
+    b, l, h, p, n = 2, 512, 8, 64, 32
+    x = jax.random.normal(rng, (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 3), (b, l, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(rng, 4), (h,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(rng, 5), (b, l, n)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(rng, 6), (b, l, n)) * 0.5
+    us = _bench(jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0]),
+                x, dt, A, Bm, Cm)
+    emit("kernel.ssd_chunked_jnp.l512", us, "")
+
+    # gossip mix fused vs unfused (the LayUp hot op)
+    nelem = 4_000_000
+    xx = jax.random.normal(rng, (nelem,), jnp.float32)
+    rr = jax.random.normal(jax.random.fold_in(rng, 7), (nelem,))
+    uu = jax.random.normal(jax.random.fold_in(rng, 8), (nelem,)) * 0.01
+    fused = jax.jit(lambda x, r, u: ref.gossip_mix_ref(x, r, u, 0.6, 0.4))
+    us = _bench(fused, xx, rr, uu)
+    emit("kernel.gossip_mix_fused_jnp.4M", us,
+         f"GBps={(4 * nelem * 4) / us / 1e3:.1f}")
+
+    if not quick:
+        # interpret-mode pallas on tiny shapes (correctness path)
+        q2 = jax.random.normal(rng, (1, 2, 128, 32))
+        k2 = jax.random.normal(rng, (1, 1, 128, 32))
+        us = _bench(lambda a, b: ops.flash_attention(
+            a, b, b, block_q=64, block_k=64, interpret=True), q2, k2, iters=2)
+        emit("kernel.flash_pallas_interpret.s128", us, "not-TPU-representative")
+
+
+if __name__ == "__main__":
+    main()

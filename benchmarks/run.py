@@ -1,0 +1,58 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Usage:
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table3,fig3]
+
+The roofline module aggregates dry-run artifacts if present (run
+``PYTHONPATH=src python -m repro.launch.dryrun --all`` first for the full
+§Roofline table).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.table1_vision"),
+    ("table3", "benchmarks.table3_lm"),
+    ("table4", "benchmarks.table4_mfu"),
+    ("fig3", "benchmarks.fig3_stragglers"),
+    ("figA1", "benchmarks.figA1_drift"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    t0 = time.time()
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(modname)
+            mod.main(quick=args.quick)
+        except Exception:
+            traceback.print_exc()
+            failures.append(key)
+    print(f"\n# total benchmark time: {time.time() - t0:.0f}s")
+    if failures:
+        print("# FAILED:", failures)
+        sys.exit(1)
+    print("# ALL BENCHMARKS COMPLETED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Serving demo: prefill + batched incremental decode with KV cache.
+
+    PYTHONPATH=src python examples/serve.py [--arch mixtral-8x7b] [--tokens 32]
+
+Uses the REDUCED variant of the chosen architecture (CPU container); the
+full configs are exercised via the dry-run. Demonstrates the serve path the
+decode_32k / long_500k shapes lower: prefill a prompt batch, then decode
+tokens one at a time (greedy).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data.synthetic import lm_batch_for
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = args.batch
+    total = args.prompt_len + args.tokens
+
+    print(f"{cfg.name} ({cfg.family}): B={B}, prompt={args.prompt_len}, "
+          f"decode={args.tokens}")
+
+    # ---- prefill via incremental decode over the prompt --------------------
+    # (the batch prefill_fn path is exercised by prefill_32k dry-runs; here
+    # we show the pure decode loop, which works for every family)
+    batch = lm_batch_for(cfg, B, args.prompt_len, seed=1)
+    prompt = batch.get("tokens",
+                       jnp.zeros((B, args.prompt_len), jnp.int32))
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         model.cache_specs(B, total))
+    decode = jax.jit(model.decode_fn, donate_argnums=(1,))
+
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, cache, prompt[:, t:t + 1],
+                               jnp.full((B,), t, jnp.int32))
+    jax.block_until_ready(logits)
+    print(f"prefill: {args.prompt_len} steps in {time.time() - t0:.2f}s")
+
+    # ---- greedy decode -------------------------------------------------------
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out_tokens = [tok]
+    t0 = time.time()
+    for t in range(args.prompt_len, total - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.full((B,), t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    n = len(out_tokens) - 1
+    print(f"decode: {n} steps × batch {B} in {dt:.2f}s "
+          f"({B * n / max(dt, 1e-9):.1f} tok/s)")
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print("generated token ids (seq 0):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""End-to-end training driver: ~100M-parameter LM, LayUp with all substrates
+(data pipeline w/ prefetch, cosine schedule, checkpointing, drift metrics).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 [--small]
+
+The full run trains a ~100M model (GPT-2-small-ish dims) on the synthetic
+Markov language for a few hundred steps on CPU; --small shrinks it for a
+fast demo. Checkpoints land in /tmp/repro_ckpt; training resumes from the
+latest checkpoint if present.
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.core import consensus, get_algorithm, make_sim_trainer
+from repro.data.pipeline import ShardedIterator
+from repro.data.synthetic import SyntheticLM
+from repro.models import build_model
+from repro.optim import adamw, linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--algo", default="layup")
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    if args.small:
+        cfg = ModelConfig(name="lm-small", family="dense", num_layers=2,
+                          d_model=128, num_heads=4, num_kv_heads=2,
+                          d_ff=512, vocab_size=512)
+        seq, bpw = 64, 8
+    else:
+        # ~100M params: 12L × 512 d_model, vocab 32k (GPT-2-small-ish)
+        cfg = ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                          d_model=768, num_heads=12, num_kv_heads=12,
+                          d_ff=3072, vocab_size=32000)
+        seq, bpw = 128, 4
+    model = build_model(cfg)
+    print(f"{cfg.name}: {cfg.param_counts()['total']/1e6:.1f}M params, "
+          f"{args.workers} workers × batch {bpw} × seq {seq}, {args.algo}")
+
+    ds = SyntheticLM(vocab=cfg.vocab_size, seq_len=seq, temperature=1.2)
+    algo = get_algorithm(args.algo)
+    opt = adamw(weight_decay=0.01)
+    sched = linear_warmup_cosine(3e-4, 30, args.steps)
+    init_fn, step_fn = make_sim_trainer(
+        algo, lambda p, b: model.loss_fn(p, b, block_k=64), opt, sched,
+        args.workers)
+    state = init_fn(jax.random.PRNGKey(0), model.init(jax.random.PRNGKey(1)))
+
+    start = 0
+    if latest_step(args.ckpt_dir) is not None:
+        start = latest_step(args.ckpt_dir)
+        state = restore_checkpoint(args.ckpt_dir, start, state)
+        print(f"resumed from step {start}")
+
+    it = ShardedIterator(ds, args.workers, bpw, prefetch=2)
+    rng = jax.random.PRNGKey(2)
+    t_start = time.time()
+    try:
+        for t in range(start, args.steps):
+            batch = next(it)
+            rng, r = jax.random.split(rng)
+            state, m = step_fn(state, batch, r)
+            if (t + 1) % 20 == 0:
+                rate = (t + 1 - start) * args.workers * bpw * seq / (
+                    time.time() - t_start)
+                print(f"step {t+1:4d}  loss={float(m['loss']):.4f}  "
+                      f"lr={float(m['lr']):.2e}  "
+                      f"dis={float(m.get('disagreement', 0)):.4f}  "
+                      f"tok/s={rate:,.0f}")
+            if (t + 1) % args.ckpt_every == 0:
+                path = save_checkpoint(args.ckpt_dir, t + 1, state)
+                print(f"checkpoint → {path}")
+    finally:
+        it.close()
+
+    xbar = consensus(state.params, state.weights)
+    eval_batch = {k: jnp.asarray(v)
+                  for k, v in ds.sample(np.random.default_rng(9), 32).items()}
+    loss, _ = model.loss_fn(xbar, eval_batch, block_k=64)
+    print(f"final eval ppl {float(jnp.exp(loss)):.2f} "
+          f"(floor {float(np.exp(ds.entropy)):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Pytree checkpointing to .npz (orbax is not available offline).
+
+Leaves are flattened with their tree paths as archive keys, so arbitrary
+nested dict/tuple/list states (params, optimizer state, push-sum weights,
+algorithm buffers) round-trip exactly. Atomic rename guards partial writes.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # numpy can't serialize ml_dtypes (bf16 etc.); f32 is a lossless
+            # container for bf16 and is cast back on restore
+            arr = np.asarray(leaf, dtype=np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    # np.savez appends ".npz" unless the name already ends with it
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **_flatten(tree))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def restore_checkpoint(directory: str, step: Optional[int], like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = dict(data)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_, leaf in paths_leaves:
+        key = jax.tree_util.keystr(path_)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype)
+                          if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,26 @@
+"""Qwen2-VL 2B — VLM backbone with M-RoPE and dynamic resolution.
+
+[arXiv:2409.12191] 28L, d_model=1536, 12H (GQA kv=2), d_ff=8960,
+vocab=151936. The vision encoder (ViT) is a STUB per the brief; input_specs
+supplies mixed text+patch embeddings and 3-axis (t/h/w) M-RoPE positions.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    mrope=True,
+    frontend="vision",
+    rope_theta=1e6,
+    tie_embeddings=True,
+    dtype=jnp.bfloat16,
+    source="arXiv:2409.12191",
+))

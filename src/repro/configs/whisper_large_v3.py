@@ -1,0 +1,30 @@
+"""Whisper large-v3 — encoder-decoder audio transformer (conv frontend STUB).
+
+[arXiv:2212.04356] 32L encoder + 32L decoder, d_model=1280, 20H (MHA),
+d_ff=5120, vocab=51866. The mel-spectrogram + conv feature extractor is a
+stub: input_specs supplies (B, 1500, 1280) frame embeddings.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    enc_dec=True,
+    enc_layers=32,
+    enc_seq=1500,
+    frontend="audio",
+    rope_theta=0.0,  # whisper uses learned/sinusoidal positions; we use
+                     # sinusoidal for the encoder and RoPE-free learned-style
+                     # additive positions for the decoder cache indexing
+    tie_embeddings=True,
+    dtype=jnp.bfloat16,
+    source="arXiv:2212.04356",
+))

@@ -1,0 +1,9 @@
+from repro.core.api import (
+    DistAlgorithm, TrainState, get_algorithm, list_algorithms,
+    make_sim_trainer, register_algorithm, consensus, disagreement,
+)
+
+__all__ = [
+    "DistAlgorithm", "TrainState", "get_algorithm", "list_algorithms",
+    "make_sim_trainer", "register_algorithm", "consensus", "disagreement",
+]

@@ -1,0 +1,49 @@
+"""AD-PSGD baseline (Lian et al., 2018).
+
+Asynchronous decentralized SGD with *symmetric* pairwise averaging: at each
+iteration workers form a random matching and each matched pair averages
+parameters atomically, then applies local gradients. Symmetric exchange
+doubles communication volume vs push-sum gossip (paper §2) but needs no
+push-sum weights (mass is conserved by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import DistAlgorithm, register_algorithm
+
+
+def random_matching(rng, M: int) -> jnp.ndarray:
+    """Partner index per worker (involution; odd one out maps to itself)."""
+    perm = jax.random.permutation(rng, M)
+    partner_of_perm = jnp.arange(M) + jnp.where(jnp.arange(M) % 2 == 0, 1, -1)
+    partner_of_perm = jnp.where(partner_of_perm >= M, jnp.arange(M),
+                                partner_of_perm)
+    partner = jnp.zeros((M,), jnp.int32).at[perm].set(perm[partner_of_perm])
+    return partner
+
+
+class ADPSGD(DistAlgorithm):
+    name = "adpsgd"
+    asynchronous = True
+
+    def post(self, params, weights, extras, updates, active, rng, step):
+        M = weights.shape[0]
+        partner = random_matching(rng, M)
+        # pairs average only if both endpoints are willing (active receiver is
+        # fine; stragglers still participate in averaging — they're passive)
+        def avg_then_update(p, u):
+            pf = p.astype(jnp.float32)
+            mixed = 0.5 * (pf + pf[partner])
+            a = self._bcast(active.astype(jnp.float32), p)
+            return (mixed + a * u.astype(jnp.float32)).astype(p.dtype)
+
+        new_params = jax.tree.map(avg_then_update, params, updates)
+        return new_params, weights, extras, {
+            "pairs": jnp.sum((partner != jnp.arange(M)).astype(jnp.float32)) / 2}
+
+
+@register_algorithm("adpsgd")
+def _adpsgd():
+    return ADPSGD()

@@ -1,0 +1,231 @@
+"""Distributed-algorithm API + the simulation-backend trainer.
+
+Every algorithm (LayUp and all baselines) is a ``DistAlgorithm`` with four
+pure hooks operating on *stacked* parameters — every pytree leaf carries a
+leading ``M`` (worker) axis:
+
+  init_extras(params, M)                 → algorithm-private state
+  transform_grads(grads, extras)         → grads   (DDP: mean over workers)
+  pre(params, weights, extras)           → applied before the forward pass
+                                           (e.g. delayed/buffered gossip)
+  post(params, weights, extras, updates, active, rng, step)
+                                         → applies local updates + mixing
+
+``make_sim_trainer`` wires a model loss, an optimizer, a schedule and an
+algorithm into a jitted step. The same stacked representation runs on one
+CPU device (vmap) or on a mesh (leading axis sharded over ('pod','data')).
+
+Straggler emulation: ``straggler_delays[i] = d`` makes worker ``i`` perform
+its local update + gossip only every ``d+1`` iterations (it still *receives*
+peer updates, matching the paper §5.4). Synchronous algorithms ignore the
+mask — their straggler cost is wall-clock (see repro.core.simulator).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import Optimizer, apply_updates
+
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Any          # stacked (M, ...) pytree
+    opt_state: Any       # stacked
+    weights: jnp.ndarray  # (M,) push-sum weights (sum == 1)
+    extras: Any          # algorithm-private
+    step: jnp.ndarray    # scalar int32
+
+
+class DistAlgorithm:
+    """Base class; subclasses override the hooks they need."""
+
+    name: str = "base"
+    asynchronous: bool = False  # respects the straggler active-mask
+
+    def init_extras(self, params, M: int):
+        return ()
+
+    def transform_grads(self, grads, extras):
+        return grads, extras
+
+    def pre(self, params, weights, extras):
+        return params, weights, extras
+
+    def post(self, params, weights, extras, updates, active, rng, step):
+        raise NotImplementedError
+
+    # -- shared helpers -------------------------------------------------------
+    @staticmethod
+    def _bcast(v, leaf):
+        """Reshape a per-worker (M,) vector for broadcasting against a leaf."""
+        return v.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+
+    @classmethod
+    def masked_apply(cls, params, updates, active):
+        """params + updates where active (per-worker mask)."""
+        def f(p, u):
+            a = cls._bcast(active.astype(jnp.float32), p)
+            return p + (a * u.astype(jnp.float32)).astype(p.dtype)
+        return jax.tree.map(f, params, updates)
+
+
+# ---------------------------------------------------------------------------
+# gossip peer selection with collision-skip (paper §3.1)
+# ---------------------------------------------------------------------------
+
+
+def choose_peers(rng, M: int, active) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Random peer per active worker; colliding senders are skipped
+    ("first" sender by index wins — deterministic stand-in for race winner).
+
+    Returns (send_ok (M,) bool, has_recv (M,) bool, sender_idx (M,) int —
+    valid where has_recv)."""
+    peers = jax.random.randint(rng, (M,), 0, M - 1)
+    me = jnp.arange(M)
+    peers = peers + (peers >= me)  # j != i
+    contestant = jnp.where(active, me, M)  # inactive never win
+    winner = jnp.full((M,), M, jnp.int32).at[peers].min(contestant.astype(jnp.int32))
+    send_ok = active & (winner[peers] == me)
+    has_recv = winner < M
+    sender_idx = jnp.where(has_recv, winner, 0)
+    return send_ok, has_recv, sender_idx
+
+
+def pushsum_weight_update(weights, send_ok, has_recv, sender_idx):
+    """w_i ← w_i/2 on send; w_j ← w_j + w_s/2 on receive. Σw conserved."""
+    w_old = weights
+    w = jnp.where(send_ok, w_old * 0.5, w_old)
+    gain = jnp.where(has_recv, w_old[sender_idx] * 0.5, 0.0)
+    return w + gain
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_ALGOS: Dict[str, Callable[..., DistAlgorithm]] = {}
+
+
+def register_algorithm(name: str):
+    def deco(fn):
+        _ALGOS[name] = fn
+        return fn
+    return deco
+
+
+def get_algorithm(name: str, **kw) -> DistAlgorithm:
+    _ensure_loaded()
+    if name not in _ALGOS:
+        raise KeyError(f"unknown algorithm {name!r}; known: {sorted(_ALGOS)}")
+    return _ALGOS[name](**kw)
+
+
+def list_algorithms():
+    _ensure_loaded()
+    return sorted(_ALGOS)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for m in ("ddp", "layup", "gosgd", "adpsgd", "localsgd", "slowmo", "co2"):
+        importlib.import_module(f"repro.core.{m}")
+    _LOADED = True
+
+
+# ---------------------------------------------------------------------------
+# sim trainer
+# ---------------------------------------------------------------------------
+
+
+def consensus(params, weights):
+    """Push-sum consensus estimate x̄ = Σ_i w_i x_i / Σ_i w_i.
+
+    The normalization matters when gossip mass is in flight (buffered
+    messages carry part of Σw between iterations)."""
+    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def f(p):
+        w = weights.reshape((-1,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(w * p.astype(jnp.float32), axis=0) / wsum
+    return jax.tree.map(f, params)
+
+
+def disagreement(params, weights):
+    """Mean over workers of ‖x_i − x̄‖ (the paper's 'model disagreement')."""
+    xbar = consensus(params, weights)
+
+    def sq(p, b):
+        d = p.astype(jnp.float32) - b[None]
+        return jnp.sum(jnp.square(d), axis=tuple(range(1, p.ndim)))
+
+    per_worker = sum(jax.tree.leaves(jax.tree.map(sq, params, xbar)))
+    return jnp.mean(jnp.sqrt(per_worker))
+
+
+def make_sim_trainer(algo: DistAlgorithm, loss_fn: Callable, optimizer: Optimizer,
+                     schedule: Callable, M: int,
+                     straggler_delays: Optional[np.ndarray] = None,
+                     measure_drift: bool = True):
+    """Returns (init_fn, step_fn).
+
+    loss_fn(params, batch) -> (loss, metrics); batch leaves have a leading
+    M axis matching params.
+    """
+    delays = (jnp.zeros((M,), jnp.int32) if straggler_delays is None
+              else jnp.asarray(straggler_delays, jnp.int32))
+
+    def init_fn(rng, params_single) -> TrainState:
+        params = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (M,) + p.shape), params_single)
+        opt_state = jax.vmap(optimizer.init)(params)
+        return TrainState(
+            params=params,
+            opt_state=opt_state,
+            weights=jnp.full((M,), 1.0 / M, jnp.float32),
+            extras=algo.init_extras(params, M),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def grad_fn(p, b):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
+        return g, loss
+
+    @jax.jit
+    def step_fn(state: TrainState, batch, rng):
+        params, weights, extras = algo.pre(state.params, state.weights,
+                                           state.extras)
+        active = (jnp.mod(state.step, delays + 1) == 0) | (~jnp.bool_(algo.asynchronous))
+        grads, losses = jax.vmap(grad_fn)(params, batch)
+        grads, extras = algo.transform_grads(grads, extras)
+        lr = schedule(state.step)
+        updates, opt_state = jax.vmap(
+            lambda g, s, p: optimizer.update(g, s, p, lr))(
+                grads, state.opt_state, params)
+        r1, _ = jax.random.split(rng)
+        params, weights, extras, algo_metrics = algo.post(
+            params, weights, extras, updates, active, r1, state.step)
+        metrics = {"loss": jnp.mean(losses), "lr": lr,
+                   "weight_sum": jnp.sum(weights), **algo_metrics}
+        if measure_drift:
+            metrics["disagreement"] = disagreement(params, weights)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               weights=weights, extras=extras,
+                               step=state.step + 1)
+        return new_state, metrics
+
+    return init_fn, step_fn

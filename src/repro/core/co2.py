@@ -1,0 +1,63 @@
+"""CO2 baseline (Sun et al., 2024): Local SGD whose outer
+averaging/momentum step overlaps communication by operating on a *stale*
+(one-outer-round-old) average. Requires extra model-sized buffers (the paper
+quotes up to 4× model memory with the penalty gap; like the paper's own
+comparison we implement the overlap without the penalty-gap correction —
+that correction affects final quality only, not convergence speed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import DistAlgorithm, register_algorithm
+from repro.core.slowmo import SlowMo
+
+
+class CO2(SlowMo):
+    asynchronous = True  # overlapped outer step tolerates stragglers
+
+    def __init__(self, sync_every: int = 8, outer_lr: float = 1.0,
+                 outer_beta: float = 0.5):
+        super().__init__(sync_every, outer_lr, outer_beta, name="co2")
+
+    def init_extras(self, params, M: int):
+        base = super().init_extras(params, M)
+        base["stale_avg"] = jax.tree.map(jnp.array, base["z"])
+        return base
+
+    def post(self, params, weights, extras, updates, active, rng, step):
+        new_params = self.masked_apply(params, updates, active)
+        sync = (jnp.mod(step + 1, self.H) == 0)
+
+        # outer step uses the STALE average (communication overlapped)
+        u_new = jax.tree.map(
+            lambda uu, z, xa: self.outer_beta * uu.astype(jnp.float32)
+            + (z.astype(jnp.float32) - xa.astype(jnp.float32)) / self.outer_lr,
+            extras["u"], extras["z"], extras["stale_avg"])
+        z_new = jax.tree.map(
+            lambda zz, uu: zz.astype(jnp.float32) - self.outer_lr * uu,
+            extras["z"], u_new)
+        # refresh the stale average with *this* round's mean (arrives "later")
+        xavg = jax.tree.map(
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), new_params)
+
+        def sel(a, b):
+            return jnp.where(sync, a.astype(jnp.float32),
+                             b.astype(jnp.float32)).astype(b.dtype)
+
+        z = jax.tree.map(sel, z_new, extras["z"])
+        u = jax.tree.map(sel, u_new, extras["u"])
+        stale = jax.tree.map(sel, xavg, extras["stale_avg"])
+        out = jax.tree.map(
+            lambda p, zz: jnp.where(
+                sync, jnp.broadcast_to(zz[None].astype(jnp.float32), p.shape),
+                p.astype(jnp.float32)).astype(p.dtype),
+            new_params, z)
+        return (out, weights, {"z": z, "u": u, "stale_avg": stale},
+                {"synced": sync.astype(jnp.float32)})
+
+
+@register_algorithm("co2")
+def _co2(sync_every: int = 8, outer_lr: float = 1.0, outer_beta: float = 0.5):
+    return CO2(sync_every, outer_lr, outer_beta)

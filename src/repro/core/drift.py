@@ -1,0 +1,70 @@
+"""Diagnostics for the paper's theory: drift, gradient bias, elastic bound.
+
+* ``disagreement`` (in repro.core.api): mean_i ‖x_i − x̄‖ — paper Fig. A1.
+* ``gradient_bias``: ‖g(x̂) − g(x̃)‖² — the bias the paper bounds in
+  Lemma 6.1: E‖b‖² ≤ 4 K_b² η² B².
+* ``estimate_lipschitz``: empirical K_b via random perturbations.
+* ``elastic_constant``: empirical B̂ from E‖x̄ − x_i‖² ≤ η²B² (Assumption 6).
+
+Together these let the experiments check Lemma 6.1 numerically:
+    bias² ≤ 4 · K̂² · η² · B̂²   (see benchmarks/figA1_drift.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import consensus
+
+
+def _tree_sqnorm(tree):
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+               for x in jax.tree.leaves(tree))
+
+
+def gradient_bias(loss_fn: Callable, params_hat, params_tilde, batch):
+    """‖∇L(x̂) − ∇L(x̃)‖ for a single worker's params/batch."""
+    g_hat = jax.grad(lambda p: loss_fn(p, batch)[0])(params_hat)
+    g_tld = jax.grad(lambda p: loss_fn(p, batch)[0])(params_tilde)
+    diff = jax.tree.map(lambda a, b: a - b, g_hat, g_tld)
+    return jnp.sqrt(_tree_sqnorm(diff))
+
+
+def estimate_lipschitz(loss_fn: Callable, params, batch, rng, *,
+                       n_probes: int = 4, eps: float = 1e-3):
+    """K̂_b = max over probes of ‖g(x+δ) − g(x)‖ / ‖δ‖."""
+    g0 = jax.grad(lambda p: loss_fn(p, batch)[0])(params)
+    ks = []
+    for i in range(n_probes):
+        r = jax.random.fold_in(rng, i)
+        leaves, treedef = jax.tree.flatten(params)
+        noise = [jax.random.normal(jax.random.fold_in(r, j), l.shape, jnp.float32)
+                 for j, l in enumerate(leaves)]
+        nn = jnp.sqrt(sum(jnp.sum(jnp.square(n)) for n in noise))
+        noise = [eps * n / nn for n in noise]
+        pert = jax.tree.unflatten(treedef, [
+            (l.astype(jnp.float32) + n).astype(l.dtype)
+            for l, n in zip(leaves, noise)])
+        g1 = jax.grad(lambda p: loss_fn(p, batch)[0])(pert)
+        dn = jnp.sqrt(_tree_sqnorm(jax.tree.map(lambda a, b: a - b, g1, g0)))
+        ks.append(dn / eps)
+    return jnp.max(jnp.stack(ks))
+
+
+def elastic_constant(params_stacked, weights, lr) -> jnp.ndarray:
+    """B̂ = max_i ‖x̄ − x_i‖ / η (empirical elastic-consistency constant)."""
+    xbar = consensus(params_stacked, weights)
+
+    def per_worker_sq(p, b):
+        d = p.astype(jnp.float32) - b[None]
+        return jnp.sum(jnp.square(d), axis=tuple(range(1, p.ndim)))
+
+    sq = sum(jax.tree.leaves(jax.tree.map(per_worker_sq, params_stacked, xbar)))
+    return jnp.sqrt(jnp.max(sq)) / jnp.maximum(lr, 1e-12)
+
+
+def lemma61_bound(k_hat, lr, b_hat) -> jnp.ndarray:
+    """RHS of Lemma 6.1: 4 K² η² B² (on the *squared* bias)."""
+    return 4.0 * k_hat ** 2 * lr ** 2 * b_hat ** 2

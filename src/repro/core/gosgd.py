@@ -1,0 +1,14 @@
+"""GoSGD baseline (Blot et al., 2019) — randomized push-sum gossip SGD.
+
+Whole-model (block) gossip exchanged once per iteration, applied at the next
+iteration boundary. The paper notes its GoSGD implementation was adapted
+from the LayUp code — ours likewise shares the LayUp block-mode machinery
+(LayUp minus layer-wise updates).
+"""
+from repro.core.api import register_algorithm
+from repro.core.layup import LayUp
+
+
+@register_algorithm("gosgd")
+def _gosgd():
+    return LayUp(layerwise=False, name="gosgd")

@@ -1,0 +1,169 @@
+"""LayUp — the paper's algorithm (Alg. 1).
+
+Asynchronous decentralized SGD with push-sum randomized gossip and
+layer-wise updates. In the simulation backend the layer-wise mechanism
+manifests as two things (see DESIGN.md §4):
+
+1. **Zero-delay mixing** — because each layer's parameters are sent *during*
+   the backward pass, a peer's next forward sees them immediately
+   (``layerwise=True``). With ``layerwise=False`` ("block updates", ≡ GoSGD)
+   the whole-model message lands only after the full backward, i.e. with one
+   iteration of delay (buffered in ``extras``) — this is the paper's §3.2
+   drift comparison.
+2. **Mixed-version updates** — the local update computed at the
+   forward-pass parameters x̂ is applied on top of freshly *mixed*
+   parameters x̃ (receiver side), which is exactly the gradient bias the
+   paper bounds in Lemma 6.1.
+
+Collisions (two senders picking the same peer) skip the losing send with
+weights untouched, conserving Σw exactly (paper §3.1: information is
+delayed, never lost).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import (
+    DistAlgorithm, choose_peers, pushsum_weight_update, register_algorithm,
+)
+
+
+class LayUp(DistAlgorithm):
+    asynchronous = True
+
+    def __init__(self, layerwise: bool = True, name: str = "layup",
+                 peer_mode: str = "random"):
+        """peer_mode: 'random' (paper-faithful randomized gossip) or
+        'hypercube' (beyond-paper: deterministic XOR-partner schedule,
+        i ↔ i⊕2^(t mod log₂M) — a perfect matching every step, collision-free
+        by construction, consensus in log₂M rounds instead of the
+        O(log M / log(1/λ₂)) expected rounds of uniform random gossip)."""
+        self.layerwise = layerwise
+        self.name = name
+        self.peer_mode = peer_mode
+
+    def _peers(self, rng, M, active, step):
+        if self.peer_mode == "hypercube":
+            import numpy as np
+            bits = max(int(np.ceil(np.log2(M))), 1)
+            stride = 1 << (step % bits)
+            me = jnp.arange(M)
+            peers = jnp.bitwise_xor(me, stride)
+            valid = peers < M  # non-power-of-two M: unpaired workers idle
+            send_ok = active & valid
+            has_recv = send_ok[jnp.clip(peers, 0, M - 1)] & valid
+            sender_idx = jnp.where(has_recv, jnp.clip(peers, 0, M - 1), 0)
+            return send_ok, has_recv, sender_idx
+        return choose_peers(rng, M, active)
+
+    # -- pending-buffer helpers (block mode only) ------------------------------
+    #
+    # Block (≡ GoSGD) messages carry the WHOLE model and are sent only after
+    # the full backward pass, so they land too late for the peer's next
+    # forward — one extra iteration of staleness versus layer-wise sends
+    # (paper §3.2). Modeled as a 2-slot message queue.
+    def _empty_slot(self, params, M):
+        return {"vals": jax.tree.map(jnp.zeros_like, params),
+                "w": jnp.zeros((M,), jnp.float32),
+                "valid": jnp.zeros((M,), bool)}
+
+    def init_extras(self, params, M: int):
+        if self.layerwise:
+            return ()
+        return {"q0": self._empty_slot(params, M),
+                "q1": self._empty_slot(params, M)}
+
+    def pre(self, params, weights, extras):
+        if self.layerwise:
+            return params, weights, extras
+        # apply the oldest buffered block mix (sent two iterations ago)
+        slot = extras["q0"]
+        w_s = slot["w"]
+        valid = slot["valid"]
+        denom = jnp.maximum(weights + w_s, 1e-12)
+        alpha = jnp.where(valid, weights / denom, 1.0)
+        beta = jnp.where(valid, w_s / denom, 0.0)
+
+        def mix(x, v):
+            a = self._bcast(alpha, x)
+            b = self._bcast(beta, x)
+            return (a * x.astype(jnp.float32)
+                    + b * v.astype(jnp.float32)).astype(x.dtype)
+
+        params = jax.tree.map(mix, params, slot["vals"])
+        weights = weights + jnp.where(valid, w_s, 0.0)
+        extras = {"q0": extras["q1"],
+                  "q1": {**slot, "valid": jnp.zeros_like(valid),
+                         "w": jnp.zeros_like(w_s)}}
+        return params, weights, extras
+
+    def post(self, params, weights, extras, updates, active, rng, step):
+        M = weights.shape[0]
+        send_ok, has_recv, sender_idx = self._peers(rng, M, active, step)
+        af = active.astype(jnp.float32)
+
+        if self.layerwise:
+            # sender transmits its *updated* layer; receiver mixes, then its
+            # own update lands on the mixed value (x̃) → Lemma 6.1 bias.
+            # NB: a worker that is simultaneously a winning sender mixes with
+            # its POST-halving weight (it shipped half its mass away) — this
+            # is what conserves Σ wᵢxᵢ exactly (property-tested).
+            w_self = jnp.where(send_ok, weights * 0.5, weights)
+            w_s = (weights * 0.5)[sender_idx]  # winners' halved mass
+            denom = jnp.maximum(w_self + w_s, 1e-12)
+            alpha = jnp.where(has_recv, w_self / denom, 1.0)
+            beta = jnp.where(has_recv, w_s / denom, 0.0)
+
+            def apply_leaf(x, u):
+                uf = self._bcast(af, x) * u.astype(jnp.float32)
+                upd_x = x.astype(jnp.float32) + uf  # sender-side value
+                sent = upd_x[sender_idx]
+                a = self._bcast(alpha, x)
+                b = self._bcast(beta, x)
+                mixed = a * x.astype(jnp.float32) + b * sent + uf
+                out = jnp.where(self._bcast(has_recv.astype(jnp.float32), x) > 0,
+                                mixed, upd_x)
+                return out.astype(x.dtype)
+
+            new_params = jax.tree.map(apply_leaf, params, updates)
+            new_weights = pushsum_weight_update(weights, send_ok, has_recv,
+                                                sender_idx)
+            metrics = {"gossip_sends": jnp.sum(send_ok.astype(jnp.float32))}
+            return new_params, new_weights, extras, metrics
+
+        # ---- block mode (≡ GoSGD): update now, enqueue the mix --------------
+        new_params = self.masked_apply(params, updates, active)
+        sent = jax.tree.map(lambda x: x[sender_idx], new_params)
+        w_half = weights * 0.5
+        new_weights = jnp.where(send_ok, w_half, weights)
+        extras = {
+            "q0": extras["q0"],
+            "q1": {
+                "vals": sent,
+                "w": jnp.where(has_recv, w_half[sender_idx], 0.0),
+                "valid": has_recv,
+            },
+        }
+        metrics = {"gossip_sends": jnp.sum(send_ok.astype(jnp.float32))}
+        return new_params, new_weights, extras, metrics
+
+
+@register_algorithm("layup")
+def _layup(**kw):
+    return LayUp(layerwise=True, name="layup", **kw)
+
+
+@register_algorithm("layup-block")
+def _layup_block():
+    """Ablation: LayUp without layer-wise updates (end-of-iteration mix)."""
+    return LayUp(layerwise=False, name="layup-block")
+
+
+@register_algorithm("layup-hypercube")
+def _layup_hypercube():
+    """Beyond-paper: deterministic hypercube gossip schedule (§Perf)."""
+    return LayUp(layerwise=True, name="layup-hypercube",
+                 peer_mode="hypercube")

@@ -1,0 +1,34 @@
+"""Local SGD baseline (Stich, 2019): H local steps, then full averaging."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import DistAlgorithm, register_algorithm
+
+
+class LocalSGD(DistAlgorithm):
+    asynchronous = False
+
+    def __init__(self, sync_every: int = 8, name: str = "localsgd"):
+        self.H = sync_every
+        self.name = name
+
+    def post(self, params, weights, extras, updates, active, rng, step):
+        new_params = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params, updates)
+        sync = (jnp.mod(step + 1, self.H) == 0)
+
+        def maybe_avg(p):
+            avg = jnp.broadcast_to(
+                jnp.mean(p.astype(jnp.float32), axis=0, keepdims=True),
+                p.shape).astype(p.dtype)
+            return jnp.where(sync, avg, p)
+
+        return (jax.tree.map(maybe_avg, new_params), weights, extras,
+                {"synced": sync.astype(jnp.float32)})
+
+
+@register_algorithm("localsgd")
+def _localsgd(sync_every: int = 8):
+    return LocalSGD(sync_every)

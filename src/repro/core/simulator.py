@@ -1,0 +1,164 @@
+"""Event-driven wall-clock simulator for the distributed algorithms.
+
+The container has one CPU device, so the paper's *timing* claims (TTC, MFU,
+straggler robustness — Tables 1–4, Fig. 3) cannot be measured directly.
+This simulator models the schedule each algorithm induces:
+
+  worker i, iteration k:  fwd (F_i) → bwd (B_i) → algorithm-specific comm
+  * DDP        — global barrier after bwd, then ring all-reduce
+                 (2·(M−1)/M · P bytes at bus bandwidth).
+  * LocalSGD / SlowMo — barrier + all-reduce every H iterations only.
+  * CO2        — barrier every H iterations, all-reduce *overlapped* (hidden
+                 unless it exceeds H·(F+B) of compute).
+  * GoSGD      — no barrier; full-model push (P bytes) on the sender NIC
+                 after bwd; stalls only if the previous send is in flight.
+  * AD-PSGD    — no barrier, but symmetric pairwise averaging (2·P bytes)
+                 requires rendezvous with a random partner → a straggler
+                 delays whoever draws it.
+  * LayUp      — no barrier; layer-wise sends start DURING bwd (layer ℓ's
+                 message enters the NIC when its gradient is ready), so
+                 communication hides behind the remaining backward compute.
+
+Stragglers: worker i's compute is scaled by (1 + delay_i) — the paper's
+"idle for a multiple of one fwd+bwd" injection (§5.4).
+
+Outputs per algorithm: wall-clock for N iterations, compute utilization
+(busy/total), and MFU = utilization × kernel_mfu (the achievable MFU of the
+pure compute kernels) — reproducing the structure of paper Table 4/Fig. 3B.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass
+class HardwareModel:
+    fwd_time: float = 1.0          # seconds per fwd pass (per worker)
+    bwd_ratio: float = 2.0         # bwd = ratio * fwd (paper Table A4: ~2x)
+    num_layers: int = 24
+    model_bytes: float = 1.6e9     # fp32 GPT-2 medium ≈ 1.6 GB
+    bandwidth: float = 25e9        # bytes/s per link (NVLink-ish)
+    allreduce_bandwidth: float = 100e9  # bus bandwidth for ring all-reduce
+    kernel_mfu: float = 0.75       # MFU of the pure compute kernels
+
+    @property
+    def bwd_time(self):
+        return self.fwd_time * self.bwd_ratio
+
+    @property
+    def iter_compute(self):
+        return self.fwd_time + self.bwd_time
+
+
+@dataclass
+class SimResult:
+    total_time: float
+    compute_time: float   # mean per-worker busy compute time
+    utilization: float
+    mfu: float
+    iter_times: np.ndarray = field(repr=False, default=None)
+
+
+def _mfu(hw: HardwareModel, compute: float, total: float) -> float:
+    return hw.kernel_mfu * compute / max(total, 1e-12)
+
+
+def simulate(algo: str, *, M: int, iters: int, hw: HardwareModel,
+             straggler_delays: Optional[np.ndarray] = None,
+             sync_every: int = 8, seed: int = 0) -> SimResult:
+    delays = np.zeros(M) if straggler_delays is None else np.asarray(
+        straggler_delays, float)
+    slow = 1.0 + delays                      # per-worker compute multiplier
+    F = hw.fwd_time * slow                   # (M,)
+    B = hw.bwd_time * slow
+    rng = np.random.default_rng(seed)
+
+    if algo == "ddp":
+        ar = 2 * (M - 1) / M * hw.model_bytes / hw.allreduce_bandwidth
+        iter_time = (F + B).max() + ar
+        total = iters * iter_time
+        comp = iters * (F + B).mean()
+        return SimResult(total, comp, comp / total, _mfu(hw, comp, total),
+                         np.full(iters, iter_time))
+
+    if algo in ("localsgd", "slowmo"):
+        ar = 2 * (M - 1) / M * hw.model_bytes / hw.allreduce_bandwidth
+        n_sync = iters // sync_every
+        # between syncs workers run freely; every sync waits for the slowest
+        block = sync_every * (F + B).max() + ar
+        total = n_sync * block + (iters - n_sync * sync_every) * (F + B).max()
+        comp = iters * (F + B).mean()
+        return SimResult(total, comp, comp / total, _mfu(hw, comp, total))
+
+    if algo == "co2":
+        # same barriers, but the all-reduce is overlapped with the next block
+        block_comm = 2 * (M - 1) / M * hw.model_bytes / hw.allreduce_bandwidth
+        n_sync = iters // sync_every
+        block_compute = sync_every * (F + B).max()
+        block = max(block_compute, block_comm)  # hidden unless comm-bound
+        total = n_sync * block + (iters - n_sync * sync_every) * (F + B).max()
+        comp = iters * (F + B).mean()
+        return SimResult(total, comp, comp / total, _mfu(hw, comp, total))
+
+    if algo in ("gosgd", "layup", "layup-block", "adpsgd"):
+        send_t = hw.model_bytes / hw.bandwidth
+        clock = np.zeros(M)          # worker-ready time
+        nic_free = np.zeros(M)       # sender NIC availability
+        busy = np.zeros(M)
+        it_times = np.zeros(iters)
+        for k in range(iters):
+            start = clock.copy()
+            if algo == "adpsgd":
+                # rendezvous: random matching; pair advances together, 2x volume
+                perm = rng.permutation(M)
+                end = start + F + B
+                for a in range(0, M - 1, 2):
+                    i, j = perm[a], perm[a + 1]
+                    t = max(end[i], end[j]) + 2 * send_t
+                    end[i] = end[j] = t
+                busy += F + B
+                clock = end
+            else:
+                comp_end = start + F + B
+                if algo == "layup":
+                    # layer-wise: message enters the NIC as each layer's grad
+                    # is ready; the NIC drains P bytes starting after the
+                    # first layer's gradient (fwd + bwd/L into the iteration)
+                    first_grad = start + F + B / hw.num_layers
+                    nic_done = np.maximum(nic_free, first_grad) + send_t
+                else:  # gosgd / layup-block: whole model sent after bwd
+                    nic_done = np.maximum(nic_free, comp_end) + send_t
+                nic_free = nic_done
+                # next iteration may start when compute is done AND the NIC
+                # backlog is < one message (otherwise buffering would grow)
+                clock = np.maximum(comp_end, nic_done - send_t)
+                busy += F + B
+            it_times[k] = clock.max() - start.max()
+        # async methods finish when the collective work target is met; the
+        # slow worker contributes fewer iterations (others are never blocked,
+        # except AD-PSGD rendezvous). Completion = median worker timeline.
+        if algo == "adpsgd":
+            total = clock.max()
+        else:
+            total = np.median(clock)
+        comp = busy.mean()
+        return SimResult(total, comp, comp / min(total if total > 0 else 1, clock.max()),
+                         _mfu(hw, comp, total), it_times)
+
+    raise ValueError(f"unknown algo {algo}")
+
+
+def straggler_sweep(algos, *, M: int, iters: int, hw: HardwareModel,
+                    delays=(0, 1, 2, 4, 8), seed: int = 0) -> Dict[str, list]:
+    """Paper Fig. 3B: training time as a function of straggler delay."""
+    out: Dict[str, list] = {a: [] for a in algos}
+    for d in delays:
+        dl = np.zeros(M)
+        dl[0] = d
+        for a in algos:
+            out[a].append(simulate(a, M=M, iters=iters, hw=hw,
+                                   straggler_delays=dl, seed=seed).total_time)
+    return out

@@ -1,0 +1,64 @@
+"""SlowMo baseline (Wang et al.): Local SGD + slow outer momentum.
+
+Every ``sync_every`` steps: x̄ ← mean(x); u ← β·u + (z − x̄)/η_out;
+z ← z − η_out·u; all replicas reset to z. Needs an extra model-sized buffer
+(z and u) — one of the memory costs the paper contrasts LayUp against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import DistAlgorithm, register_algorithm
+
+
+class SlowMo(DistAlgorithm):
+    asynchronous = False
+
+    def __init__(self, sync_every: int = 8, outer_lr: float = 1.0,
+                 outer_beta: float = 0.5, name: str = "slowmo"):
+        self.H = sync_every
+        self.outer_lr = outer_lr
+        self.outer_beta = outer_beta
+        self.name = name
+
+    def init_extras(self, params, M: int):
+        single = jax.tree.map(lambda p: p[0], params)
+        return {"z": single, "u": jax.tree.map(jnp.zeros_like, single)}
+
+    def _outer(self, new_params, extras):
+        """One outer step from the current average. Returns (params, extras)."""
+        xavg = jax.tree.map(
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), new_params)
+        u = jax.tree.map(
+            lambda uu, z, xa: self.outer_beta * uu.astype(jnp.float32)
+            + (z.astype(jnp.float32) - xa) / self.outer_lr,
+            extras["u"], extras["z"], xavg)
+        z = jax.tree.map(
+            lambda zz, uu: zz.astype(jnp.float32) - self.outer_lr * uu,
+            extras["z"], u)
+        return z, u
+
+    def post(self, params, weights, extras, updates, active, rng, step):
+        new_params = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params, updates)
+        sync = (jnp.mod(step + 1, self.H) == 0)
+        z_new, u_new = self._outer(new_params, extras)
+
+        def sel(a, b):
+            return jnp.where(sync, a.astype(jnp.float32),
+                             b.astype(jnp.float32)).astype(b.dtype)
+
+        z = jax.tree.map(sel, z_new, extras["z"])
+        u = jax.tree.map(sel, u_new, extras["u"])
+        out = jax.tree.map(
+            lambda p, zz: jnp.where(
+                sync, jnp.broadcast_to(zz[None].astype(jnp.float32), p.shape),
+                p.astype(jnp.float32)).astype(p.dtype),
+            new_params, z)
+        return out, weights, {"z": z, "u": u}, {"synced": sync.astype(jnp.float32)}
+
+
+@register_algorithm("slowmo")
+def _slowmo(sync_every: int = 8, outer_lr: float = 1.0, outer_beta: float = 0.5):
+    return SlowMo(sync_every, outer_lr, outer_beta)

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    SyntheticLM, SyntheticVision, make_worker_batches, lm_batch_for,
+)
+from repro.data.pipeline import ShardedIterator
+
+__all__ = ["SyntheticLM", "SyntheticVision", "make_worker_batches",
+           "lm_batch_for", "ShardedIterator"]

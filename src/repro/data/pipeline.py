@@ -1,0 +1,63 @@
+"""Sharded, prefetching data iterator.
+
+Host-side pipeline: a background thread produces per-worker numpy batches
+(deterministic per (epoch, step, worker)), the main thread uploads them.
+On a real multi-host TPU deployment each process would materialize only its
+addressable shard (``jax.process_index()``-sliced); here that is a single
+host, and the stacked (M, ...) leading axis is the gossip-worker axis.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import make_worker_batches
+
+
+class ShardedIterator:
+    def __init__(self, dataset, num_workers: int, batch_per_worker: int,
+                 *, prefetch: int = 2, seed: int = 0, sharding=None):
+        self.dataset = dataset
+        self.num_workers = num_workers
+        self.batch_per_worker = batch_per_worker
+        self.seed = seed
+        self.sharding = sharding
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = 0
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _producer(self):
+        step = 0
+        while not self._stop.is_set():
+            batch = make_worker_batches(self.dataset, self.num_workers,
+                                        self.batch_per_worker, step,
+                                        epoch_seed=self.seed)
+            try:
+                self._q.put(batch, timeout=1.0)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        batch = None
+        while batch is None and not self._stop.is_set():
+            try:
+                batch = self._q.get(timeout=5.0)
+            except queue.Empty:
+                raise StopIteration
+        if self.sharding is not None:
+            return jax.tree.map(
+                lambda x: jax.device_put(x, self.sharding), batch)
+        return jax.tree.map(jax.numpy.asarray, batch)
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,3 @@
+from repro.kernels.ops import flash_attention, gossip_mix, rmsnorm, ssd_scan
+
+__all__ = ["flash_attention", "gossip_mix", "rmsnorm", "ssd_scan"]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for LayUp's fused push-sum mix + local update.
+
+The paper's inner-loop op (Alg. 1), applied per layer:
+
+    x_new = α·x + β·x_recv + upd        α = w/(w+w'), β = w'/(w+w')
+
+Fusing the three reads + one write into a single pass halves HBM traffic for
+the update path versus separate mix and apply ops (the op is purely
+memory-bound: 3 reads + 1 write per element). 1-D grid over (8·TILE,128)
+tiles of the flattened parameter; α/β prefetched as scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+SUBLANE = 8
+
+
+def _mix_kernel(ab_ref, x_ref, r_ref, u_ref, o_ref):
+    a = ab_ref[0]
+    b = ab_ref[1]
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (a * x + b * r + u).astype(o_ref.dtype)
+
+
+def gossip_mix(x, x_recv, upd, alpha, beta, *, tile_rows: int = 256,
+               interpret: bool = False):
+    """Flat fused mix+update on one parameter leaf (any shape)."""
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    cols = LANE
+    rows_total = -(-n // cols)
+    rows_total = -(-rows_total // SUBLANE) * SUBLANE
+    tile = min(tile_rows, rows_total)
+    # pad rows to a tile multiple
+    ntiles = -(-rows_total // tile)
+    rows = ntiles * tile
+    padded = rows * cols
+
+    def flat(a):
+        a = a.reshape(-1)
+        return jnp.pad(a, (0, padded - n)).reshape(rows, cols)
+
+    ab = jnp.stack([jnp.asarray(alpha, jnp.float32),
+                    jnp.asarray(beta, jnp.float32)])
+
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), dtype),
+        interpret=interpret,
+    )(ab, flat(x), flat(x_recv), flat(upd))
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def gossip_mix_tree(params, recv, updates, alpha, beta, *,
+                    interpret: bool = False):
+    """Apply the fused op leaf-wise (per layer group — the paper's
+    layer-wise granularity)."""
+    return jax.tree.map(
+        lambda x, r, u: gossip_mix(x, r, u, alpha, beta, interpret=interpret),
+        params, recv, updates)

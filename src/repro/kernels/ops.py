@@ -1,0 +1,54 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on real
+TPU, so the same call sites work in both environments. Models default to
+the pure-jnp paths (XLA fuses those well and interpret-mode Pallas is slow
+on CPU); pass ``use_pallas=True`` at the call sites that support it to run
+the kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gossip_mix import gossip_mix as _gossip, gossip_mix_tree
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix(x, x_recv, upd, alpha, beta, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gossip(x, x_recv, upd, alpha, beta, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("eps", "tile_rows", "interpret"))
+def rmsnorm(x, gamma, *, eps=1e-5, tile_rows=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rmsnorm(x, gamma, eps=eps, tile_rows=tile_rows,
+                    interpret=interpret)
+
+
+__all__ = ["flash_attention", "ssd_scan", "gossip_mix", "gossip_mix_tree",
+           "rmsnorm"]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-for-shape references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d). Naive softmax attention."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    qh = q.reshape(B, Hkv, G, Sq, d).astype(jnp.float32) * d ** -0.5
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh, k.astype(jnp.float32))
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, d).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence. x: (B, H, S, P); dt: (B, H, S); A: (H,);
+    Bm/Cm: (B, S, N) → y: (B, H, S, P)."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    state = jnp.zeros((B, H, N, P), jnp.float32)
+    ys = []
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    for t in range(S):
+        dA = jnp.exp(dtf[:, :, t] * A[None, :])  # (B, H)
+        upd = jnp.einsum("bn,bhp->bhnp", Bf[:, t],
+                         dtf[:, :, t][..., None] * xf[:, :, t])
+        state = state * dA[:, :, None, None] + upd
+        ys.append(jnp.einsum("bn,bhnp->bhp", Cf[:, t], state))
+    return jnp.stack(ys, axis=2).astype(x.dtype)
+
+
+def gossip_mix_ref(x, x_recv, upd, alpha, beta):
+    return (alpha * x.astype(jnp.float32) + beta * x_recv.astype(jnp.float32)
+            + upd.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, gamma, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * gamma.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: fused RMSNorm (single HBM pass, f32 statistics).
+
+Grid over row tiles of the flattened (rows, d_model) view; each program
+reads its tile once, computes the f32 mean-square per row on-chip and
+writes the normalized tile — versus the unfused jnp path which materializes
+an f32 upcast of the input. Validated in interpret mode vs
+``repro.kernels.ref.rmsnorm_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)           # (rows_tile, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x * inv * g_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-5, tile_rows: int = 256,
+            interpret: bool = False):
+    """x: (..., d); gamma: (d,) → same shape/dtype as x."""
+    shape, dtype = x.shape, x.dtype
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    tile = min(tile_rows, rows)
+    ntiles = -(-rows // tile)
+    pad = ntiles * tile - rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntiles * tile, d), dtype),
+        interpret=interpret,
+    )(x2, gamma)
+    return out[:rows].reshape(shape)

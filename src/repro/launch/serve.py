@@ -1,0 +1,129 @@
+"""Batched serving loop: slot-based continuous batching over the decode step.
+
+A fixed decode batch of ``num_slots`` sequences; requests are admitted into
+free slots, each slot decodes with its own position counter (the decode step
+takes per-sequence positions), and finished sequences (EOS / max-tokens)
+free their slot immediately for the next queued request — the standard
+continuous-batching pattern. The inner step is exactly the serve_step the
+decode_32k/long_500k dry-runs lower (one token × full cache), so the same
+loop drives ``make_decode_step`` on the production mesh.
+
+Prompts are consumed through the decode path one token at a time
+("prefill-by-decode"), which works uniformly for every architecture family
+(attention caches, SSM states, hybrids).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                # next cache position to write
+    cursor: int = 0             # prompt tokens consumed
+    last_tok: int = 0           # last generated token (decode phase)
+
+
+class ServeLoop:
+    def __init__(self, model, params, *, num_slots: int = 4,
+                 max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.queue: List[Request] = []
+        self.steps_run = 0
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            model.cache_specs(num_slots, max_len))
+        self._step = jax.jit(model.decode_fn, donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # -- internals -------------------------------------------------------------
+    def _reset_slot(self, i: int):
+        """Zero a slot's cache entries (SSM states carry across sequences;
+        attention slots are position-masked but cleared for hygiene)."""
+        self.cache = jax.tree.map(
+            lambda c: c.at[:, i].set(jnp.zeros_like(c[:, i])), self.cache)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s.req is None and self.queue:
+                s.req = self.queue.pop(0)
+                s.pos = s.cursor = 0
+                s.last_tok = 0
+                self._reset_slot(i)
+
+    def _feed_tokens(self) -> np.ndarray:
+        toks = np.zeros(self.num_slots, np.int32)
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            if s.cursor < len(s.req.prompt):
+                toks[i] = int(s.req.prompt[s.cursor])
+            else:
+                toks[i] = s.last_tok
+        return toks
+
+    def _advance(self, logits):
+        greedy = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        for i, s in enumerate(self.slots):
+            r = s.req
+            if r is None:
+                continue
+            in_prompt = s.cursor < len(r.prompt)
+            if in_prompt:
+                s.cursor += 1
+            # once the LAST prompt token has been fed, every step emits a
+            # generated token
+            if not in_prompt or s.cursor == len(r.prompt):
+                s.last_tok = int(greedy[i])
+                r.output.append(s.last_tok)
+            s.pos += 1
+            if (len(r.output) >= r.max_new_tokens
+                    or (r.eos_id is not None and r.output
+                        and r.output[-1] == r.eos_id)
+                    or s.pos >= self.max_len):
+                r.done = True
+                s.req = None  # free the slot (cache slots position-masked)
+
+    # -- public API --------------------------------------------------------------
+    def run(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            self._admit()
+            if all(s.req is None for s in self.slots) and not self.queue:
+                break
+            toks = self._feed_tokens()
+            positions = jnp.asarray([s.pos for s in self.slots], jnp.int32)
+            logits, self.cache = self._step(
+                self.params, self.cache, jnp.asarray(toks)[:, None],
+                positions)
+            self._advance(logits)
+            self.steps_run += 1
+
+    def serve(self, requests: List[Request],
+              max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Submit all requests, run to completion, return uid → tokens."""
+        for r in requests:
+            self.submit(r)
+        self.run(max_steps)
+        return {r.uid: r.output for r in requests}

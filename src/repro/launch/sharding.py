@@ -1,0 +1,212 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Model code declares *logical* axes on every parameter (see
+repro.models.layers.ParamSpec); this module maps them onto the production
+mesh. The default rules implement:
+
+  * tensor parallelism over 'model' (heads / ffn / experts / inner / vocab)
+  * replica ("worker") stacking over ('pod','data') for LayUp's per-worker
+    parameters; batch over the same axes
+  * everything else replicated
+
+Rules are a plain dict so per-architecture overrides (used by the §Perf
+hillclimbs, e.g. shard kv-heads None for GQA archs where kv < model axis)
+are one-line changes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: Dict[str, Any] = {
+    "worker": ("pod", "data"),
+    "batch": ("pod", "data"),
+    "heads": "model",
+    "kv": "model",
+    "ffn": "model",
+    "experts": "model",
+    "inner": "model",
+    "vocab": "model",
+    "embed": None,
+    "hd": None,
+    "layers": None,
+    "state": None,
+}
+
+# ('data','expert','tp') mesh: expert parallelism for MoE + kv-head sharding
+# for GQA(kv=8) + 2-way TP — the §Perf mesh-factorization optimization.
+EP_RULES: Dict[str, Any] = {
+    "worker": ("pod", "data"),
+    "batch": ("pod", "data"),
+    "heads": ("expert", "tp"),
+    "kv": "expert",
+    "ffn": "tp",
+    "experts": "expert",
+    "inner": ("expert", "tp"),
+    "vocab": ("expert", "tp"),
+    "embed": None,
+    "hd": None,
+    "layers": None,
+    "state": None,
+}
+
+# FSDP preset for the 2D mesh: parameters sharded along d_model, activations
+# batch-sharded over 'model' too (set transformer.ACTIVATION_PSPEC) — weight
+# all-gathers replace activation all-reduces (§Perf, dense train shapes).
+FSDP_RULES: Dict[str, Any] = {
+    "worker": ("pod", "data"),
+    "batch": ("pod", "data"),
+    "embed": "model",
+    "heads": None,
+    "kv": None,
+    "ffn": None,
+    "experts": None,
+    "inner": None,
+    "vocab": None,
+    "hd": None,
+    "layers": None,
+    "state": None,
+}
+
+PRESETS = {"megatron": DEFAULT_RULES, "ep": EP_RULES, "fsdp": FSDP_RULES}
+
+
+def rules_for(mesh, overrides: Optional[Dict[str, Any]] = None,
+              preset: Optional[str] = None) -> Dict[str, Any]:
+    if preset is None:
+        preset = "ep" if "expert" in mesh.axis_names else "megatron"
+    rules = dict(PRESETS[preset])
+    names = set(mesh.axis_names)
+    # restrict to axes that exist on this mesh (e.g. no 'pod' single-pod)
+    for k, v in list(rules.items()):
+        if isinstance(v, tuple):
+            v = tuple(a for a in v if a in names)
+            rules[k] = v if v else None
+        elif v is not None and v not in names:
+            rules[k] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _axis_size(mesh, m) -> int:
+    axes = m if isinstance(m, tuple) else (m,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], rules: Dict[str, Any],
+                  mesh, shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Logical axes → PartitionSpec with two safety rails:
+
+    * jit argument shardings must divide evenly — non-divisible dims fall
+      back to replication (recorded per-arch in the roofline notes, e.g.
+      whisper's 20 heads on a 16-way model axis);
+    * each mesh axis may appear once per spec — duplicates (MoE experts AND
+      ffn both → 'model') keep the first occurrence.
+    """
+    parts = []
+    used = set()
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        if m is not None:
+            maxes = m if isinstance(m, tuple) else (m,)
+            if any(x in used for x in maxes):
+                m = None
+            elif shape is not None and shape[i] % _axis_size(mesh, m) != 0:
+                m = None
+            else:
+                used.update(maxes)
+        parts.append(m)
+    return P(*parts)
+
+
+def param_shardings(model, mesh, *, stacked_workers: int = 0,
+                    overrides: Optional[Dict[str, Any]] = None,
+                    preset: Optional[str] = None):
+    """NamedSharding tree for the model params (optionally worker-stacked)."""
+    from repro.models.layers import is_spec
+    rules = rules_for(mesh, overrides, preset)
+
+    def to_sharding(spec):
+        axes = tuple(spec.axes)
+        shape = tuple(spec.shape)
+        if stacked_workers:
+            axes = ("worker",) + axes
+            shape = (stacked_workers,) + shape
+        return NamedSharding(mesh, spec_for_axes(axes, rules, mesh, shape))
+
+    return jax.tree.map(to_sharding, model.specs, is_leaf=is_spec)
+
+
+def batch_shardings(batch_specs, mesh, *, stacked_workers: bool = False,
+                    overrides: Optional[Dict[str, Any]] = None,
+                    preset: Optional[str] = None):
+    """Shard data batches: leading batch dim over ('pod','data').
+
+    With stacked_workers the leading axis is the worker axis instead (used
+    by the shard_map path, where each worker sees its own sub-batch)."""
+    rules = rules_for(mesh, overrides, preset)
+    first = rules["batch"]
+
+    def safe(dim):
+        if first is None or dim % _axis_size(mesh, first) != 0:
+            return None  # e.g. long_500k batch=1: replicate over data
+        return first
+
+    def to_sharding(s):
+        ndim = len(s.shape)
+        if s.shape and s.shape[0] == 3 and ndim == 3:  # mrope (3, B, S)
+            return NamedSharding(mesh, P(None, safe(s.shape[1]),
+                                         *(None,) * (ndim - 2)))
+        return NamedSharding(mesh, P(safe(s.shape[0]), *(None,) * (ndim - 1)))
+
+    return jax.tree.map(to_sharding, batch_specs)
+
+
+def cache_shardings(cache_specs, mesh, cfg,
+                    overrides: Optional[Dict[str, Any]] = None,
+                    preset: Optional[str] = None):
+    """KV caches: (layers, B, S, kv_heads, hd) → batch over data, kv heads
+    over the model axes; SSM states likewise on the SSM-head dim."""
+    rules = rules_for(mesh, overrides, preset)
+    db = rules["batch"]
+    tp = rules["kv"]
+    hdr = rules.get("hd")
+    ssm_tp = rules["inner"]
+
+    def safe(axis, dim):
+        if axis is None or dim % _axis_size(mesh, axis) != 0:
+            return None
+        return axis
+
+    def to_sharding(path, s):
+        key = jax.tree_util.keystr(path)
+        nd = len(s.shape)
+        if "state" in key:      # (L, B, H, N, P) ssm state: heads → model
+            return NamedSharding(mesh, P(None, safe(db, s.shape[1]),
+                                         safe(ssm_tp, s.shape[2]), None,
+                                         None))
+        if "conv_tail" in key:  # (L, B, K-1, conv_dim): channels → model
+            return NamedSharding(mesh, P(None, safe(db, s.shape[1]), None,
+                                         safe(ssm_tp, s.shape[3])))
+        if nd == 5:             # (L, B, S, Hkv, hd) attention cache
+            used_tp = safe(tp, s.shape[3])
+            hd_spec = safe(hdr, s.shape[4])
+            if hd_spec is not None and used_tp is not None:
+                a1 = set(used_tp if isinstance(used_tp, tuple) else (used_tp,))
+                a2 = set(hd_spec if isinstance(hd_spec, tuple) else (hd_spec,))
+                if a1 & a2:
+                    hd_spec = None
+            return NamedSharding(mesh, P(None, safe(db, s.shape[1]), None,
+                                         used_tp, hd_spec))
+        if nd == 3:
+            return NamedSharding(mesh, P(None, safe(db, s.shape[1]), None))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(to_sharding, cache_specs)

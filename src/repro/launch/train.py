@@ -1,0 +1,348 @@
+"""Production-backend step builders (pjit / shard_map on the real mesh).
+
+Two distribution strategies, mirroring the paper's comparison:
+
+* **DDP** (baseline): parameters replicated over the ('pod','data') axes,
+  tensor-parallel over 'model'. Plain ``jax.jit``: GSPMD inserts the gradient
+  all-reduce (2·P·(M−1)/M wire bytes — the synchronization the paper removes).
+
+* **LayUp** (the paper): every data-parallel replica owns a distinct copy of
+  the parameters (stacked leading worker axis, sharded over ('pod','data')).
+  ``shard_map`` is *manual* over the worker axes and **auto (GSPMD) over
+  'model'**, so tensor parallelism composes transparently ("orthogonal to
+  model/tensor/pipeline parallelism", paper §1). Gossip is a
+  ``collective_permute`` ring shift over the worker axes — the TPU-native
+  realization of random-peer gossip (each hop is an ICI-neighbour hop; the
+  shift is drawn per step from a static power-of-two set via ``lax.switch``,
+  i.e. hypercube gossip — see DESIGN.md §2). Push-sum weights ride along as
+  a per-worker scalar. Collectives are issued **per pytree leaf** = per
+  layer-group: the HLO counterpart of the paper's layer-wise updates.
+
+Serving: ``make_prefill_step`` / ``make_decode_step`` build the inference
+paths (params replicated over data axes, TP over 'model'; decode donates the
+KV cache).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, input_specs
+from repro.launch import sharding as SH
+from repro.launch.mesh import data_axes, num_workers
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+@dataclass
+class ProdStep:
+    """A lowered-able step: ``fn`` jitted with shardings, plus abstract args."""
+    fn: Any
+    abstract_args: Tuple[Any, ...]
+    describe: str = ""
+
+    def lower(self):
+        return self.fn.lower(*self.abstract_args)
+
+
+def _abstract_batch(cfg: ModelConfig, shape: ShapeConfig, dtype=None):
+    return input_specs(cfg, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# DDP train step (baseline)
+# ---------------------------------------------------------------------------
+
+
+def make_ddp_train_step(model: Model, mesh, optimizer: Optimizer,
+                        schedule: Callable, shape: ShapeConfig,
+                        overrides: Optional[Dict[str, Any]] = None,
+                        preset: Optional[str] = None) -> ProdStep:
+    cfg = model.cfg
+
+    def step(params, opt_state, batch, step_idx):
+        (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch)
+        lr = schedule(step_idx)
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    p_sh = SH.param_shardings(model, mesh, overrides=overrides,
+                              preset=preset)
+    abstract_params = model.abstract_params()
+    abstract_opt = jax.eval_shape(optimizer.init, abstract_params)
+    opt_sh = _opt_shardings(optimizer, abstract_params, p_sh, mesh)
+    batch_abs = _abstract_batch(cfg, shape)
+    b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
+                              preset=preset)
+    scalar = NamedSharding(mesh, P())
+    fn = jax.jit(step,
+                 in_shardings=(p_sh, opt_sh, b_sh, scalar),
+                 out_shardings=(p_sh, opt_sh, scalar),
+                 donate_argnums=(0, 1))
+    abstract = (abstract_params, abstract_opt, batch_abs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return ProdStep(fn, abstract, "ddp train")
+
+
+def _opt_shardings(optimizer, abstract_params, p_sh, mesh):
+    """Optimizer-state shardings: leaves that mirror a param shape get that
+    param's sharding; scalars are replicated."""
+    abstract_opt = jax.eval_shape(optimizer.init, abstract_params)
+    flat_p = {l.shape: s for l, s in zip(jax.tree.leaves(abstract_params),
+                                         jax.tree.leaves(p_sh))}
+
+    def pick(leaf):
+        if leaf.shape in flat_p:
+            return flat_p[leaf.shape]
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree.map(pick, abstract_opt)
+
+
+# ---------------------------------------------------------------------------
+# LayUp train step (the paper, production form)
+# ---------------------------------------------------------------------------
+
+
+def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
+                          schedule: Callable, shape: ShapeConfig,
+                          shifts: Sequence[int] = (1, 2, 4, 8),
+                          overrides: Optional[Dict[str, Any]] = None,
+                          preset: Optional[str] = None,
+                          accum_steps: int = 1,
+                          constrain_grads: bool = False) -> ProdStep:
+    cfg = model.cfg
+    worker_axes = data_axes(mesh)
+    # per-leaf model-axis specs (worker prefix stripped) — used to pin the
+    # gradients to the parameter sharding so GSPMD reduce-scatters instead
+    # of all-reduce+slice (§Perf iteration A3)
+    rules_g = SH.rules_for(mesh, overrides, preset)
+    from repro.models.layers import is_spec
+    grad_specs = jax.tree.map(
+        lambda sp: SH.spec_for_axes(tuple(sp.axes), rules_g, mesh,
+                                    tuple(sp.shape)),
+        model.specs, is_leaf=is_spec)
+    ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    M = num_workers(mesh)
+    shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
+
+    def gossip_mix(tree, w, shift_idx):
+        """Push-sum ring-shift gossip: every worker sends to i+s and receives
+        from i−s. Per-leaf collectives = layer-wise messages."""
+
+        def branch(s):
+            perm = [(i, (i + s) % M) for i in range(M)]
+
+            def run(args):
+                tree, w_half = args
+                recv = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, ax, perm), tree)
+                rw = jax.lax.ppermute(w_half, ax, perm)
+                return recv, rw
+
+            return run
+
+        w_half = w * 0.5
+        recv, rw = jax.lax.switch(shift_idx, [branch(s) for s in shifts],
+                                  (tree, w_half))
+        new_w = w_half + rw
+        mixed = jax.tree.map(
+            lambda mine, theirs: ((w_half * mine.astype(jnp.float32)
+                                   + rw * theirs.astype(jnp.float32))
+                                  / new_w).astype(mine.dtype),
+            tree, recv)
+        return mixed, new_w
+
+    def worker_fn(params_st, opt_st, w_st, batch, step_idx, shift_idx):
+        params = jax.tree.map(lambda x: x[0], params_st)
+        opt_state = jax.tree.map(
+            lambda x: x[0] if x.ndim >= 1 else x, opt_st)
+        w = w_st[0]
+        if accum_steps > 1:
+            # microbatched gradient accumulation (§Perf memory lever):
+            # activation footprint scales with the microbatch, not the
+            # worker batch
+            def micro(b):
+                return jax.value_and_grad(model.loss_fn, has_aux=True)(
+                    params, b)
+
+            mb = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, b):
+                (l, _), g = micro(b)
+                return jax.tree.map(lambda a, x: a + x, carry,
+                                    {"l": l, "g": g}), ()
+
+            zero = {"l": jnp.zeros((), jnp.float32),
+                    "g": jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+            tot, _ = jax.lax.scan(acc_body, zero, mb)
+            loss = tot["l"] / accum_steps
+            grads = jax.tree.map(lambda g, p: (g / accum_steps).astype(p.dtype),
+                                 tot["g"], params)
+        else:
+            (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+                params, batch)
+        if constrain_grads:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_specs)
+        lr = schedule(step_idx)
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        params, w = gossip_mix(params, w, shift_idx)
+        loss = jax.lax.pmean(loss, worker_axes)
+        restack = lambda t: jax.tree.map(lambda x: x[None], t)
+        return (restack(params), restack(opt_state), w[None], loss)
+
+    pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
+    abstract_params = model.abstract_params()
+    stacked_params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((M,) + s.shape, s.dtype),
+        abstract_params)
+    abstract_opt_single = jax.eval_shape(optimizer.init, abstract_params)
+    stacked_opt = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((M,) + s.shape, s.dtype),
+        abstract_opt_single)
+    opt_specs = jax.tree.map(lambda _: pw, abstract_opt_single)
+
+    def batch_pspec(s):
+        # M-RoPE positions are (3, B, S): worker axis is dim 1
+        if len(s.shape) == 3 and s.shape[0] == 3 and s.dtype == jnp.int32:
+            return P(None, worker_axes if len(worker_axes) > 1 else worker_axes[0])
+        return pw
+
+    batch_specs_sm = jax.tree.map(batch_pspec, _abstract_batch(cfg, shape))
+    fn_sm = shard_map(
+        worker_fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: pw, abstract_params), opt_specs,
+                  pw, batch_specs_sm, P(), P()),
+        out_specs=(jax.tree.map(lambda _: pw, abstract_params), opt_specs,
+                   pw, P()),
+        check_vma=False, axis_names=set(worker_axes))
+
+    # model-axis sharding flows in through jit in_shardings (auto axis)
+    p_sh = SH.param_shardings(model, mesh, stacked_workers=M,
+                              overrides=overrides, preset=preset)
+    opt_sh = _opt_shardings_stacked(abstract_opt_single, abstract_params,
+                                    p_sh, mesh, M)
+    batch_abs = _abstract_batch(cfg, shape)
+    b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
+                              preset=preset)
+    w_sh = NamedSharding(mesh, pw)
+    scalar = NamedSharding(mesh, P())
+
+    fn = jax.jit(fn_sm,
+                 in_shardings=(p_sh, opt_sh, w_sh, b_sh, scalar, scalar),
+                 out_shardings=(p_sh, opt_sh, w_sh, scalar),
+                 donate_argnums=(0, 1, 2))
+    abstract = (stacked_params, stacked_opt,
+                jax.ShapeDtypeStruct((M,), jnp.float32), batch_abs,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return ProdStep(fn, abstract, f"layup train (M={M}, shifts={shifts})")
+
+
+def _opt_shardings_stacked(abstract_opt_single, abstract_params, p_sh, mesh, M):
+    flat_p = {l.shape: s.spec for l, s in zip(jax.tree.leaves(abstract_params),
+                                              jax.tree.leaves(p_sh))}
+    worker_part = jax.tree.leaves(p_sh)[0].spec[0]  # ('pod','data') part
+
+    def pick(leaf):
+        if leaf.shape in flat_p:
+            return NamedSharding(mesh, flat_p[leaf.shape])
+        return NamedSharding(mesh, P(worker_part,
+                                     *([None] * len(leaf.shape))))
+
+    return jax.tree.map(pick, abstract_opt_single)
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, mesh, shape: ShapeConfig,
+                      overrides: Optional[Dict[str, Any]] = None,
+                      preset: Optional[str] = None) -> ProdStep:
+    cfg = model.cfg
+
+    def step(params, batch):
+        cache, logits = model.prefill_fn(params, batch)
+        return cache, logits
+
+    p_sh = SH.param_shardings(model, mesh, overrides=overrides,
+                              preset=preset)
+    batch_abs = _abstract_batch(cfg, shape)
+    b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
+                              preset=preset)
+    fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+    return ProdStep(fn, (model.abstract_params(), batch_abs), "prefill")
+
+
+def make_decode_step(model: Model, mesh, shape: ShapeConfig,
+                     overrides: Optional[Dict[str, Any]] = None,
+                     preset: Optional[str] = None) -> ProdStep:
+    cfg = model.cfg
+    B = shape.global_batch
+
+    def step(params, cache, token, position):
+        logits, new_cache = model.decode_fn(params, cache, token, position)
+        return logits, new_cache
+
+    p_sh = SH.param_shardings(model, mesh, overrides=overrides,
+                              preset=preset)
+    cache_abs = model.cache_specs(B, shape.seq_len)
+    c_sh = SH.cache_shardings(cache_abs, mesh, cfg, overrides=overrides,
+                              preset=preset)
+    rules = SH.rules_for(mesh, overrides, preset)
+    db = rules["batch"]
+    if db is not None and B % SH._axis_size(mesh, db) != 0:
+        db = None  # e.g. long_500k batch=1: replicate over the data axes
+    tok_sh = NamedSharding(mesh, P(db, None))
+    pos_sh = NamedSharding(mesh, P(db))
+    fn = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                 donate_argnums=(1,))
+    abstract = (model.abstract_params(), cache_abs,
+                jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32))
+    return ProdStep(fn, abstract, "decode")
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
+              optimizer: Optional[Optimizer] = None,
+              schedule: Optional[Callable] = None,
+              overrides: Optional[Dict[str, Any]] = None,
+              shifts: Sequence[int] = (1, 2, 4, 8),
+              preset: Optional[str] = None,
+              accum_steps: int = 1,
+              constrain_grads: bool = False) -> ProdStep:
+    from repro.optim import momentum, constant
+    optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
+    schedule = schedule or constant(0.1)
+    if shape.kind == "train":
+        if algo == "ddp":
+            return make_ddp_train_step(model, mesh, optimizer, schedule,
+                                       shape, overrides, preset)
+        return make_layup_train_step(model, mesh, optimizer, schedule, shape,
+                                     shifts, overrides, preset, accum_steps,
+                                     constrain_grads)
+    if shape.kind == "prefill":
+        return make_prefill_step(model, mesh, shape, overrides, preset)
+    return make_decode_step(model, mesh, shape, overrides, preset)

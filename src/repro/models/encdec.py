@@ -1,0 +1,171 @@
+"""Whisper-style encoder–decoder transformer.
+
+The mel-spectrogram + conv frontend is a STUB per the brief: the encoder
+consumes precomputed frame embeddings (B, enc_seq, d_model) supplied by
+``input_specs``. Sinusoidal positions are added on both sides (whisper has
+no RoPE; ``rope_theta=0`` disables rotation in the shared attention code).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.layers import ParamSpec
+
+REMAT_POLICY = T.REMAT_POLICY
+
+
+def cross_attn_specs(cfg, prefix):
+    d = cfg.d_model
+    La = tuple("layers" for _ in prefix)
+    out = {"norm": ParamSpec(prefix + (d,), La + ("embed",), init="ones")}
+    out.update(L.attention_specs(cfg, prefix))
+    return out
+
+
+def encdec_specs(cfg) -> Dict[str, Any]:
+    ne, nd = cfg.enc_layers, cfg.num_layers
+    enc_block = {
+        "attn": T.attn_sublayer_specs(cfg, (ne,)),
+        "mlp": T.mlp_sublayer_specs(cfg, (ne,), use_moe=False),
+    }
+    dec_block = {
+        "attn": T.attn_sublayer_specs(cfg, (nd,)),
+        "cross": cross_attn_specs(cfg, (nd,)),
+        "mlp": T.mlp_sublayer_specs(cfg, (nd,), use_moe=False),
+    }
+    return {
+        "embed": L.embed_specs(cfg),
+        "enc_blocks": enc_block,
+        "enc_norm": L.rmsnorm_spec(cfg.d_model),
+        "dec_blocks": dec_block,
+        "dec_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def _cross_attn(p, h, enc_kv, cfg, *, positions, enc_positions, block_k):
+    """Full-sequence cross attention. enc_kv: (k, v) from encoder output."""
+    x = L.rmsnorm(h, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = enc_kv
+    out = L.flash_attention_jnp(q, k, v, q_positions=positions,
+                                k_positions=enc_positions, causal=False,
+                                window=0, block_k=block_k)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return h + o
+
+
+def encode(params, audio_embeds, cfg, *, block_k=512):
+    """audio_embeds: (B, enc_seq, d) stub-frontend output → encoder states."""
+    B, Se, d = audio_embeds.shape
+    h = audio_embeds + L.sinusoidal_positions(Se, d).astype(audio_embeds.dtype)
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def block(h, bp, dc, ic):
+        del dc
+        h = T.constrain_h(h)
+        h, _ = T.attn_sublayer(bp["attn"], h, cfg, positions=ic["positions"],
+                               causal=False, block_k=block_k)
+        h, _ = T.mlp_sublayer(bp["mlp"], h, cfg, use_moe=False)
+        return h, ()
+
+    wrapped = T.remat_block(block)
+    h, _ = T._scan(
+        lambda h, bp: wrapped(h, bp, {}, {"positions": positions}),
+        h, params["enc_blocks"])
+    return L.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, enc_h, tokens, cfg, *, block_k=1024):
+    """Teacher-forced decoder pass → logits (B, S, V)."""
+    B, S = tokens.shape
+    d = cfg.d_model
+    h = L.embed_apply(params["embed"], tokens)
+    h = h + L.sinusoidal_positions(S, d).astype(h.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    Se = enc_h.shape[1]
+    enc_positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def block(h, bp, dc, ic):
+        enc_h = T.constrain_h(dc["enc_h"])
+        h = T.constrain_h(h)
+        h, _ = T.attn_sublayer(bp["attn"], h, cfg, positions=ic["positions"],
+                               causal=True, window=cfg.sliding_window,
+                               block_k=block_k)
+        xk = jnp.einsum("bsd,dhk->bshk", enc_h, bp["cross"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", enc_h, bp["cross"]["wv"])
+        h = _cross_attn(bp["cross"], h, (xk, xv), cfg,
+                        positions=ic["positions"],
+                        enc_positions=ic["enc_positions"], block_k=block_k)
+        h, _ = T.mlp_sublayer(bp["mlp"], h, cfg, use_moe=False)
+        return h, ()
+
+    wrapped = T.remat_block(block)
+    h, _ = T._scan(
+        lambda h, bp: wrapped(h, bp, {"enc_h": enc_h},
+                              {"positions": positions,
+                               "enc_positions": enc_positions}),
+        h, params["dec_blocks"])
+    h = L.rmsnorm(h, params["dec_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], h, cfg.tie_embeddings)
+
+
+def decode_step(params, cache, token, position, cfg, *, window=0):
+    """One decoder token. cache: {"self": stacked kv, "cross": stacked kv}."""
+    B = token.shape[0]
+    h = L.embed_apply(params["embed"], token)  # (B, 1, d)
+    # sinusoidal position for the current index
+    d = cfg.d_model
+    pe = _sinusoid_at(position, d).astype(h.dtype)  # (B, d)
+    h = h + pe[:, None, :]
+
+    Se = cache["cross"]["k"].shape[2]
+    enc_positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def block(h, inp):
+        bp, self_cache, cross_kv = inp
+        h, new_self = T.attn_sublayer_decode(bp["attn"], h, cfg, self_cache,
+                                             position=position, window=window)
+        x = L.rmsnorm(h, bp["cross"]["norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, bp["cross"]["wq"])
+        out = L.decode_attention_jnp(q, cross_kv["k"], cross_kv["v"],
+                                     q_position=position,
+                                     k_positions=enc_positions,
+                                     causal=False)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, bp["cross"]["wo"])
+        h, _ = T.mlp_sublayer(bp["mlp"], h, cfg, use_moe=False)
+        return h, new_self
+
+    h, new_self = T._scan(block, h,
+                          (params["dec_blocks"], cache["self"],
+                           cache["cross"]))
+    h = L.rmsnorm(h, params["dec_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], h, cfg.tie_embeddings)
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def _sinusoid_at(position, d_model):
+    """position: (B,) → (B, d_model) sinusoidal embedding."""
+    import numpy as np
+    half = d_model // 2
+    freqs = jnp.asarray(
+        1.0 / np.power(10000.0, np.arange(half, dtype=np.float32) * 2 / d_model))
+    ang = position[:, None].astype(jnp.float32) * freqs[None, :]
+    out = jnp.zeros((position.shape[0], d_model), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+def encdec_cache_specs(cfg, B, seq_len, window, dtype=None):
+    dt = dtype or cfg.dtype
+    nd = cfg.num_layers
+    self_specs = T.attn_cache_specs(cfg, B, seq_len, window, (nd,), dt)
+    sh = (nd, B, cfg.enc_seq, cfg.num_kv_heads, cfg.head_dim)
+    cross = {"k": jax.ShapeDtypeStruct(sh, dt),
+             "v": jax.ShapeDtypeStruct(sh, dt)}
+    return {"self": self_specs, "cross": cross}

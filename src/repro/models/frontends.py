@@ -1,0 +1,40 @@
+"""STUB modality frontends (explicit carve-out, see DESIGN.md §6).
+
+The brief specifies that for [audio] and [vlm] architectures the modality
+frontend (mel-spectrogram + conv codec; ViT/SigLIP + projector) is a stub:
+``input_specs()`` supplies precomputed frame/patch embeddings of the right
+shape and the language/decoder transformer consumes them. These helpers
+produce *deterministic synthetic* embeddings for smoke tests and examples so
+end-to-end drivers run without a real codec.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synth_patch_embeddings(rng, batch, seq, d_model, dtype=jnp.float32):
+    """Stand-in for ViT patch embeddings mixed with text embeddings."""
+    return jax.random.normal(rng, (batch, seq, d_model), dtype) * 0.02
+
+
+def synth_mrope_positions(batch, seq, *, image_span=None):
+    """3-axis (t/h/w) M-RoPE ids. Text tokens advance all axes together;
+    an optional image span advances h/w over a fake grid."""
+    t = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+    h = t
+    w = t
+    if image_span is not None:
+        s, e, grid = image_span  # tokens [s, e) form a grid x grid image
+        idx = jnp.arange(seq)
+        in_img = (idx >= s) & (idx < e)
+        rel = jnp.clip(idx - s, 0, grid * grid - 1)
+        h = jnp.where(in_img[None], s + rel[None] // grid, h)
+        w = jnp.where(in_img[None], s + rel[None] % grid, w)
+        t = jnp.where(in_img[None], s, t)
+    return jnp.stack([t, h, w], axis=0).astype(jnp.int32)
+
+
+def synth_audio_frames(rng, batch, enc_seq, d_model, dtype=jnp.float32):
+    """Stand-in for whisper's mel+conv frontend output (B, 1500, d)."""
+    return jax.random.normal(rng, (batch, enc_seq, d_model), dtype) * 0.02

@@ -1,0 +1,207 @@
+"""Mamba2-style SSD (state-space duality) block — pure JAX.
+
+Chunked "dual form" for train/prefill (matmul-heavy → MXU-friendly on TPU),
+exact recurrence for single-token decode (O(1) state). The chunked form is
+also the reference for the Pallas `ssd_scan` kernel.
+
+Layout conventions:
+  x_ssm : (B, S, H, P)   heads H = d_inner / head_dim P
+  dt    : (B, S, H)      post-softplus step sizes
+  A     : (H,)           negative decay rates (-exp(A_log))
+  Bm/Cm : (B, S, N)      shared across heads (ngroups=1), N = ssm_state
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamSpec, rmsnorm
+
+
+def ssm_specs(cfg, prefix_layers: Tuple[int, ...] = ()):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    L = prefix_layers
+    La = tuple("layers" for _ in L)
+    conv_dim = di + 2 * n
+    return {
+        "in_proj_z": ParamSpec(L + (d, di), La + ("embed", "inner")),
+        "in_proj_x": ParamSpec(L + (d, di), La + ("embed", "inner")),
+        "in_proj_B": ParamSpec(L + (d, n), La + ("embed", None)),
+        "in_proj_C": ParamSpec(L + (d, n), La + ("embed", None)),
+        "in_proj_dt": ParamSpec(L + (d, h), La + ("embed", "inner")),
+        "dt_bias": ParamSpec(L + (h,), La + ("inner",), init="zeros"),
+        "conv_w": ParamSpec(L + (w, conv_dim), La + (None, "inner"),
+                            scale=1.0 / np.sqrt(w)),
+        "conv_b": ParamSpec(L + (conv_dim,), La + ("inner",), init="zeros"),
+        "A_log": ParamSpec(L + (h,), La + ("inner",), init="zeros"),
+        "D": ParamSpec(L + (h,), La + ("inner",), init="ones"),
+        "gate_norm": ParamSpec(L + (di,), La + ("inner",), init="ones"),
+        "out_proj": ParamSpec(L + (di, d), La + ("inner", "embed"),
+                              init="scaled",
+                              scale=0.02 / np.sqrt(max(2 * cfg.num_layers, 1))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk=128, init_state=None):
+    """Returns (y, final_state). final_state: (B, H, N, P)."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xs = x.reshape(b, nc, chunk, h, p)
+    dts = dt.reshape(b, nc, chunk, h)
+    Bs = Bm.reshape(b, nc, chunk, n)
+    Cs = Cm.reshape(b, nc, chunk, n)
+
+    dA = dts * A  # (b, nc, q, h) — negative
+    cum = jnp.cumsum(dA, axis=2)  # inclusive within-chunk cumsum
+
+    # ---- intra-chunk (dual / attention-like form) --------------------------
+    # decay from step j to step i (i >= j): exp(cum_i - cum_j)
+    Lmat = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (b,nc,i,j,h)
+    Lmat = jnp.where(
+        (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[None, None, :, :, None],
+        Lmat, 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cs, Bs,
+                    preferred_element_type=jnp.float32)  # (b,nc,i,j)
+    W = CB[..., None] * Lmat * dts[:, :, None, :, :]  # (b,nc,i,j,h)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W.astype(x.dtype), xs,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states -------------------------------------------------------
+    last = cum[:, :, -1:, :]  # (b,nc,1,h)
+    decay_to_end = jnp.exp(last - cum)  # (b,nc,q,h)
+    # S[b,c,h,n,p] = sum_j decay_j * dt_j * B_j ⊗ x_j
+    wts = (decay_to_end * dts).astype(x.dtype)
+    S = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", wts, Bs, xs,
+                   preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence over chunk states ---------------------------
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (b,nc,h) total decay per chunk
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(carry, inp):
+        S_c, dec = inp  # (b,h,n,p), (b,h)
+        new = carry * dec[:, :, None, None] + S_c
+        return new, carry  # emit state *entering* this chunk
+
+    S_sw = S.transpose(1, 0, 2, 3, 4)
+    dec_sw = chunk_decay.transpose(1, 0, 2)
+    final, entering = jax.lax.scan(body, h0, (S_sw, dec_sw))
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (b,nc,h,n,p)
+
+    # ---- inter-chunk contribution -------------------------------------------
+    decay_from_start = jnp.exp(cum)  # (b,nc,q,h) decay from chunk start to i
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cs, decay_from_start.astype(x.dtype),
+                         entering.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(b, l, h, p).astype(x.dtype)
+    return y, final.astype(x.dtype)
+
+
+def ssd_recurrent_step(state, x_t, dt_t, A, B_t, C_t):
+    """One decode step.  state: (B,H,N,P); x_t: (B,H,P); dt_t: (B,H);
+    B_t/C_t: (B,N). Returns (y_t, new_state)."""
+    dA = jnp.exp(dt_t * A)  # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", B_t, (dt_t[..., None] * x_t))
+    new = state * dA[:, :, None, None] + upd.astype(state.dtype)
+    y = jnp.einsum("bn,bhnp->bhp", C_t, new)
+    return y.astype(x_t.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def _conv_causal(xBC, w, b, tail=None):
+    """Depthwise causal conv, width K. xBC: (B, S, C); w: (K, C).
+    tail: (B, K-1, C) previous inputs (decode/prefill chaining)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    full = jnp.concatenate([tail, xBC], axis=1)  # (B, S+K-1, C)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    new_tail = full[:, -(K - 1):] if K > 1 else tail
+    return out + b, new_tail
+
+
+def ssm_block_apply(p, x, cfg, *, init_state=None, conv_tail=None,
+                    return_state=False, chunk=128):
+    """x: (B, S, d_model) → (B, S, d_model) [+ (state, conv_tail)]."""
+    B_, S, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = x @ p["in_proj_z"]
+    xBC = jnp.concatenate(
+        [x @ p["in_proj_x"], x @ p["in_proj_B"], x @ p["in_proj_C"]], axis=-1)
+    dt_raw = x @ p["in_proj_dt"] + p["dt_bias"]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+
+    xBC, new_tail = _conv_causal(xBC, p["conv_w"], p["conv_b"], conv_tail)
+    xBC = jax.nn.silu(xBC)
+    x_ssm = xBC[..., :di].reshape(B_, S, h, pd)
+    Bm = xBC[..., di:di + n]
+    Cm = xBC[..., di + n:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_chunked(x_ssm, dt, A, Bm, Cm, chunk=chunk,
+                           init_state=init_state)
+    y = y + p["D"][None, None, :, None] * x_ssm
+    y = y.reshape(B_, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (state, new_tail)
+    return out
+
+
+def ssm_block_decode(p, x, cfg, state, conv_tail):
+    """Single-token decode. x: (B, 1, d). Returns (out, (state, tail))."""
+    B_, _, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = x @ p["in_proj_z"]
+    xBC = jnp.concatenate(
+        [x @ p["in_proj_x"], x @ p["in_proj_B"], x @ p["in_proj_C"]], axis=-1)
+    dt_raw = x @ p["in_proj_dt"] + p["dt_bias"]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))[:, 0]  # (B, H)
+
+    xBC, new_tail = _conv_causal(xBC, p["conv_w"], p["conv_b"], conv_tail)
+    xBC = jax.nn.silu(xBC)[:, 0]  # (B, conv_dim)
+    x_t = xBC[..., :di].reshape(B_, h, pd)
+    B_t = xBC[..., di:di + n]
+    C_t = xBC[..., di + n:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_recurrent_step(state, x_t, dt, A, B_t, C_t)
+    y = y + p["D"][None, :, None] * x_t
+    y = y.reshape(B_, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (new_state, new_tail)
+
+
+def ssd_reference(x, dt, A, Bm, Cm, init_state=None):
+    """Oracle: step-by-step recurrence (slow, exact)."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    state = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(l):
+        y, state = ssd_recurrent_step(state, x[:, t], dt[:, t], A,
+                                      Bm[:, t], Cm[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(x.dtype), state.astype(x.dtype)

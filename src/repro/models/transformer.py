@@ -1,0 +1,383 @@
+"""Decoder-only transformer assembly: dense / MoE / SSM / hybrid / VLM.
+
+Layers are scanned (`jax.lax.scan` over stacked parameter leaves) with remat
+on the block body so 60-layer configs keep the HLO small and compile fast.
+The hybrid (jamba) family scans over *super-blocks* of ``attn_layer_period``
+sub-layers so the 1:7 mamba:attention interleave and the every-2nd-layer MoE
+pattern stay homogeneous across scan steps.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import ParamSpec
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+# When True, layer scans are fully unrolled. Used by the dry-run's small
+# (1- and 2-superblock) cost compiles: XLA cost_analysis counts a while-loop
+# body once regardless of trip count, so unrolled lowerings give the true
+# per-layer cost for the two-point fit (see launch/dryrun.py).
+UNROLL_SCANS = False
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=True if UNROLL_SCANS else 1)
+
+
+# Optional PartitionSpec for the (B_local, S, d_model) hidden states. Set by
+# the launcher for FSDP-style sharding (batch over the model axis → GSPMD
+# gathers weights instead of all-reducing activations). None = let GSPMD
+# propagate from the parameter shardings (baseline Megatron-TP behavior).
+ACTIVATION_PSPEC = None
+
+
+def constrain_h(h):
+    if ACTIVATION_PSPEC is not None:
+        h = jax.lax.with_sharding_constraint(h, ACTIVATION_PSPEC)
+    return h
+
+
+def remat_block(f):
+    """Manual checkpointing with explicit residual + cotangent dtypes.
+
+    ``jax.checkpoint`` + scan stacks f32 *copies* of the saved carries and
+    emits f32 per-layer parameter cotangents (12.9 GB extra on
+    stablelm-1.6b/train_4k). This wrapper pins residuals to exactly the
+    block inputs and casts cotangents back to the input dtypes inside the
+    loop, so the stacked buffers stay bf16.
+
+    ``f(h, p, dc, ic)``: ``dc`` = differentiable consts (e.g. encoder
+    states), ``ic`` = integer consts (positions — cotangent float0).
+    Consts must be passed explicitly (custom_vjp cannot close over tracers).
+    """
+
+    @jax.custom_vjp
+    def wrapped(h, p, dc, ic):
+        return f(h, p, dc, ic)
+
+    def fwd(h, p, dc, ic):
+        return f(h, p, dc, ic), (h, p, dc, ic)
+
+    def bwd(res, ct):
+        h, p, dc, ic = res
+        _, vjp = jax.vjp(lambda h_, p_, dc_: f(h_, p_, dc_, ic), h, p, dc)
+        dh, dp, ddc = vjp(ct)
+        cast = lambda t, like: jax.tree.map(
+            lambda x, y: x.astype(y.dtype), t, like)
+        ic_zeros = jax.tree.map(
+            lambda x: np.zeros(x.shape, jax.dtypes.float0), ic)
+        return cast(dh, h), cast(dp, p), cast(ddc, dc), ic_zeros
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# attention sub-layer
+# ---------------------------------------------------------------------------
+
+
+def attn_sublayer_specs(cfg, prefix):
+    d = cfg.d_model
+    La = tuple("layers" for _ in prefix)
+    out = {"norm": ParamSpec(prefix + (d,), La + ("embed",), init="ones")}
+    out.update(L.attention_specs(cfg, prefix))
+    return out
+
+
+def _project_qkv(p, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_qk(q, k, cfg, positions, mrope_pos):
+    if cfg.mrope and mrope_pos is not None:
+        return (L.apply_mrope(q, mrope_pos, theta=cfg.rope_theta),
+                L.apply_mrope(k, mrope_pos, theta=cfg.rope_theta))
+    return (L.apply_rope(q, positions, theta=cfg.rope_theta,
+                         fraction=cfg.rope_fraction),
+            L.apply_rope(k, positions, theta=cfg.rope_theta,
+                         fraction=cfg.rope_fraction))
+
+
+def attn_sublayer(p, h, cfg, *, positions, mrope_pos=None, window=0,
+                  causal=True, block_k=1024):
+    """Full-sequence attention (train / prefill). Returns (h', (k, v))."""
+    x = L.rmsnorm(h, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, cfg, positions, mrope_pos)
+    out = L.flash_attention_jnp(q, k, v, q_positions=positions,
+                                k_positions=positions, causal=causal,
+                                window=window, block_k=block_k)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return h + o, (k, v)
+
+
+def attn_sublayer_decode(p, h, cfg, cache, *, position, window=0):
+    """One-token attention against the KV cache (possibly ring-buffered).
+
+    cache: {"k": (B, Sc, Hkv, hd), "v": ...}; position: (B,).
+    """
+    B = h.shape[0]
+    Sc = cache["k"].shape[1]
+    x = L.rmsnorm(h, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, x, cfg)
+    pos_b = position[:, None]  # (B,1)
+    if cfg.mrope:
+        mp = jnp.broadcast_to(position[None, :, None], (3, B, 1))
+        q, k = _rope_qk(q, k, cfg, pos_b, mp)
+    else:
+        q, k = _rope_qk(q, k, cfg, pos_b, None)
+    slot = jnp.where(window > 0, position % Sc, jnp.minimum(position, Sc - 1))
+    kc = jax.vmap(lambda c, s, u: jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
+                  )(cache["k"], slot, k)
+    vc = jax.vmap(lambda c, s, u: jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
+                  )(cache["v"], slot, v)
+    if window > 0:
+        # ring buffer: slot i holds the largest pos' <= pos with pos' ≡ i (mod Sc)
+        idx = jnp.arange(Sc)[None, :]
+        k_positions = position[:, None] - ((position[:, None] - idx) % Sc)
+    else:
+        k_positions = jnp.broadcast_to(jnp.arange(Sc)[None, :], (B, Sc))
+    out = L.decode_attention_jnp(q, kc, vc, q_position=position,
+                                 k_positions=k_positions, window=window)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return h + o, {"k": kc, "v": vc}
+
+
+def attn_cache_specs(cfg, B, seq_len, window, prefix=(), dtype=None):
+    Sc = min(seq_len, window) if window > 0 else seq_len
+    dt = dtype or cfg.dtype
+    sh = prefix + (B, Sc, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(sh, dt), "v": jax.ShapeDtypeStruct(sh, dt)}
+
+
+# ---------------------------------------------------------------------------
+# mlp / moe sub-layers
+# ---------------------------------------------------------------------------
+
+
+def mlp_sublayer_specs(cfg, prefix, *, use_moe):
+    d = cfg.d_model
+    La = tuple("layers" for _ in prefix)
+    out = {"norm": ParamSpec(prefix + (d,), La + ("embed",), init="ones")}
+    if use_moe:
+        out.update(M.moe_specs(cfg, prefix))
+    else:
+        out.update(L.mlp_specs(cfg, cfg.d_ff, prefix))
+    return out
+
+
+def mlp_sublayer(p, h, cfg, *, use_moe):
+    x = L.rmsnorm(h, p["norm"], cfg.norm_eps)
+    if use_moe:
+        y, aux = M.moe_apply(p, x, cfg)
+        return h + y, aux
+    return h + L.mlp_apply(p, x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ssm sub-layer
+# ---------------------------------------------------------------------------
+
+
+def ssm_sublayer_specs(cfg, prefix):
+    d = cfg.d_model
+    La = tuple("layers" for _ in prefix)
+    out = {"norm": ParamSpec(prefix + (d,), La + ("embed",), init="ones")}
+    out.update(S.ssm_specs(cfg, prefix))
+    return out
+
+
+def ssm_sublayer(p, h, cfg, *, init_state=None, conv_tail=None,
+                 return_state=False):
+    x = L.rmsnorm(h, p["norm"], cfg.norm_eps)
+    if return_state:
+        y, st = S.ssm_block_apply(p, x, cfg, init_state=init_state,
+                                  conv_tail=conv_tail, return_state=True)
+        return h + y, st
+    return h + S.ssm_block_apply(p, x, cfg), None
+
+
+def ssm_sublayer_decode(p, h, cfg, cache):
+    x = L.rmsnorm(h, p["norm"], cfg.norm_eps)
+    y, (st, tail) = S.ssm_block_decode(p, x, cfg, cache["state"],
+                                       cache["conv_tail"])
+    return h + y, {"state": st, "conv_tail": tail}
+
+
+def ssm_cache_specs(cfg, B, prefix=(), dtype=None):
+    dt = dtype or cfg.dtype
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "state": jax.ShapeDtypeStruct(
+            prefix + (B, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), dt),
+        "conv_tail": jax.ShapeDtypeStruct(
+            prefix + (B, cfg.ssm_conv - 1, conv_dim), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layer-type layout
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg):
+    """Per-layer (mixer_kind, use_moe): mixer_kind in {'attn','ssm'}."""
+    kinds = []
+    for l in range(cfg.num_layers):
+        mixer = "attn" if cfg.is_attn_layer(l) else "ssm"
+        kinds.append((mixer, cfg.is_moe_layer(l)))
+    return kinds
+
+
+def _superblock_period(cfg) -> int:
+    """Scan period: smallest p such that layer kinds repeat with period p."""
+    kinds = layer_kinds(cfg)
+    n = cfg.num_layers
+    for p in range(1, n + 1):
+        if n % p:
+            continue
+        if all(kinds[i] == kinds[i % p] for i in range(n)):
+            return p
+    return n
+
+
+# ---------------------------------------------------------------------------
+# specs for the whole decoder stack
+# ---------------------------------------------------------------------------
+
+
+def decoder_specs(cfg) -> Dict[str, Any]:
+    period = _superblock_period(cfg)
+    n_super = cfg.num_layers // period
+    prefix = (n_super,)
+    kinds = layer_kinds(cfg)[:period]
+    blocks: Dict[str, Any] = {}
+    for i, (mixer, use_moe) in enumerate(kinds):
+        sub: Dict[str, Any] = {}
+        if mixer == "attn":
+            sub["attn"] = attn_sublayer_specs(cfg, prefix)
+        else:
+            sub["ssm"] = ssm_sublayer_specs(cfg, prefix)
+        if cfg.d_ff or cfg.num_experts:
+            sub["mlp"] = mlp_sublayer_specs(cfg, prefix, use_moe=use_moe)
+        blocks[f"sub{i}"] = sub
+    specs = {
+        "embed": L.embed_specs(cfg),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _sub_kinds(cfg):
+    period = _superblock_period(cfg)
+    return layer_kinds(cfg)[:period]
+
+
+def decoder_forward(params, h, cfg, *, positions, mrope_pos=None,
+                    collect_cache=False, block_k=1024):
+    """Run the full stack over a sequence of hidden states ``h`` (B,S,d).
+
+    Returns (h, aux_loss, cache|None). cache leaves are stacked (n_super,...).
+    """
+    kinds = _sub_kinds(cfg)
+    window = cfg.sliding_window
+
+    def superblock(h, block_params, dc, ic):
+        del dc
+        h = constrain_h(h)
+        positions = ic["positions"]
+        mrope_pos = ic.get("mrope")
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, (mixer, use_moe) in enumerate(kinds):
+            sub = block_params[f"sub{i}"]
+            if mixer == "attn":
+                h, (k, v) = attn_sublayer(sub["attn"], h, cfg,
+                                          positions=positions,
+                                          mrope_pos=mrope_pos, window=window,
+                                          block_k=block_k)
+                if collect_cache:
+                    caches[f"sub{i}"] = {"k": k, "v": v}
+            else:
+                h, st = ssm_sublayer(sub["ssm"], h, cfg,
+                                     return_state=collect_cache)
+                if collect_cache:
+                    caches[f"sub{i}"] = {"state": st[0], "conv_tail": st[1]}
+            if "mlp" in sub:
+                h, aux = mlp_sublayer(sub["mlp"], h, cfg, use_moe=use_moe)
+                aux_total = aux_total + aux
+        return h, (aux_total, caches if collect_cache else None)
+
+    wrapped = remat_block(superblock)
+    ic = {"positions": positions}
+    if mrope_pos is not None:
+        ic["mrope"] = mrope_pos
+
+    def body(h, block_params):
+        return wrapped(h, block_params, {}, ic)
+
+    h, (aux, caches) = _scan(body, h, params["blocks"])
+    return h, jnp.sum(aux), caches
+
+
+def decoder_decode_step(params, h, cfg, cache, *, position, window):
+    """One-token step through the stack. h: (B,1,d); cache stacked (n_super,…)."""
+    kinds = _sub_kinds(cfg)
+
+    def superblock(h, inp):
+        block_params, block_cache = inp
+        new_cache = {}
+        for i, (mixer, _) in enumerate(kinds):
+            sub = block_params[f"sub{i}"]
+            if mixer == "attn":
+                h, c = attn_sublayer_decode(sub["attn"], h, cfg,
+                                            block_cache[f"sub{i}"],
+                                            position=position, window=window)
+            else:
+                h, c = ssm_sublayer_decode(sub["ssm"], h, cfg,
+                                           block_cache[f"sub{i}"])
+            new_cache[f"sub{i}"] = c
+            if "mlp" in sub:
+                h, _ = mlp_sublayer(sub["mlp"], h, cfg,
+                                    use_moe=kinds[i][1])
+        return h, new_cache
+
+    h, new_cache = _scan(superblock, h,
+                         (params["blocks"], cache))
+    return h, new_cache
+
+
+def decoder_cache_specs(cfg, B, seq_len, window, dtype=None):
+    kinds = _sub_kinds(cfg)
+    n_super = cfg.num_layers // len(kinds)
+    prefix = (n_super,)
+    out = {}
+    for i, (mixer, _) in enumerate(kinds):
+        if mixer == "attn":
+            out[f"sub{i}"] = attn_cache_specs(cfg, B, seq_len, window,
+                                              prefix, dtype)
+        else:
+            out[f"sub{i}"] = ssm_cache_specs(cfg, B, prefix, dtype)
+    return out

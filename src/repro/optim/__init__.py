@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, sgd, momentum, adamw, get_optimizer
+from repro.optim.schedules import constant, cosine, linear_warmup_cosine, linear_decay
+
+__all__ = ["Optimizer", "sgd", "momentum", "adamw", "get_optimizer",
+           "constant", "cosine", "linear_warmup_cosine", "linear_decay"]

@@ -1,0 +1,114 @@
+"""Minimal optimizer library (optax is not available offline).
+
+An ``Optimizer`` is a pair of pure functions, optax-style:
+  init(params) -> state
+  update(grads, state, params, lr) -> (updates, state)
+Updates are *descent directions already scaled by lr* — apply with
+``params + updates`` via ``apply_updates``.
+
+The paper uses plain SGD (vision) and AdamW (GPT); SlowMo/CO2 wrap an inner
+optimizer with an outer momentum step (see repro.core.slowmo / co2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, lr) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _wd_term(params, weight_decay):
+    if weight_decay == 0.0:
+        return lambda g, p: g
+    return lambda g, p: g + weight_decay * p.astype(g.dtype)
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    wd = _wd_term(None, weight_decay)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        upd = jax.tree.map(lambda g, p: -lr * wd(g, p), grads, params)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, weight_decay: float = 0.0,
+             nesterov: bool = False, state_dtype=None) -> Optimizer:
+    wd = _wd_term(None, weight_decay)
+
+    def init(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, state_dtype or p.dtype), params)
+
+    def update(grads, state, params, lr):
+        g = jax.tree.map(wd, grads, params)
+        new_m = jax.tree.map(lambda m, gg: beta * m + gg.astype(m.dtype),
+                             state, g)
+        if nesterov:
+            upd = jax.tree.map(lambda m, gg: -lr * (beta * m + gg.astype(m.dtype)),
+                               new_m, g)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            return -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p.astype(m.dtype))
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](**kw)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), n

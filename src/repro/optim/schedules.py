@@ -1,0 +1,36 @@
+"""Learning-rate schedules used in the paper's experiments (App. A.5):
+linear warmup + cosine (CIFAR/GPT) and linear-decay-to-zero (ImageNet)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, t_max: int, lr_min: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step / max(t_max, 1), 0.0, 1.0)
+        return lr_min + 0.5 * (lr - lr_min) * (1 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, t_max: int,
+                         warmup_lr: float = 0.0, lr_min: float = 0.0):
+    cos = cosine(lr, max(t_max - warmup, 1), lr_min)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = warmup_lr + (lr - warmup_lr) * step / max(warmup, 1)
+        return jnp.where(step < warmup, w, cos(step - warmup))
+    return fn
+
+
+def linear_decay(lr: float, warmup: int, t_max: int, warmup_lr: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = warmup_lr + (lr - warmup_lr) * step / max(warmup, 1)
+        d = lr * jnp.clip((t_max - step) / max(t_max - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, w, d)
+    return fn

@@ -1,0 +1,24 @@
+import os
+
+# Tests run on the single CPU device (the dry-run subprocess tests set
+# their own XLA_FLAGS). Keep x64 off and make hypothesis deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tree_allclose(a, b, rtol=1e-4, atol=1e-4):
+    import jax
+    leaves_a = jax.tree.leaves(a)
+    leaves_b = jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    return all(np.allclose(np.asarray(x, np.float32), np.asarray(y, np.float32),
+                           rtol=rtol, atol=atol)
+               for x, y in zip(leaves_a, leaves_b))

@@ -1,0 +1,226 @@
+"""System behaviour of LayUp + baselines on the sim backend."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (consensus, disagreement, get_algorithm,
+                        list_algorithms, make_sim_trainer)
+from repro.core.api import choose_peers, pushsum_weight_update
+from repro.core.drift import (elastic_constant, estimate_lipschitz,
+                              gradient_bias, lemma61_bound)
+from repro.data.synthetic import SyntheticVision, make_worker_batches
+from repro.optim import constant, momentum, sgd
+
+M = 8
+
+
+def _mlp_problem():
+    ds = SyntheticVision(num_classes=10, dim=32, snr=1.5, seed=0)
+
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"l1": jax.random.normal(k1, (32, 64)) * 0.2,
+                "l2": jax.random.normal(k2, (64, 10)) * 0.2}
+
+    def loss_fn(p, batch):
+        h = jnp.tanh(batch["x"] @ p["l1"])
+        logits = h @ p["l2"]
+        ce = -jnp.mean(jax.nn.log_softmax(logits)[
+            jnp.arange(logits.shape[0]), batch["labels"]])
+        return ce, {}
+
+    return ds, init, loss_fn
+
+
+def _run(algo_name, steps=200, delays=None, lr=0.05, seed=0):
+    ds, init, loss_fn = _mlp_problem()
+    algo = get_algorithm(algo_name)
+    init_fn, step_fn = make_sim_trainer(algo, loss_fn, momentum(0.9),
+                                        constant(lr), M,
+                                        straggler_delays=delays)
+    st = init_fn(jax.random.PRNGKey(seed), init(jax.random.PRNGKey(seed + 1)))
+    rng = jax.random.PRNGKey(seed + 2)
+    losses, dis = [], []
+    for t in range(steps):
+        batch = jax.tree.map(jnp.asarray, make_worker_batches(ds, M, 32, t))
+        rng, r = jax.random.split(rng)
+        st, metrics = step_fn(st, batch, r)
+        losses.append(float(metrics["loss"]))
+        dis.append(float(metrics["disagreement"]))
+    return st, np.array(losses), np.array(dis)
+
+
+class TestConvergence:
+    @pytest.mark.parametrize("algo", ["ddp", "layup", "gosgd", "adpsgd",
+                                      "localsgd", "slowmo", "co2"])
+    def test_all_algorithms_converge(self, algo):
+        _, losses, _ = _run(algo)
+        assert np.mean(losses[-20:]) < 0.6 * losses[0], algo
+
+    def test_layup_matches_ddp_quality(self):
+        """Paper C1: LayUp reaches DDP-level loss (±10%)."""
+        _, l_ddp, _ = _run("ddp")
+        _, l_layup, _ = _run("layup")
+        assert np.mean(l_layup[-20:]) < 1.1 * np.mean(l_ddp[-20:])
+
+
+class TestLayUpMechanics:
+    def test_ddp_replicas_identical(self):
+        st, _, dis = _run("ddp", steps=20)
+        assert dis[-1] < 1e-5
+
+    def test_layup_weights_conserved(self):
+        st, _, _ = _run("layup", steps=50)
+        assert float(jnp.sum(st.weights)) == pytest.approx(1.0, abs=1e-5)
+
+    def test_gosgd_mass_includes_in_flight(self):
+        st, _, _ = _run("gosgd", steps=50)
+        total = (float(jnp.sum(st.weights))
+                 + float(jnp.sum(st.extras["q0"]["w"]))
+                 + float(jnp.sum(st.extras["q1"]["w"])))
+        assert total == pytest.approx(1.0, abs=1e-5)
+
+    def test_layerwise_reduces_drift_vs_block(self):
+        """Paper §3.2/C5: layer-wise (zero-delay) updates drift less than
+        end-of-iteration block updates."""
+        _, _, d_layer = _run("layup", steps=150)
+        _, _, d_block = _run("layup-block", steps=150)
+        assert np.mean(d_layer[50:]) < np.mean(d_block[50:])
+
+    def test_straggler_robust_accuracy(self):
+        """Paper Fig 3A: a delayed worker does not break convergence."""
+        delays = np.zeros(M, int)
+        delays[0] = 4
+        _, losses, _ = _run("layup", steps=200, delays=delays)
+        assert np.mean(losses[-20:]) < 0.6 * losses[0]
+
+    def test_disagreement_bounded(self):
+        """Paper Fig A1/C7: disagreement stays bounded during training."""
+        _, _, dis = _run("layup", steps=200)
+        assert np.max(dis[20:]) < 10 * (np.mean(dis[20:]) + 1e-9)
+
+
+class TestHypercubeGossip:
+    def test_converges_and_conserves_mass(self):
+        st, losses, _ = _run("layup-hypercube", steps=150)
+        assert np.mean(losses[-20:]) < 0.6 * losses[0]
+        assert float(jnp.sum(st.weights)) == pytest.approx(1.0, abs=1e-5)
+
+    def test_lower_drift_than_random_gossip(self):
+        """Beyond-paper claim: deterministic hypercube schedule mixes faster
+        than uniform random gossip at the same message volume."""
+        means = {algo: np.mean([
+            np.mean(_run(algo, steps=150, seed=s)[2][50:]) for s in (0, 1)])
+            for algo in ("layup", "layup-hypercube")}
+        assert means["layup-hypercube"] < 0.75 * means["layup"], means
+
+    def test_xor_partner_is_involution(self):
+        from repro.core import get_algorithm
+        algo = get_algorithm("layup-hypercube")
+        for step in range(4):
+            send_ok, has_recv, sender_idx = algo._peers(
+                jax.random.PRNGKey(0), 8, jnp.ones(8, bool), step)
+            s = np.asarray(sender_idx)
+            np.testing.assert_array_equal(s[s], np.arange(8))
+
+
+class TestGradAccumulation:
+    def test_sim_vs_accum_equivalence_concept(self):
+        """Averaging grads over microbatches == full-batch grads (linearity),
+        checked on the MLP problem."""
+        ds, init, loss_fn = _mlp_problem()
+        p = init(jax.random.PRNGKey(0))
+        batch = jax.tree.map(jnp.asarray, make_worker_batches(ds, 1, 64, 0))
+        b = jax.tree.map(lambda x: x[0], batch)
+        g_full = jax.grad(lambda p: loss_fn(p, b)[0])(p)
+        halves = [jax.tree.map(lambda x: x[:32], b),
+                  jax.tree.map(lambda x: x[32:], b)]
+        g_acc = jax.tree.map(
+            lambda a, c: (a + c) / 2,
+            jax.grad(lambda p: loss_fn(p, halves[0])[0])(p),
+            jax.grad(lambda p: loss_fn(p, halves[1])[0])(p))
+        for a, c in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestPeerSelection:
+    def test_no_self_sends_and_unique_receivers(self, rng):
+        active = jnp.ones(M, bool)
+        for i in range(20):
+            r = jax.random.fold_in(rng, i)
+            send_ok, has_recv, sender_idx = choose_peers(r, M, active)
+            # winners are unique per receiver by construction
+            senders = np.asarray(sender_idx)[np.asarray(has_recv)]
+            assert len(senders) == len(set(senders.tolist()))
+            assert int(send_ok.sum()) == int(has_recv.sum())
+            # no sender sends to itself
+            assert not np.any(senders == np.arange(M)[np.asarray(has_recv)])
+
+    def test_inactive_workers_never_send(self, rng):
+        active = jnp.zeros(M, bool).at[0].set(True)
+        send_ok, has_recv, _ = choose_peers(rng, M, active)
+        assert int(send_ok.sum()) <= 1
+        assert not bool(send_ok[1:].any())
+
+    def test_pushsum_conservation(self, rng):
+        w = jax.random.uniform(rng, (M,)) + 0.1
+        w = w / w.sum()
+        active = jnp.ones(M, bool)
+        for i in range(10):
+            r = jax.random.fold_in(rng, 100 + i)
+            send_ok, has_recv, sender_idx = choose_peers(r, M, active)
+            w = pushsum_weight_update(w, send_ok, has_recv, sender_idx)
+            assert float(w.sum()) == pytest.approx(1.0, abs=1e-6)
+            assert float(w.min()) > 0
+
+
+class TestTheory:
+    def test_lemma61_bias_bound(self, rng):
+        """Empirical check of Lemma 6.1: ‖b‖² ≤ 4·K̂²·η²·B̂²."""
+        ds, init, loss_fn = _mlp_problem()
+        st, _, _ = _run("layup", steps=100, lr=0.05)
+        batch = jax.tree.map(jnp.asarray, make_worker_batches(ds, M, 32, 999))
+        b0 = jax.tree.map(lambda x: x[0], batch)
+        params0 = jax.tree.map(lambda x: x[0], st.params)
+        params1 = jax.tree.map(lambda x: x[1], st.params)
+        # x̃ = x̂ mixed once with a peer (the lemma's mixed version)
+        w0, w1 = float(st.weights[0]), float(st.weights[1]) / 2
+        a, b = w0 / (w0 + w1), w1 / (w0 + w1)
+        p_tilde = jax.tree.map(lambda x, y: a * x + b * y, params0, params1)
+
+        k_hat = estimate_lipschitz(loss_fn, params0, b0, rng, n_probes=8)
+        b_hat = elastic_constant(st.params, st.weights, 0.05)
+        bias = gradient_bias(loss_fn, params0, p_tilde, b0)
+        bound = lemma61_bound(k_hat, 0.05, b_hat)
+        assert float(bias) ** 2 <= float(bound) * 1.5  # slack for estimation
+
+    def test_consensus_weighted_mean(self, rng):
+        params = {"w": jax.random.normal(rng, (4, 3))}
+        weights = jnp.array([0.4, 0.3, 0.2, 0.1])
+        c = consensus(params, weights)
+        expect = np.average(np.asarray(params["w"]), axis=0,
+                            weights=np.asarray(weights))
+        np.testing.assert_allclose(np.asarray(c["w"]), expect, rtol=1e-5)
+
+    def test_mass_conservation_zero_grads(self, rng):
+        """With zero updates, Σ wᵢxᵢ is exactly conserved by LayUp mixing."""
+        algo = get_algorithm("layup")
+        params = {"w": jax.random.normal(rng, (M, 5))}
+        weights = jnp.full((M,), 1.0 / M)
+        updates = {"w": jnp.zeros((M, 5))}
+        active = jnp.ones(M, bool)
+        mass0 = consensus(params, weights)["w"]
+        p, w, _, _ = algo.post(params, weights, (), updates, active,
+                               jax.random.fold_in(rng, 5), 0)
+        mass1 = consensus(p, w)["w"]
+        np.testing.assert_allclose(np.asarray(mass0), np.asarray(mass1),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_registry_complete():
+    algos = list_algorithms()
+    for a in ("layup", "layup-block", "ddp", "gosgd", "adpsgd", "localsgd",
+              "slowmo", "co2"):
+        assert a in algos

@@ -1,0 +1,105 @@
+"""Unit tests for the roofline-analysis machinery (HLO parsing + analytic
+cost model) — these guard the §Roofline numbers."""
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import analysis as AN
+
+HLO = """\
+HloModule jit_step
+
+%region_body (arg: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %ar = bf16[8,128]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %cp = bf16[4,128]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+}
+
+%helper (p: bf16[2,2]) -> bf16[2,2] {
+  %ag = bf16[32,128]{1,0} all-gather(%z), replica_groups=[16,16]<=[256]
+}
+
+ENTRY %main (a: bf16[8,128]) -> bf16[8,128] {
+  %w = (s32[], bf16[8,128]) while(%init), condition=%cond, body=%region_body
+  %top = f32[100]{0} all-reduce(%q), replica_groups=[1,256]<=[256]
+  %call = bf16[2,2] fusion(%a), kind=kLoop, calls=%helper
+}
+"""
+
+
+class TestCollectiveParsing:
+    def test_loop_multiplication(self):
+        colls = AN.parse_collectives(HLO, loop_trip=10)
+        # in-body all-reduce counted 10x, entry all-reduce once
+        assert colls["all-reduce"].count == 11
+        ar_body = 8 * 128 * 2  # bf16
+        ar_top = 100 * 4
+        expect = 10 * ar_body * 2 * 15 / 16 + ar_top * 2 * 255 / 256
+        assert colls["all-reduce"].wire_bytes == pytest.approx(expect, rel=1e-6)
+
+    def test_permute_wire_equals_bytes(self):
+        colls = AN.parse_collectives(HLO, loop_trip=3)
+        assert colls["collective-permute"].count == 3
+        assert colls["collective-permute"].wire_bytes == 3 * 4 * 128 * 2
+
+    def test_helper_not_in_loop(self):
+        # %helper is called from ENTRY, not the while body → counted once
+        colls = AN.parse_collectives(HLO, loop_trip=10)
+        assert colls["all-gather"].count == 1
+
+    def test_group_size_parsing(self):
+        assert AN._group_size("replica_groups=[16,16]<=[256]", 1) == 16
+        assert AN._group_size("replica_groups={{0,1,2,3}}", 1) == 4
+        assert AN._group_size("no groups here", 7) == 7
+
+    def test_wire_factors(self):
+        assert AN._wire_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
+        assert AN._wire_factor("all-gather", 16) == pytest.approx(15 / 16)
+        assert AN._wire_factor("reduce-scatter", 16) == 15
+        assert AN._wire_factor("collective-permute", 16) == 1.0
+
+
+class TestAnalyticCosts:
+    @pytest.mark.parametrize("arch", ["granite-8b", "mixtral-8x7b",
+                                      "mamba2-780m", "whisper-large-v3",
+                                      "jamba-v0.1-52b"])
+    @pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+    def test_positive_and_finite(self, arch, shape):
+        cfg = get_config(arch)
+        ac = AN.analytic_costs(cfg, INPUT_SHAPES[shape], n_model=16,
+                               n_workers=16)
+        assert ac["flops_per_device"] > 0
+        assert ac["bytes_per_device"] > 0
+        assert np.isfinite(ac["flops_per_device"])
+
+    def test_train_flops_close_to_6nd(self):
+        """Dense train analytic flops ≈ (4/3)·6·N·D/devices (remat factor),
+        within the attention/vocab corrections."""
+        cfg = get_config("granite-8b")
+        shape = INPUT_SHAPES["train_4k"]
+        ac = AN.analytic_costs(cfg, shape, n_model=16, n_workers=16)
+        model = AN.model_flops(cfg, shape) / 256
+        ratio = ac["flops_per_device"] / model
+        assert 1.1 < ratio < 2.2, ratio  # 4/3 remat + attention overhead
+
+    def test_decode_memory_bound(self):
+        cfg = get_config("yi-34b")
+        ac = AN.analytic_costs(cfg, INPUT_SHAPES["decode_32k"], n_model=16,
+                               n_workers=16)
+        t_comp = ac["flops_per_device"] / AN.PEAK_FLOPS
+        t_mem = ac["bytes_per_device"] / AN.HBM_BW
+        assert t_mem > 10 * t_comp  # decode must be memory-dominant
+
+    def test_moe_sharding_divides_expert_flops(self):
+        cfg = get_config("qwen3-moe-30b-a3b")  # 128 experts % 16 == 0
+        shape = INPUT_SHAPES["train_4k"]
+        a16 = AN.analytic_costs(cfg, shape, n_model=16, n_workers=16)
+        a1 = AN.analytic_costs(cfg, shape, n_model=1, n_workers=16)
+        assert a1["flops_per_device"] > 4 * a16["flops_per_device"]
+
+    def test_cpu_artifact_detector(self):
+        txt = "x = f32[24,16,4096,2048]{3,2,1,0} convert(%p)\n" \
+              "y = f32[24,16,4096,2048]{3,2,1,0} parameter(0)\n" \
+              "z = f32[24,8]{1,0} convert(%q)\n"
+        b = AN.cpu_residual_artifact_bytes(txt, n_super=24)
+        assert b == 24 * 16 * 4096 * 2048 * 4  # counted once; small ignored
+        assert AN.cpu_residual_artifact_bytes(txt, n_super=1) == 0.0

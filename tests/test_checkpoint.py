@@ -1,0 +1,46 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def _state(rng):
+    return {
+        "params": {"w": jax.random.normal(rng, (4, 4)),
+                   "layers": (jnp.ones((2, 3)), jnp.zeros(5))},
+        "weights": jnp.full((8,), 0.125),
+        "step": jnp.asarray(17, jnp.int32),
+        "opt": {"mu": jnp.ones((4, 4), jnp.bfloat16)},
+    }
+
+
+def test_round_trip(tmp_path, rng):
+    st = _state(rng)
+    save_checkpoint(str(tmp_path), 17, st)
+    like = jax.tree.map(jnp.zeros_like, st)
+    restored = restore_checkpoint(str(tmp_path), 17, like)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step(tmp_path, rng):
+    st = _state(rng)
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 5, st)
+    save_checkpoint(str(tmp_path), 50, st)
+    assert latest_step(str(tmp_path)) == 50
+    restored = restore_checkpoint(str(tmp_path), None,
+                                  jax.tree.map(jnp.zeros_like, st))
+    assert int(restored["step"]) == 17
+
+
+def test_missing_leaf_raises(tmp_path, rng):
+    st = _state(rng)
+    save_checkpoint(str(tmp_path), 1, st)
+    bigger = dict(st, extra=jnp.zeros(3))
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), 1, bigger)

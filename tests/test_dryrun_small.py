@@ -1,0 +1,256 @@
+"""Integration: the production train/serve steps lower, compile AND RUN on a
+small (2,2)/(2,2,2) host-device mesh in a subprocess (XLA device-count flags
+must be set before jax init, so these run out-of-process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced, ShapeConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import make_step
+from repro.models import build_model
+from repro.optim import momentum, constant
+from repro.data.synthetic import lm_batch_for
+"""
+
+
+@pytest.mark.slow
+def test_layup_train_step_runs_on_mesh():
+    out = _run(PRELUDE + """
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = reduced(get_config("granite-8b"))
+m = build_model(cfg)
+shape = ShapeConfig("t", 32, 8, "train")
+step = make_step(m, mesh, shape, algo="layup", optimizer=momentum(0.9),
+                 schedule=constant(0.05), shifts=(1,))
+compiled = step.lower().compile()
+# actually execute with real values
+M = 2
+params = m.init(jax.random.PRNGKey(0))
+sp = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (M,) + p.shape), params)
+opt = momentum(0.9)
+os_ = jax.vmap(opt.init)(sp)
+w = jnp.full((M,), 0.5)
+batch = lm_batch_for(cfg, 8, 32)
+tok0 = np.asarray(sp["embed"]["tok"][0])  # copy before donation
+p2, o2, w2, loss = compiled(sp, os_, w, batch, jnp.zeros((), jnp.int32),
+                            jnp.zeros((), jnp.int32))
+assert np.isfinite(float(loss)), loss
+assert float(jnp.sum(w2)) == 1.0
+# params changed from init, and with M=2 the symmetric shift-1 exchange
+# brings both replicas to the same mixed value (full consensus)
+diff = float(jnp.abs(p2["embed"]["tok"][0] - p2["embed"]["tok"][1]).max())
+moved = float(np.abs(np.asarray(p2["embed"]["tok"][0]) - tok0).max())
+print("LOSS", float(loss), "DIFF", diff, "MOVED", moved)
+assert moved > 0
+assert diff < 1e-5
+""")
+    assert "LOSS" in out
+
+
+@pytest.mark.slow
+def test_ddp_train_step_runs_on_mesh():
+    _run(PRELUDE + """
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = reduced(get_config("stablelm-1.6b"))
+m = build_model(cfg)
+shape = ShapeConfig("t", 32, 8, "train")
+step = make_step(m, mesh, shape, algo="ddp", optimizer=momentum(0.9),
+                 schedule=constant(0.05))
+compiled = step.lower().compile()
+params = m.init(jax.random.PRNGKey(0))
+opt = momentum(0.9)
+batch = lm_batch_for(cfg, 8, 32)
+p2, o2, loss = compiled(params, opt.init(params), batch,
+                        jnp.zeros((), jnp.int32))
+assert np.isfinite(float(loss))
+print("OK", float(loss))
+""")
+
+
+@pytest.mark.slow
+def test_serve_steps_compile_on_multipod_mesh():
+    _run(PRELUDE + """
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+for name in ("mixtral-8x7b", "mamba2-780m"):
+    cfg = reduced(get_config(name))
+    m = build_model(cfg)
+    step = make_step(m, mesh, ShapeConfig("d", 64, 8, "decode"))
+    step.lower().compile()
+    step = make_step(m, mesh, ShapeConfig("p", 64, 8, "prefill"))
+    step.lower().compile()
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_layup_gossip_shift_switch_compiles():
+    """The runtime-randomized (lax.switch) gossip variant also lowers."""
+    _run(PRELUDE + """
+mesh = make_test_mesh((4, 2), ("data", "model"))
+cfg = reduced(get_config("granite-8b"))
+m = build_model(cfg)
+step = make_step(m, mesh, ShapeConfig("t", 32, 8, "train"),
+                 algo="layup", shifts=(1, 2, 3))
+step.lower().compile()
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_fsdp_preset_runs_and_matches_megatron():
+    """§Perf FSDP preset: same numerics as the baseline sharding."""
+    _run(PRELUDE + """
+import repro.models.transformer as T
+from jax.sharding import PartitionSpec as P
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = reduced(get_config("granite-8b"))
+m = build_model(cfg)
+shape = ShapeConfig("t", 32, 8, "train")
+opt = momentum(0.9)
+M = 2
+params = m.init(jax.random.PRNGKey(0))
+sp = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (M,) + p.shape), params)
+os_ = jax.vmap(opt.init)(sp)
+w = jnp.full((M,), 0.5)
+batch = lm_batch_for(cfg, 8, 32)
+outs = {}
+for preset in (None, "fsdp"):
+    if preset == "fsdp":
+        T.ACTIVATION_PSPEC = P("model", None, None)
+    try:
+        step = make_step(m, mesh, shape, algo="layup", optimizer=opt,
+                         schedule=constant(0.05), shifts=(1,), preset=preset)
+        c = step.lower().compile()
+        p2, _, _, loss = c(jax.tree.map(jnp.array, sp),
+                           jax.tree.map(jnp.array, os_), jnp.array(w), batch,
+                           jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        outs[preset] = (jax.tree.map(np.asarray, p2), float(loss))
+    finally:
+        T.ACTIVATION_PSPEC = None
+a, b = outs[None], outs["fsdp"]
+assert abs(a[1] - b[1]) < 1e-3, (a[1], b[1])
+err = max(float(np.abs(np.asarray(x, np.float32) - np.asarray(y, np.float32)).max())
+          for x, y in zip(jax.tree.leaves(a[0]), jax.tree.leaves(b[0])))
+print("ERR", err)
+assert err < 5e-2, err
+""")
+
+
+@pytest.mark.slow
+def test_ep_mesh_layout_compiles():
+    """§Perf EP mesh (data, expert, tp) with grouped MoE dispatch."""
+    _run(PRELUDE + """
+import repro.models.moe as MOE
+from jax.sharding import NamedSharding, PartitionSpec as P
+mesh = make_test_mesh((2, 2, 2), ("data", "expert", "tp"))
+cfg = reduced(get_config("mixtral-8x7b"))
+m = build_model(cfg)
+MOE.GROUPS = 2
+MOE.GROUP_PSPEC = NamedSharding(mesh, P("expert", None, None))
+MOE.EXPERT_PSPEC = NamedSharding(mesh, P("expert", None, None))
+try:
+    step = make_step(m, mesh, ShapeConfig("p", 32, 8, "prefill"))
+    step.lower().compile()
+finally:
+    MOE.GROUPS = 1
+    MOE.GROUP_PSPEC = MOE.EXPERT_PSPEC = None
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_accum_steps_matches_full_batch():
+    """Gradient accumulation in the prod step == full-batch step."""
+    _run(PRELUDE + """
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = reduced(get_config("stablelm-1.6b"))
+m = build_model(cfg)
+shape = ShapeConfig("t", 32, 8, "train")
+opt = momentum(0.9)
+M = 2
+params = m.init(jax.random.PRNGKey(0))
+sp = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (M,) + p.shape), params)
+os_ = jax.vmap(opt.init)(sp)
+w = jnp.full((M,), 0.5)
+batch = lm_batch_for(cfg, 8, 32)
+res = {}
+for acc in (1, 4):
+    step = make_step(m, mesh, shape, algo="layup", optimizer=opt,
+                     schedule=constant(0.05), shifts=(1,), accum_steps=acc)
+    c = step.lower().compile()
+    p2, _, _, loss = c(jax.tree.map(jnp.array, sp),
+                       jax.tree.map(jnp.array, os_), jnp.array(w), batch,
+                       jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    res[acc] = (jax.tree.map(np.asarray, p2), float(loss))
+assert abs(res[1][1] - res[4][1]) < 2e-3, (res[1][1], res[4][1])
+err = max(float(np.abs(np.asarray(x, np.float32) - np.asarray(y, np.float32)).max())
+          for x, y in zip(jax.tree.leaves(res[1][0]), jax.tree.leaves(res[4][0])))
+print("ERR", err)
+assert err < 5e-2, err
+""")
+
+
+@pytest.mark.slow
+def test_layup_sim_equals_prod_single_shift():
+    """Sim backend with a fixed ring shift == prod shard_map step
+    (same math, two execution paths)."""
+    _run(PRELUDE + """
+import functools
+from repro.core.layup import LayUp
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = reduced(get_config("stablelm-1.6b"))
+m = build_model(cfg)
+shape = ShapeConfig("t", 16, 4, "train")
+opt = momentum(0.9)
+step = make_step(m, mesh, shape, algo="layup", optimizer=opt,
+                 schedule=constant(0.05), shifts=(1,))
+compiled = step.lower().compile()
+M = 2
+params = m.init(jax.random.PRNGKey(0))
+sp = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (M,) + p.shape), params)
+os_ = jax.vmap(opt.init)(sp)
+w = jnp.full((M,), 0.5)
+batch = lm_batch_for(cfg, 4, 16)
+p_prod, _, w_prod, _ = compiled(sp, os_, w, batch, jnp.zeros((), jnp.int32),
+                                jnp.zeros((), jnp.int32))
+
+# manual reference: per-worker grads, update, then ring-shift push-sum mix
+def worker(p, b):
+    g = jax.grad(lambda p: m.loss_fn(p, b)[0])(p)
+    u, _ = opt.update(g, opt.init(p), p, jnp.float32(0.05))
+    return jax.tree.map(lambda x, uu: x + uu.astype(x.dtype), p, u)
+
+b0 = jax.tree.map(lambda x: x[:2], batch)
+b1 = jax.tree.map(lambda x: x[2:], batch)
+u0 = worker(params, b0)
+u1 = worker(params, b1)
+# both weights 0.5 → plain average after shift-1 exchange
+mixed0 = jax.tree.map(lambda a, b: 0.5 * a + 0.5 * b, u0, u1)
+err = max(float(jnp.abs(a - b).max()) for a, b in
+          zip(jax.tree.leaves(mixed0),
+              jax.tree.leaves(jax.tree.map(lambda x: x[0], p_prod))))
+print("ERR", err)
+assert err < 5e-3, err
+""")

@@ -1,0 +1,159 @@
+"""Pallas-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode — kernel bodies execute in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as KREF
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-5)
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,Hq,Hkv,S,D,bq,bk", [
+        (1, 2, 2, 64, 16, 16, 16),
+        (2, 4, 2, 128, 32, 32, 64),   # GQA, rectangular blocks
+        (1, 8, 1, 64, 8, 64, 16),     # MQA
+    ])
+    def test_sweep(self, rng, dtype, B, Hq, Hkv, S, D, bq, bk):
+        q = jax.random.normal(rng, (B, Hq, S, D)).astype(dtype)
+        k = jax.random.normal(jax.random.fold_in(rng, 1),
+                              (B, Hkv, S, D)).astype(dtype)
+        v = jax.random.normal(jax.random.fold_in(rng, 2),
+                              (B, Hkv, S, D)).astype(dtype)
+        out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                                  interpret=True)
+        ref = KREF.attention_ref(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **_tol(dtype))
+
+    @pytest.mark.parametrize("causal,window", [(True, 16), (False, 0)])
+    def test_masking_variants(self, rng, causal, window):
+        B, Hq, Hkv, S, D = 1, 2, 1, 64, 16
+        q = jax.random.normal(rng, (B, Hq, S, D))
+        k = jax.random.normal(jax.random.fold_in(rng, 1), (B, Hkv, S, D))
+        v = jax.random.normal(jax.random.fold_in(rng, 2), (B, Hkv, S, D))
+        out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  block_q=16, block_k=16, interpret=True)
+        ref = KREF.attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,H,S,P,N,chunk", [
+        (1, 2, 32, 8, 4, 8),
+        (2, 3, 64, 16, 8, 16),
+        (1, 1, 64, 32, 16, 64),
+    ])
+    def test_sweep(self, rng, dtype, B, H, S, P, N, chunk):
+        x = (jax.random.normal(rng, (B, H, S, P)) * 0.5).astype(dtype)
+        dt = jax.nn.softplus(
+            jax.random.normal(jax.random.fold_in(rng, 1), (B, H, S))
+        ).astype(dtype)
+        A = -jnp.exp(jax.random.normal(jax.random.fold_in(rng, 2), (H,)) * 0.3)
+        Bm = (jax.random.normal(jax.random.fold_in(rng, 3), (B, S, N)) * 0.5
+              ).astype(dtype)
+        Cm = (jax.random.normal(jax.random.fold_in(rng, 4), (B, S, N)) * 0.5
+              ).astype(dtype)
+        y = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+        ref = KREF.ssd_ref(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(ref, np.float32),
+            **_tol(dtype))
+
+
+class TestGossipMixKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(128,), (7, 33, 5), (1024, 128),
+                                       (3, 3)])
+    def test_sweep(self, rng, dtype, shape):
+        x = jax.random.normal(rng, shape).astype(dtype)
+        r = jax.random.normal(jax.random.fold_in(rng, 1), shape).astype(dtype)
+        u = (jax.random.normal(jax.random.fold_in(rng, 2), shape) * 0.01
+             ).astype(dtype)
+        out = ops.gossip_mix(x, r, u, 0.6, 0.4, interpret=True)
+        ref = KREF.gossip_mix_ref(x, r, u, 0.6, 0.4)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **_tol(dtype))
+
+    def test_pure_mix_convexity(self, rng):
+        """With upd = 0, output lies between x and x_recv elementwise."""
+        x = jnp.ones((64,)) * 2.0
+        r = jnp.ones((64,)) * -1.0
+        out = ops.gossip_mix(x, r, jnp.zeros(64), 0.75, 0.25, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 0.75 * 2.0 - 0.25,
+                                   rtol=1e-6)
+
+
+class TestRMSNormKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape,tile", [((4, 64), 2), ((2, 7, 128), 8),
+                                            ((300, 32), 256)])
+    def test_sweep(self, rng, dtype, shape, tile):
+        x = (jax.random.normal(rng, shape) * 3).astype(dtype)
+        g = (1 + 0.1 * jax.random.normal(jax.random.fold_in(rng, 1),
+                                         shape[-1:])).astype(dtype)
+        out = ops.rmsnorm(x, g, tile_rows=tile, interpret=True)
+        ref = KREF.rmsnorm_ref(x, g)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **_tol(dtype))
+
+    def test_matches_model_rmsnorm(self, rng):
+        from repro.models.layers import rmsnorm as model_rmsnorm
+        x = jax.random.normal(rng, (8, 64))
+        g = jnp.ones(64)
+        np.testing.assert_allclose(
+            np.asarray(ops.rmsnorm(x, g, interpret=True)),
+            np.asarray(model_rmsnorm(x, g)), rtol=1e-5, atol=1e-6)
+
+
+class TestFlashBackwardKernels:
+    """Pallas dq + dk/dv backward passes vs naive autodiff grads."""
+
+    @pytest.mark.parametrize("Hq,Hkv,causal,window,bq,bk", [
+        (2, 2, True, 0, 16, 16),
+        (4, 2, True, 16, 32, 16),   # GQA + sliding window
+        (4, 1, False, 0, 16, 32),   # MQA bidirectional
+    ])
+    def test_grads_match_naive(self, rng, Hq, Hkv, causal, window, bq, bk):
+        from repro.kernels.flash_attention import flash_attention_trainable
+        B, S, D = 1, 64, 16
+        q = jax.random.normal(rng, (B, Hq, S, D))
+        k = jax.random.normal(jax.random.fold_in(rng, 1), (B, Hkv, S, D))
+        v = jax.random.normal(jax.random.fold_in(rng, 2), (B, Hkv, S, D))
+
+        def f(q, k, v):
+            return flash_attention_trainable(
+                q, k, v, causal=causal, window=window, block_q=bq,
+                block_k=bk, interpret=True).sum()
+
+        def g(q, k, v):
+            return KREF.attention_ref(q, k, v, causal=causal,
+                                      window=window).sum()
+
+        g1 = jax.grad(f, (0, 1, 2))(q, k, v)
+        g2 = jax.grad(g, (0, 1, 2))(q, k, v)
+        for a, b, n in zip(g1, g2, "qkv"):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=2e-5, err_msg=n)
+
+    def test_fwd_lse_output(self, rng):
+        from repro.kernels.flash_attention import flash_attention
+        B, H, S, D = 1, 2, 32, 8
+        q = jax.random.normal(rng, (B, H, S, D))
+        k = jax.random.normal(jax.random.fold_in(rng, 1), (B, H, S, D))
+        o, lse = flash_attention(q, k, k, block_q=8, block_k=8,
+                                 return_lse=True, interpret=True)
+        assert lse.shape == (B, H, S)
+        assert np.all(np.isfinite(np.asarray(lse)))

@@ -1,0 +1,99 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw, constant, cosine, linear_decay,
+                         linear_warmup_cosine, momentum, sgd)
+from repro.optim.optimizers import apply_updates, clip_by_global_norm, global_norm
+
+
+def _quad_problem():
+    """min ||x - t||^2 with known optimum."""
+    t = jnp.array([1.0, -2.0, 3.0])
+
+    def grad(x):
+        return 2 * (x - t)
+
+    return t, grad
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("opt", [sgd(), momentum(0.9), adamw()])
+    def test_converges_on_quadratic(self, opt):
+        t, grad_fn = _quad_problem()
+        x = jnp.zeros(3)
+        state = opt.init(x)
+        for i in range(300):
+            u, state = opt.update(grad_fn(x), state, x, 0.05)
+            x = apply_updates(x, u)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(t), atol=1e-2)
+
+    def test_sgd_matches_manual(self):
+        opt = sgd()
+        x = jnp.array([1.0, 2.0])
+        g = jnp.array([0.5, -0.5])
+        u, _ = opt.update(g, opt.init(x), x, 0.1)
+        np.testing.assert_allclose(np.asarray(u), [-0.05, 0.05], rtol=1e-6)
+
+    def test_momentum_accumulates(self):
+        opt = momentum(0.9)
+        x = jnp.zeros(1)
+        g = jnp.ones(1)
+        s = opt.init(x)
+        u1, s = opt.update(g, s, x, 1.0)
+        u2, s = opt.update(g, s, x, 1.0)
+        np.testing.assert_allclose(np.asarray(u1), [-1.0])
+        np.testing.assert_allclose(np.asarray(u2), [-1.9])
+
+    def test_weight_decay_pulls_to_zero(self):
+        opt = sgd(weight_decay=0.1)
+        x = jnp.array([10.0])
+        u, _ = opt.update(jnp.zeros(1), opt.init(x), x, 0.5)
+        assert float(u[0]) == pytest.approx(-0.5, rel=1e-5)
+
+    def test_adamw_bias_correction_first_step(self):
+        opt = adamw(b1=0.9, b2=0.999, eps=0.0)
+        x = jnp.array([0.0])
+        g = jnp.array([0.3])
+        u, _ = opt.update(g, opt.init(x), x, 1.0)
+        # after bias correction the first step is -lr * sign-ish step
+        np.testing.assert_allclose(np.asarray(u), [-1.0], rtol=1e-4)
+
+    def test_state_dtype(self):
+        opt = momentum(0.9, state_dtype=jnp.bfloat16)
+        s = opt.init({"w": jnp.zeros((2, 2), jnp.bfloat16)})
+        assert s["w"].dtype == jnp.bfloat16
+
+
+class TestSchedules:
+    def test_cosine_endpoints(self):
+        f = cosine(1.0, 100)
+        assert float(f(0)) == pytest.approx(1.0)
+        assert float(f(100)) == pytest.approx(0.0, abs=1e-6)
+
+    def test_warmup(self):
+        f = linear_warmup_cosine(1.0, warmup=10, t_max=110, warmup_lr=0.0)
+        assert float(f(0)) == pytest.approx(0.0)
+        assert float(f(5)) == pytest.approx(0.5)
+        assert float(f(10)) == pytest.approx(1.0, rel=1e-3)
+
+    def test_linear_decay(self):
+        f = linear_decay(1.0, warmup=0, t_max=100)
+        assert float(f(50)) == pytest.approx(0.5)
+        assert float(f(100)) == pytest.approx(0.0)
+
+    def test_constant(self):
+        assert float(constant(0.3)(12345)) == pytest.approx(0.3)
+
+
+class TestGradUtils:
+    def test_global_norm(self):
+        tree = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+        assert float(global_norm(tree)) == pytest.approx(5.0)
+
+    def test_clip(self):
+        tree = {"a": jnp.array([30.0]), "b": jnp.array([40.0])}
+        clipped, n = clip_by_global_norm(tree, 5.0)
+        assert float(n) == pytest.approx(50.0)
+        assert float(global_norm(clipped)) == pytest.approx(5.0, rel=1e-5)

@@ -1,0 +1,155 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import choose_peers, consensus, pushsum_weight_update
+from repro.core.adpsgd import random_matching
+from repro.kernels import ref as KREF
+from repro.models import layers as L
+from repro.models import ssm as S
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+class TestPushSumProperties:
+    @given(m=st.integers(2, 24), seed=st.integers(0, 2**30),
+           steps=st.integers(1, 8))
+    @settings(**SETTINGS)
+    def test_weight_sum_invariant(self, m, seed, steps):
+        rng = jax.random.PRNGKey(seed)
+        w = jax.random.uniform(jax.random.fold_in(rng, 1), (m,)) + 0.05
+        w = w / w.sum()
+        active = jax.random.bernoulli(jax.random.fold_in(rng, 2), 0.7, (m,))
+        for i in range(steps):
+            r = jax.random.fold_in(rng, 10 + i)
+            send_ok, has_recv, sender_idx = choose_peers(r, m, active)
+            w = pushsum_weight_update(w, send_ok, has_recv, sender_idx)
+        assert float(w.sum()) == pytest.approx(1.0, abs=1e-5)
+        assert float(w.min()) > 0.0
+
+    @given(m=st.integers(2, 24), seed=st.integers(0, 2**30))
+    @settings(**SETTINGS)
+    def test_winner_targets_unique(self, m, seed):
+        rng = jax.random.PRNGKey(seed)
+        active = jnp.ones(m, bool)
+        send_ok, has_recv, sender_idx = choose_peers(rng, m, active)
+        senders = np.asarray(sender_idx)[np.asarray(has_recv)]
+        assert len(senders) == len(set(senders.tolist()))
+        # every active worker either wins its send or was skipped; winners
+        # count equals receivers count
+        assert int(send_ok.sum()) == int(has_recv.sum()) > 0
+
+    @given(m=st.integers(2, 16), seed=st.integers(0, 2**30))
+    @settings(**SETTINGS)
+    def test_adpsgd_matching_is_involution(self, m, seed):
+        partner = random_matching(jax.random.PRNGKey(seed), m)
+        p = np.asarray(partner)
+        np.testing.assert_array_equal(p[p], np.arange(m))
+
+
+class TestGossipMassConservation:
+    @given(m=st.integers(2, 12), n=st.integers(1, 20),
+           seed=st.integers(0, 2**30))
+    @settings(**SETTINGS)
+    def test_layup_mix_preserves_weighted_mean(self, m, n, seed):
+        from repro.core import get_algorithm
+        rng = jax.random.PRNGKey(seed)
+        algo = get_algorithm("layup")
+        params = {"w": jax.random.normal(jax.random.fold_in(rng, 1), (m, n))}
+        w = jax.random.uniform(jax.random.fold_in(rng, 2), (m,)) + 0.05
+        w = w / w.sum()
+        updates = {"w": jnp.zeros((m, n))}
+        active = jnp.ones(m, bool)
+        before = consensus(params, w)["w"]
+        p2, w2, _, _ = algo.post(params, w, (), updates, active,
+                                 jax.random.fold_in(rng, 3), 0)
+        after = consensus(p2, w2)["w"]
+        np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestAttentionProperties:
+    @given(s=st.sampled_from([8, 16, 32]),
+           hq=st.sampled_from([1, 2, 4]),
+           g=st.sampled_from([1, 2]),
+           window=st.sampled_from([0, 8]),
+           seed=st.integers(0, 2**30))
+    @settings(**SETTINGS)
+    def test_flash_equals_naive(self, s, hq, g, window, seed):
+        rng = jax.random.PRNGKey(seed)
+        hkv = max(hq // g, 1)
+        hq = hkv * g
+        d = 8
+        q = jax.random.normal(jax.random.fold_in(rng, 1), (1, s, hq, d))
+        k = jax.random.normal(jax.random.fold_in(rng, 2), (1, s, hkv, d))
+        v = jax.random.normal(jax.random.fold_in(rng, 3), (1, s, hkv, d))
+        pos = jnp.arange(s)[None]
+        out = L.flash_attention_jnp(q, k, v, q_positions=pos, k_positions=pos,
+                                    causal=True, window=window, block_k=8)
+        ref = KREF.attention_ref(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3),
+                                 causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.transpose(0, 2, 1, 3)),
+                                   rtol=2e-3, atol=2e-4)
+
+    @given(seed=st.integers(0, 2**30))
+    @settings(**SETTINGS)
+    def test_attention_is_convex_combination(self, seed):
+        """Each output row lies in the convex hull of V rows: max|out| ≤ max|V|."""
+        rng = jax.random.PRNGKey(seed)
+        q = jax.random.normal(jax.random.fold_in(rng, 1), (1, 16, 2, 8))
+        k = jax.random.normal(jax.random.fold_in(rng, 2), (1, 16, 2, 8))
+        v = jax.random.normal(jax.random.fold_in(rng, 3), (1, 16, 2, 8))
+        pos = jnp.arange(16)[None]
+        out = L.flash_attention_jnp(q, k, v, q_positions=pos, k_positions=pos,
+                                    block_k=8)
+        assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-5
+
+
+class TestSSDProperties:
+    @given(l=st.sampled_from([8, 16, 32]), chunk=st.sampled_from([4, 8, 16]),
+           h=st.integers(1, 3), seed=st.integers(0, 2**30))
+    @settings(**SETTINGS)
+    def test_chunked_equals_recurrence(self, l, chunk, h, seed):
+        if chunk > l:
+            chunk = l
+        if l % chunk:
+            return
+        rng = jax.random.PRNGKey(seed)
+        b, p, n = 1, 4, 4
+        x = jax.random.normal(jax.random.fold_in(rng, 1), (b, l, h, p)) * 0.5
+        dt = jax.nn.softplus(
+            jax.random.normal(jax.random.fold_in(rng, 2), (b, l, h)))
+        A = -jnp.exp(jax.random.normal(jax.random.fold_in(rng, 3), (h,)) * 0.3)
+        Bm = jax.random.normal(jax.random.fold_in(rng, 4), (b, l, n)) * 0.5
+        Cm = jax.random.normal(jax.random.fold_in(rng, 5), (b, l, n)) * 0.5
+        y1, s1 = S.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+        y2, s2 = S.ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-3, atol=1e-4)
+
+
+class TestOptimizerProperties:
+    @given(seed=st.integers(0, 2**30), lr=st.floats(1e-4, 0.5))
+    @settings(**SETTINGS)
+    def test_sgd_descent_direction(self, seed, lr):
+        from repro.optim import sgd
+        from repro.optim.optimizers import apply_updates
+        rng = jax.random.PRNGKey(seed)
+        g = jax.random.normal(rng, (16,))
+        opt = sgd()
+        u, _ = opt.update(g, opt.init(g), jnp.zeros(16), lr)
+        assert float(jnp.dot(u, g)) <= 0.0  # descent
+
+    @given(seed=st.integers(0, 2**30))
+    @settings(**SETTINGS)
+    def test_cross_entropy_nonneg(self, seed):
+        rng = jax.random.PRNGKey(seed)
+        logits = jax.random.normal(rng, (4, 8, 16)) * 3
+        labels = jax.random.randint(jax.random.fold_in(rng, 1), (4, 8), 0, 16)
+        assert float(L.cross_entropy(logits, labels)) >= 0.0

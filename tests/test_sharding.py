@@ -1,0 +1,72 @@
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as SH
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestRules:
+    def test_single_pod_drops_pod_axis(self):
+        rules = SH.rules_for(MESH)
+        assert rules["worker"] == ("data",)
+        assert rules["batch"] == ("data",)
+
+    def test_multi_pod_keeps_both(self):
+        rules = SH.rules_for(MESH3)
+        assert rules["worker"] == ("pod", "data")
+
+    def test_overrides(self):
+        rules = SH.rules_for(MESH, overrides={"heads": None})
+        assert rules["heads"] is None
+
+
+class TestSpecForAxes:
+    def test_basic_mapping(self):
+        rules = SH.rules_for(MESH)
+        spec = SH.spec_for_axes(("embed", "heads", "hd"), rules, MESH,
+                                (1024, 32, 128))
+        assert spec == P(None, "model", None)
+
+    def test_non_divisible_falls_back(self):
+        rules = SH.rules_for(MESH)
+        # whisper: 20 heads on a 16-way axis → replicate
+        spec = SH.spec_for_axes(("embed", "heads", "hd"), rules, MESH,
+                                (1280, 20, 64))
+        assert spec == P(None, None, None)
+
+    def test_duplicate_axis_first_wins(self):
+        rules = SH.rules_for(MESH)
+        # MoE: experts and ffn both map to model; experts (divisible) wins
+        spec = SH.spec_for_axes(("experts", "embed", "ffn"), rules, MESH,
+                                (128, 2048, 768))
+        assert spec == P("model", None, None)
+
+    def test_duplicate_axis_falls_through_when_first_not_divisible(self):
+        rules = SH.rules_for(MESH)
+        # mixtral: 8 experts (not divisible by 16) → dff gets the axis
+        spec = SH.spec_for_axes(("experts", "embed", "ffn"), rules, MESH,
+                                (8, 4096, 14336))
+        assert spec == P(None, None, "model")
+
+    def test_worker_stacking(self):
+        rules = SH.rules_for(MESH3)
+        spec = SH.spec_for_axes(("worker", "embed", "ffn"), rules, MESH3,
+                                (32, 4096, 14336))
+        assert spec == P(("pod", "data"), None, "model")

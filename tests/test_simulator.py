@@ -1,0 +1,51 @@
+import numpy as np
+import pytest
+
+from repro.core.simulator import HardwareModel, SimResult, simulate, straggler_sweep
+
+HW = HardwareModel(fwd_time=1.0, bwd_ratio=2.0, num_layers=24,
+                   model_bytes=1.6e9, bandwidth=25e9,
+                   allreduce_bandwidth=100e9)
+ALGOS = ["ddp", "localsgd", "slowmo", "co2", "gosgd", "adpsgd", "layup"]
+
+
+class TestSimulator:
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_runs_and_positive(self, algo):
+        r = simulate(algo, M=8, iters=50, hw=HW)
+        assert r.total_time > 0
+        assert 0 < r.utilization <= 1.0 + 1e-9
+        assert 0 < r.mfu <= HW.kernel_mfu + 1e-9
+
+    def test_ddp_pays_allreduce(self):
+        r_ddp = simulate("ddp", M=8, iters=50, hw=HW)
+        r_layup = simulate("layup", M=8, iters=50, hw=HW)
+        assert r_ddp.total_time > r_layup.total_time
+
+    def test_layup_mfu_at_least_ddp(self):
+        """Paper Table 4: LayUp ≥ DDP utilization."""
+        assert (simulate("layup", M=8, iters=50, hw=HW).mfu
+                >= simulate("ddp", M=8, iters=50, hw=HW).mfu)
+
+    def test_straggler_ordering(self):
+        """Paper Fig 3B: sync methods degrade ~linearly; gossip flat."""
+        sweep = straggler_sweep(ALGOS, M=8, iters=50, hw=HW, delays=(0, 4))
+        for a in ("ddp", "localsgd", "slowmo", "co2"):
+            assert sweep[a][1] > 3 * sweep[a][0], a
+        for a in ("layup", "gosgd"):
+            assert sweep[a][1] < 1.5 * sweep[a][0], a
+        # adpsgd degrades through rendezvous with the straggler
+        assert sweep["adpsgd"][1] > 1.2 * sweep["adpsgd"][0]
+
+    def test_layup_hides_comm_better_than_gosgd_when_bw_limited(self):
+        """Layer-wise sends start earlier → less stall at low bandwidth."""
+        hw = HardwareModel(fwd_time=1.0, bwd_ratio=2.0, num_layers=24,
+                           model_bytes=1.6e9, bandwidth=0.45e9)
+        r_layup = simulate("layup", M=8, iters=50, hw=hw)
+        r_gosgd = simulate("gosgd", M=8, iters=50, hw=hw)
+        assert r_layup.total_time <= r_gosgd.total_time
+
+    def test_localsgd_cheaper_comm_than_ddp(self):
+        hw = HardwareModel(allreduce_bandwidth=5e9)
+        assert (simulate("localsgd", M=8, iters=64, hw=hw, sync_every=8).total_time
+                < simulate("ddp", M=8, iters=64, hw=hw).total_time)
