@@ -1,8 +1,10 @@
 """Shared training-loop runner for the algorithm-comparison benchmarks.
 
-Runs the sim backend (vmapped M workers on CPU) for LOSS/ACCURACY curves and
-the event-driven simulator (repro.core.simulator) for WALL-CLOCK per
-iteration, then joins them — the paper's plots are metric-vs-wallclock.
+Drives BOTH execution backends through the unified ``TrainerBackend``
+protocol (``repro.core.backend``): the numeric sim backend (vmapped M
+workers on CPU) for LOSS/ACCURACY curves and the event-driven simulator for
+WALL-CLOCK per iteration, stepped in lock-step and joined — the paper's
+plots are metric-vs-wallclock.
 """
 from __future__ import annotations
 
@@ -13,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import consensus, get_algorithm, make_sim_trainer
-from repro.core.simulator import HardwareModel, simulate
+from repro.core import consensus, make_backend
+from repro.core.simulator import HardwareModel
 from repro.optim import constant, linear_warmup_cosine, momentum
 
 
@@ -27,39 +29,53 @@ class RunResult:
     iter_time: float
     total_time: float
     mfu: float
+    staleness: np.ndarray = None  # per-step mean layer staleness
 
 
 def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
                   M: int, steps: int, batch_per_worker: int, lr: float,
                   hw: HardwareModel, eval_every: int = 25,
                   straggler_delays: Optional[np.ndarray] = None,
-                  warmup: int = 20, seed: int = 0) -> RunResult:
+                  warmup: int = 20, seed: int = 0,
+                  fb_ratio: int = 1, update_delay: int = 0) -> RunResult:
     from repro.data.synthetic import make_worker_batches
-    algo = get_algorithm(algo_name)
     sched = linear_warmup_cosine(lr, warmup, steps,
                                  warmup_lr=lr * 0.3)
-    init_fn, step_fn = make_sim_trainer(algo, loss_fn, momentum(0.9),
-                                        sched, M,
-                                        straggler_delays=straggler_delays)
-    st = init_fn(jax.random.PRNGKey(seed),
-                 init_params_fn(jax.random.PRNGKey(seed + 1)))
+    decoupled = dict(fb_ratio=fb_ratio, update_delay=update_delay)
+    if (fb_ratio > 1 or update_delay > 0) and not algo_name.startswith(
+            ("layup", "gosgd")):
+        # keep the loss and wall-clock lanes consistent: the event backend
+        # has no decoupled model for barrier/rendezvous algorithms, so a
+        # decoupled numeric run would be joined with coupled timing
+        raise ValueError(
+            f"decoupled execution is only benchmarkable for the gossip "
+            f"family, not {algo_name!r}")
+    num = make_backend("sim", algo_name, M=M, loss_fn=loss_fn,
+                       optimizer=momentum(0.9), schedule=sched,
+                       straggler_delays=straggler_delays, **decoupled)
+    ev = make_backend("event", algo_name, M=M, hw=hw,
+                      straggler_delays=straggler_delays, **decoupled)
+
+    st = num.init(jax.random.PRNGKey(seed),
+                  init_params_fn(jax.random.PRNGKey(seed + 1)))
+    ev_st = ev.init(jax.random.PRNGKey(seed))
     rng = jax.random.PRNGKey(seed + 2)
-    losses, dis, evals, esteps = [], [], [], []
+    losses, dis, stale, evals, esteps = [], [], [], [], []
     for t in range(steps):
         batch = jax.tree.map(jnp.asarray,
                              make_worker_batches(ds, M, batch_per_worker, t))
         rng, r = jax.random.split(rng)
-        st, metrics = step_fn(st, batch, r)
+        st, metrics = num.step(st, batch, r)
+        ev_st, _ = ev.step(ev_st, None, None)
         losses.append(float(metrics["loss"]))
         dis.append(float(metrics["disagreement"]))
+        stale.append(float(metrics["staleness_mean"]))
         if (t + 1) % eval_every == 0 or t == steps - 1:
             xbar = consensus(st.params, st.weights)
             evals.append(float(eval_fn(xbar)))
             esteps.append(t + 1)
 
-    sim = simulate(algo_name if algo_name != "layup-block" else "gosgd",
-                   M=M, iters=steps, hw=hw,
-                   straggler_delays=straggler_delays)
+    sim = ev.result()
     return RunResult(np.array(losses), np.array(dis), np.array(evals),
                      np.array(esteps), sim.total_time / steps,
-                     sim.total_time, sim.mfu)
+                     sim.total_time, sim.mfu, np.array(stale))

@@ -1,9 +1,12 @@
 """Quickstart: train a small LM with LayUp vs DDP on the sim backend.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 200] [--algo layup]
+    PYTHONPATH=src python examples/quickstart.py --fb-ratio 2 --update-delay 1
 
-Shows the public API end to end: config → model → algorithm → trainer →
-metrics (loss, disagreement, push-sum mass).
+Shows the public API end to end: config → model → algorithm →
+TrainerBackend → metrics (loss, disagreement, push-sum mass, per-layer
+staleness). ``--fb-ratio``/``--update-delay`` switch on the paper's
+decoupled forward/backward execution.
 """
 import argparse
 
@@ -11,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import get_algorithm, make_sim_trainer, consensus
+from repro.core import consensus, list_algorithms, make_backend
 from repro.data.synthetic import SyntheticLM, make_worker_batches
 from repro.models import build_model
 from repro.optim import linear_warmup_cosine, momentum
@@ -19,11 +22,14 @@ from repro.optim import linear_warmup_cosine, momentum
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--algo", default="layup",
-                    choices=["layup", "ddp", "gosgd", "adpsgd", "localsgd",
-                             "slowmo", "co2"])
+    ap.add_argument("--algo", default="layup", choices=list_algorithms())
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--fb-ratio", type=int, default=1,
+                    help="forward passes per backward (decoupled mode)")
+    ap.add_argument("--update-delay", type=int, default=0,
+                    help="iterations between a gradient's forward and its "
+                         "application (decoupled mode)")
     args = ap.parse_args()
 
     cfg = ModelConfig(name="quickstart-lm", family="dense", num_layers=2,
@@ -34,23 +40,27 @@ def main():
     print(f"model: {cfg.name}  params≈{cfg.param_counts()['total']/1e6:.2f}M  "
           f"irreducible ppl={float(jnp.exp(ds.entropy)):.2f}")
 
-    algo = get_algorithm(args.algo)
-    init_fn, step_fn = make_sim_trainer(
-        algo, lambda p, b: model.loss_fn(p, b, block_k=32), momentum(0.9),
-        linear_warmup_cosine(0.15, 20, args.steps), args.workers)
-    state = init_fn(jax.random.PRNGKey(0), model.init(jax.random.PRNGKey(1)))
+    backend = make_backend(
+        "sim", args.algo, M=args.workers,
+        loss_fn=lambda p, b: model.loss_fn(p, b, block_k=32),
+        optimizer=momentum(0.9),
+        schedule=linear_warmup_cosine(0.15, 20, args.steps),
+        fb_ratio=args.fb_ratio, update_delay=args.update_delay)
+    state = backend.init(jax.random.PRNGKey(0),
+                         model.init(jax.random.PRNGKey(1)))
 
     rng = jax.random.PRNGKey(2)
     for t in range(args.steps):
         batch = jax.tree.map(jnp.asarray,
                              make_worker_batches(ds, args.workers, 16, t))
         rng, r = jax.random.split(rng)
-        state, m = step_fn(state, batch, r)
+        state, m = backend.step(state, batch, r)
         if (t + 1) % 25 == 0:
             print(f"step {t+1:4d}  loss={float(m['loss']):.4f}  "
                   f"ppl={float(jnp.exp(m['loss'])):.2f}  "
                   f"disagreement={float(m.get('disagreement', 0)):.4f}  "
-                  f"Σw={float(m['weight_sum']):.4f}")
+                  f"Σw={float(m['weight_sum']):.4f}  "
+                  f"staleness={float(m['staleness_mean']):.2f}")
 
     xbar = consensus(state.params, state.weights)
     eval_batch = {k: jnp.asarray(v) for k, v in ds.sample(
@@ -58,6 +68,7 @@ def main():
     loss, _ = model.loss_fn(xbar, eval_batch, block_k=32)
     print(f"\nfinal consensus eval ppl: {float(jnp.exp(loss)):.2f} "
           f"(floor {float(jnp.exp(ds.entropy)):.2f})")
+    print("backend summary:", backend.summary())
 
 
 if __name__ == "__main__":

@@ -2,6 +2,10 @@
 LayUp keep converging at full speed while DDP's wall-clock blows up.
 
     PYTHONPATH=src python examples/straggler_demo.py [--delay 4]
+
+Both execution engines run behind the same ``TrainerBackend`` protocol:
+the numeric sim backend produces the loss, the event backend the modeled
+wall-clock — stepped in lock-step per iteration.
 """
 import argparse
 
@@ -9,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import get_algorithm, make_sim_trainer
-from repro.core.simulator import HardwareModel, simulate
+from repro.core import make_backend
+from repro.core.simulator import HardwareModel
 from repro.data.synthetic import SyntheticVision, make_worker_batches
 from repro.optim import constant, momentum
 
@@ -45,21 +49,26 @@ def main():
     print(f"{'algo':10s} {'final loss':>10s} {'wall-clock (s)':>15s} "
           f"{'vs no-straggler':>16s}")
     for algo_name in ("ddp", "slowmo", "gosgd", "layup"):
-        algo = get_algorithm(algo_name)
-        init_fn, step_fn = make_sim_trainer(algo, loss_fn, momentum(0.9),
-                                            constant(0.05), M,
-                                            straggler_delays=delays)
-        st = init_fn(jax.random.PRNGKey(0), init(jax.random.PRNGKey(1)))
+        num = make_backend("sim", algo_name, M=M, loss_fn=loss_fn,
+                           optimizer=momentum(0.9), schedule=constant(0.05),
+                           straggler_delays=delays)
+        ev_slow = make_backend("event", algo_name, M=M, hw=hw,
+                               straggler_delays=delays)
+        ev_fast = make_backend("event", algo_name, M=M, hw=hw)
+        st = num.init(jax.random.PRNGKey(0), init(jax.random.PRNGKey(1)))
+        sl = ev_slow.init(jax.random.PRNGKey(0))
+        fa = ev_fast.init(jax.random.PRNGKey(0))
         rng = jax.random.PRNGKey(2)
         loss = None
         for t in range(args.steps):
             batch = jax.tree.map(jnp.asarray, make_worker_batches(ds, M, 32, t))
             rng, r = jax.random.split(rng)
-            st, m = step_fn(st, batch, r)
+            st, m = num.step(st, batch, r)
+            sl, _ = ev_slow.step(sl, None, None)
+            fa, _ = ev_fast.step(fa, None, None)
             loss = float(m["loss"])
-        t_slow = simulate(algo_name, M=M, iters=args.steps, hw=hw,
-                          straggler_delays=delays).total_time
-        t_fast = simulate(algo_name, M=M, iters=args.steps, hw=hw).total_time
+        t_slow = ev_slow.result().total_time
+        t_fast = ev_fast.result().total_time
         print(f"{algo_name:10s} {loss:10.4f} {t_slow:15.1f} "
               f"{t_slow / t_fast:15.2f}×")
 

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs.base import ModelConfig
-from repro.core import consensus, get_algorithm, make_sim_trainer
+from repro.core import consensus, make_backend
 from repro.data.pipeline import ShardedIterator
 from repro.data.synthetic import SyntheticLM
 from repro.models import build_model
@@ -51,18 +51,20 @@ def main():
           f"{args.workers} workers × batch {bpw} × seq {seq}, {args.algo}")
 
     ds = SyntheticLM(vocab=cfg.vocab_size, seq_len=seq, temperature=1.2)
-    algo = get_algorithm(args.algo)
     opt = adamw(weight_decay=0.01)
     sched = linear_warmup_cosine(3e-4, 30, args.steps)
-    init_fn, step_fn = make_sim_trainer(
-        algo, lambda p, b: model.loss_fn(p, b, block_k=64), opt, sched,
-        args.workers)
-    state = init_fn(jax.random.PRNGKey(0), model.init(jax.random.PRNGKey(1)))
+    backend = make_backend(
+        "sim", args.algo, M=args.workers,
+        loss_fn=lambda p, b: model.loss_fn(p, b, block_k=64),
+        optimizer=opt, schedule=sched)
+    state = backend.init(jax.random.PRNGKey(0),
+                         model.init(jax.random.PRNGKey(1)))
 
     start = 0
     if latest_step(args.ckpt_dir) is not None:
         start = latest_step(args.ckpt_dir)
-        state = restore_checkpoint(args.ckpt_dir, start, state)
+        state = restore_checkpoint(args.ckpt_dir, start, state,
+                                   fill_missing=True)
         print(f"resumed from step {start}")
 
     it = ShardedIterator(ds, args.workers, bpw, prefetch=2)
@@ -72,7 +74,7 @@ def main():
         for t in range(start, args.steps):
             batch = next(it)
             rng, r = jax.random.split(rng)
-            state, m = step_fn(state, batch, r)
+            state, m = backend.step(state, batch, r)
             if (t + 1) % 20 == 0:
                 rate = (t + 1 - start) * args.workers * bpw * seq / (
                     time.time() - t_start)

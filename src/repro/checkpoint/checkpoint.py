@@ -46,8 +46,13 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     return path
 
 
-def restore_checkpoint(directory: str, step: Optional[int], like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+def restore_checkpoint(directory: str, step: Optional[int], like: Any,
+                       fill_missing: bool = False) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved).
+
+    ``fill_missing=True`` keeps the ``like`` value for leaves absent from
+    the archive instead of raising — lets newer TrainState layouts (e.g.
+    the v2 ``versions``/``delay`` fields) resume from older checkpoints."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -60,6 +65,9 @@ def restore_checkpoint(directory: str, step: Optional[int], like: Any) -> Any:
     for path_, leaf in paths_leaves:
         key = jax.tree_util.keystr(path_)
         if key not in flat:
+            if fill_missing:
+                new_leaves.append(leaf)
+                continue
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = flat[key]
         new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype)

@@ -5,6 +5,12 @@ iteration workers form a random matching and each matched pair averages
 parameters atomically, then applies local gradients. Symmetric exchange
 doubles communication volume vs push-sum gossip (paper §2) but needs no
 push-sum weights (mass is conserved by construction).
+
+Version clocks: the averaged partner state is the partner's
+*start-of-iteration* parameters (its iteration-``step`` update is applied
+locally after the average, not shipped), i.e. content generated at the end
+of iteration ``step − 1`` → matched workers stamp every layer group with
+``step`` (whole-model exchange — no layer granularity, unlike LayUp).
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import DistAlgorithm, register_algorithm
+from repro.core.layerview import LayerView, stamp_groups
 
 
 def random_matching(rng, M: int) -> jnp.ndarray:
@@ -28,7 +35,8 @@ class ADPSGD(DistAlgorithm):
     name = "adpsgd"
     asynchronous = True
 
-    def post(self, params, weights, extras, updates, active, rng, step):
+    def post(self, view: LayerView, weights, extras, updates, active, rng,
+             step):
         M = weights.shape[0]
         partner = random_matching(rng, M)
         # pairs average only if both endpoints are willing (active receiver is
@@ -39,9 +47,14 @@ class ADPSGD(DistAlgorithm):
             a = self._bcast(active.astype(jnp.float32), p)
             return (mixed + a * u.astype(jnp.float32)).astype(p.dtype)
 
-        new_params = jax.tree.map(avg_then_update, params, updates)
-        return new_params, weights, extras, {
-            "pairs": jnp.sum((partner != jnp.arange(M)).astype(jnp.float32)) / 2}
+        new_groups = jax.tree.map(avg_then_update, view.groups, updates)
+        matched = partner != jnp.arange(M)
+        versions = stamp_groups(view.versions,
+                                jnp.asarray(step, jnp.float32),
+                                worker_mask=matched)
+        return (view.with_groups(new_groups).with_versions(versions),
+                weights, extras, {
+                    "pairs": jnp.sum(matched.astype(jnp.float32)) / 2})
 
 
 @register_algorithm("adpsgd")

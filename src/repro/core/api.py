@@ -1,19 +1,31 @@
-"""Distributed-algorithm API + the simulation-backend trainer.
+"""Distributed-algorithm API v2 + the simulation-backend trainer.
 
 Every algorithm (LayUp and all baselines) is a ``DistAlgorithm`` with four
-pure hooks operating on *stacked* parameters — every pytree leaf carries a
-leading ``M`` (worker) axis:
+pure hooks operating on a :class:`~repro.core.layerview.LayerView` — a
+layer-grouped partition of the stacked parameters (every leaf keeps its
+leading ``M`` worker axis) carrying per-group/per-worker version clocks:
 
-  init_extras(params, M)                 → algorithm-private state
-  transform_grads(grads, extras)         → grads   (DDP: mean over workers)
-  pre(params, weights, extras)           → applied before the forward pass
+  init_extras(view, M)                   → algorithm-private state
+  transform_grads(grads, extras)         → grads  (grouped like view.groups;
+                                           DDP: mean over workers)
+  pre(view, weights, extras, step)       → applied before the forward pass
                                            (e.g. delayed/buffered gossip)
-  post(params, weights, extras, updates, active, rng, step)
+  post(view, weights, extras, updates, active, rng, step)
                                          → applies local updates + mixing
+                                           and stamps the version clocks
 
 ``make_sim_trainer`` wires a model loss, an optimizer, a schedule and an
 algorithm into a jitted step. The same stacked representation runs on one
 CPU device (vmap) or on a mesh (leading axis sharded over ('pod','data')).
+
+Decoupled execution (the paper's PD-ASGD mechanism, DESIGN.md §3):
+``make_sim_trainer(..., fb_ratio=R, update_delay=D)`` splits each worker's
+batch into ``R`` forward passes of which one receives a backward (the
+forward lane runs at ``R×`` the update rate), and delays gradient
+application by ``D`` iterations through a FIFO — the gradient computed from
+parameters at version ``v_f`` lands on parameters at version ``v_f + D``,
+the mixed-version bias the paper bounds in Lemma 6.1, now measurable via
+the ``update_staleness`` / ``layer_staleness`` metrics.
 
 Straggler emulation: ``straggler_delays[i] = d`` makes worker ``i`` perform
 its local update + gossip only every ``d+1`` iterations (it still *receives*
@@ -22,14 +34,16 @@ mask — their straggler cost is wall-clock (see repro.core.simulator).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.layerview import (
+    LayerPartition, LayerView, layer_staleness, send_fractions, stamp_groups,
+)
 from repro.optim.optimizers import Optimizer, apply_updates
 
 # ---------------------------------------------------------------------------
@@ -38,29 +52,38 @@ from repro.optim.optimizers import Optimizer, apply_updates
 @jax.tree_util.register_dataclass
 @dataclass
 class TrainState:
-    params: Any          # stacked (M, ...) pytree
-    opt_state: Any       # stacked
+    params: Any           # stacked (M, ...) pytree
+    opt_state: Any        # stacked
     weights: jnp.ndarray  # (M,) push-sum weights (sum == 1)
-    extras: Any          # algorithm-private
-    step: jnp.ndarray    # scalar int32
+    extras: Any           # algorithm-private
+    step: jnp.ndarray     # scalar int32
+    versions: jnp.ndarray = None  # (M, G) per-group version clocks
+    delay: Any = ()       # decoupled-mode gradient FIFO ({} when D == 0)
 
 
 class DistAlgorithm:
-    """Base class; subclasses override the hooks they need."""
+    """Base class; subclasses override the hooks they need.
+
+    Hooks receive a :class:`LayerView`; ``view.groups`` maps like the raw
+    parameter tree under ``jax.tree.map`` (against equally-grouped updates
+    or gradients), and ``view.versions`` is the per-group staleness clock
+    the algorithm stamps whenever remote information is incorporated.
+    """
 
     name: str = "base"
     asynchronous: bool = False  # respects the straggler active-mask
 
-    def init_extras(self, params, M: int):
+    def init_extras(self, view: LayerView, M: int):
         return ()
 
     def transform_grads(self, grads, extras):
         return grads, extras
 
-    def pre(self, params, weights, extras):
-        return params, weights, extras
+    def pre(self, view: LayerView, weights, extras, step):
+        return view, weights, extras
 
-    def post(self, params, weights, extras, updates, active, rng, step):
+    def post(self, view: LayerView, weights, extras, updates, active, rng,
+             step):
         raise NotImplementedError
 
     # -- shared helpers -------------------------------------------------------
@@ -177,28 +200,66 @@ def disagreement(params, weights):
     return jnp.mean(jnp.sqrt(per_worker))
 
 
+def _split_fwd_lane(batch, R: int):
+    """Split each worker's batch into R forward slices along the batch dim.
+
+    Slice 0 feeds the backward lane (gradient); slices 1..R-1 are
+    forward-only passes — the decoupled forward threads of the paper, which
+    process data at R× the update rate."""
+    def check(x):
+        if x.ndim < 2 or x.shape[1] % R:
+            raise ValueError(
+                f"fb_ratio={R} needs per-worker batch divisible by {R}; "
+                f"got leaf shape {x.shape}")
+        return x
+
+    jax.tree.map(check, batch)
+    return [jax.tree.map(
+        lambda x: x[:, (x.shape[1] // R) * r:(x.shape[1] // R) * (r + 1)],
+        batch) for r in range(R)]
+
+
 def make_sim_trainer(algo: DistAlgorithm, loss_fn: Callable, optimizer: Optimizer,
                      schedule: Callable, M: int,
                      straggler_delays: Optional[np.ndarray] = None,
-                     measure_drift: bool = True):
+                     measure_drift: bool = True,
+                     fb_ratio: int = 1, update_delay: int = 0):
     """Returns (init_fn, step_fn).
 
     loss_fn(params, batch) -> (loss, metrics); batch leaves have a leading
     M axis matching params.
+
+    ``fb_ratio=R`` runs R forward passes per backward (forward lane);
+    ``update_delay=D`` applies each gradient D iterations after the forward
+    that produced it (decoupled backward lane). Metrics gain
+    ``layer_staleness`` (G,), ``staleness_mean`` and ``update_staleness``.
     """
+    if fb_ratio < 1 or update_delay < 0:
+        raise ValueError("fb_ratio must be >= 1 and update_delay >= 0")
     delays = (jnp.zeros((M,), jnp.int32) if straggler_delays is None
               else jnp.asarray(straggler_delays, jnp.int32))
+    D, R = int(update_delay), int(fb_ratio)
 
     def init_fn(rng, params_single) -> TrainState:
         params = jax.tree.map(
             lambda p: jnp.broadcast_to(p[None], (M,) + p.shape), params_single)
+        part = LayerPartition(params)
         opt_state = jax.vmap(optimizer.init)(params)
+        delay = ()
+        if D > 0:
+            delay = {
+                "g": jax.tree.map(
+                    lambda p: jnp.zeros((D,) + p.shape, jnp.float32), params),
+                "stamp": jnp.full((D,), -1.0, jnp.float32),
+            }
         return TrainState(
             params=params,
             opt_state=opt_state,
             weights=jnp.full((M,), 1.0 / M, jnp.float32),
-            extras=algo.init_extras(params, M),
+            extras=algo.init_extras(part.view(params, M=M), M),
             step=jnp.zeros((), jnp.int32),
+            versions=part.init_versions(M),
+            delay=delay,
         )
 
     def grad_fn(p, b):
@@ -207,25 +268,71 @@ def make_sim_trainer(algo: DistAlgorithm, loss_fn: Callable, optimizer: Optimize
 
     @jax.jit
     def step_fn(state: TrainState, batch, rng):
-        params, weights, extras = algo.pre(state.params, state.weights,
-                                           state.extras)
+        part = LayerPartition(state.params)
+        view = LayerView(part.split(state.params), state.versions, part.names)
+        view, weights, extras = algo.pre(view, state.weights, state.extras,
+                                         state.step)
+        params = part.join(view.groups)
         active = (jnp.mod(state.step, delays + 1) == 0) | (~jnp.bool_(algo.asynchronous))
-        grads, losses = jax.vmap(grad_fn)(params, batch)
-        grads, extras = algo.transform_grads(grads, extras)
+
+        # -- forward lane (R slices; slice 0 feeds the backward lane) ---------
+        if R > 1:
+            slices = _split_fwd_lane(batch, R)
+            grads, bwd_loss = jax.vmap(grad_fn)(params, slices[0])
+            fwd_losses = [jax.vmap(lambda p, b: loss_fn(p, b)[0])(params, s)
+                          for s in slices[1:]]
+            losses = (bwd_loss + sum(fwd_losses)) / R
+        else:
+            grads, losses = jax.vmap(grad_fn)(params, batch)
+
+        # -- backward lane: delay-D gradient FIFO -----------------------------
+        delay = state.delay
+        if D > 0:
+            g_apply = jax.tree.map(lambda b: b[0], delay["g"])
+            applied_stamp = delay["stamp"][0]
+            delay = {
+                "g": jax.tree.map(
+                    lambda b, g: jnp.concatenate(
+                        [b[1:], g[None].astype(jnp.float32)], axis=0),
+                    delay["g"], grads),
+                "stamp": jnp.concatenate(
+                    [delay["stamp"][1:],
+                     state.step.astype(jnp.float32)[None]]),
+            }
+            # warm-up: the FIFO holds zeros for the first D steps
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype),
+                                 g_apply, params)
+            update_staleness = jnp.where(
+                applied_stamp >= 0.0,
+                state.step.astype(jnp.float32) - applied_stamp, 0.0)
+        else:
+            update_staleness = jnp.zeros((), jnp.float32)
+
+        ggrads, extras = algo.transform_grads(part.split(grads), extras)
+        grads = part.join(ggrads)
         lr = schedule(state.step)
         updates, opt_state = jax.vmap(
             lambda g, s, p: optimizer.update(g, s, p, lr))(
                 grads, state.opt_state, params)
         r1, _ = jax.random.split(rng)
-        params, weights, extras, algo_metrics = algo.post(
-            params, weights, extras, updates, active, r1, state.step)
+        view = LayerView(part.split(params), view.versions, part.names)
+        view, weights, extras, algo_metrics = algo.post(
+            view, weights, extras, part.split(updates), active, r1,
+            state.step)
+        params = part.join(view.groups)
+        lstale = layer_staleness(view.versions, state.step)
         metrics = {"loss": jnp.mean(losses), "lr": lr,
-                   "weight_sum": jnp.sum(weights), **algo_metrics}
+                   "weight_sum": jnp.sum(weights),
+                   "layer_staleness": lstale,
+                   "staleness_mean": jnp.mean(lstale),
+                   "update_staleness": update_staleness,
+                   **algo_metrics}
         if measure_drift:
             metrics["disagreement"] = disagreement(params, weights)
         new_state = TrainState(params=params, opt_state=opt_state,
                                weights=weights, extras=extras,
-                               step=state.step + 1)
+                               step=state.step + 1,
+                               versions=view.versions, delay=delay)
         return new_state, metrics
 
     return init_fn, step_fn

@@ -1,0 +1,176 @@
+"""TrainerBackend — one protocol over the repo's two execution backends.
+
+The repo trains through two engines that historically had disjoint APIs:
+
+* the **jitted sim trainer** (``repro.core.api.make_sim_trainer``) — real
+  numerics, vmapped M workers on one device; produces losses, drift and
+  staleness metrics;
+* the **event-driven simulator** (``repro.core.simulator``) — no numerics,
+  models the wall-clock schedule (barriers, NIC serialization, decoupled
+  lanes); produces iteration times, utilization and MFU.
+
+Both now sit behind the :class:`TrainerBackend` protocol (DESIGN.md §7):
+``init(rng, params) → state`` then ``step(state, batch, rng) →
+(state, metrics)`` once per update iteration, plus a ``summary()`` of
+run-level aggregates. Benchmarks and examples drive either — or both in
+lock-step, joining numeric metrics with modeled wall-clock, which is how
+the paper's metric-vs-time plots are produced (``benchmarks/algo_runner``).
+
+``make_backend`` is the single entry point::
+
+    be = make_backend("sim", "layup", M=8, loss_fn=..., optimizer=...,
+                      schedule=..., fb_ratio=2, update_delay=1)
+    ev = make_backend("event", "layup", M=8, hw=HardwareModel(),
+                      fb_ratio=2, update_delay=1)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.api import DistAlgorithm, get_algorithm, make_sim_trainer
+from repro.core.simulator import EventSimulator, HardwareModel, SimResult
+
+# event-time model for algorithms whose numeric semantics differ from their
+# schedule: block-mode LayUp times like GoSGD, hypercube like LayUp
+_EVENT_ALIAS = {"layup-block": "gosgd", "layup-hypercube": "layup"}
+
+
+@runtime_checkable
+class TrainerBackend(Protocol):
+    """One update iteration at a time, identically for both engines."""
+
+    name: str
+    kind: str  # "sim" (numeric) or "event" (wall-clock)
+
+    def init(self, rng, params_single) -> Any: ...
+
+    def step(self, state, batch, rng) -> Tuple[Any, Dict[str, Any]]: ...
+
+    def summary(self) -> Dict[str, float]: ...
+
+
+class SimTrainerBackend:
+    """Numeric backend: wraps the jitted sim trainer."""
+
+    kind = "sim"
+
+    def __init__(self, algo, loss_fn: Callable, optimizer, schedule,
+                 M: int, *, straggler_delays=None, measure_drift: bool = True,
+                 fb_ratio: int = 1, update_delay: int = 0):
+        if isinstance(algo, str):
+            algo = get_algorithm(algo)
+        self.algo: DistAlgorithm = algo
+        self.name = f"sim:{algo.name}"
+        self.M = M
+        self._init_fn, self._step_fn = make_sim_trainer(
+            algo, loss_fn, optimizer, schedule, M,
+            straggler_delays=straggler_delays, measure_drift=measure_drift,
+            fb_ratio=fb_ratio, update_delay=update_delay)
+        self._steps = 0
+        self._last: Dict[str, Any] = {}
+
+    def init(self, rng, params_single):
+        return self._init_fn(rng, params_single)
+
+    def step(self, state, batch, rng):
+        state, metrics = self._step_fn(state, batch, rng)
+        self._steps += 1
+        self._last = metrics
+        return state, metrics
+
+    def summary(self) -> Dict[str, float]:
+        out = {"steps": float(self._steps)}
+        for k in ("loss", "disagreement", "staleness_mean",
+                  "update_staleness", "weight_sum"):
+            if k in self._last:
+                out[k] = float(self._last[k])
+        return out
+
+
+class EventSimBackend:
+    """Wall-clock backend: wraps the event-driven simulator.
+
+    ``init`` ignores the params (no numerics) and returns the simulator as
+    the state; ``step`` ignores the batch and advances the event clock by
+    one update iteration."""
+
+    kind = "event"
+
+    def __init__(self, algo, M: int, *, hw: Optional[HardwareModel] = None,
+                 straggler_delays=None, sync_every: int = 8, seed: int = 0,
+                 fb_ratio: int = 1, update_delay: int = 0):
+        algo_name = algo.name if isinstance(algo, DistAlgorithm) else str(algo)
+        self.name = f"event:{algo_name}"
+        self.M = M
+        self._kw = dict(
+            M=M, hw=hw or HardwareModel(), straggler_delays=straggler_delays,
+            sync_every=sync_every, seed=seed, fb_ratio=fb_ratio,
+            update_delay=update_delay)
+        self._event_algo = _EVENT_ALIAS.get(algo_name, algo_name)
+        self._sim: Optional[EventSimulator] = None
+        # validate eagerly so misconfiguration fails at build, not step time
+        EventSimulator(self._event_algo, **self._kw)
+
+    def init(self, rng, params_single=None):
+        self._sim = EventSimulator(self._event_algo, **self._kw)
+        return self._sim
+
+    def step(self, state: EventSimulator, batch=None, rng=None):
+        return state, state.step()
+
+    def result(self) -> SimResult:
+        if self._sim is None:
+            raise RuntimeError("call init() before result()")
+        return self._sim.result()
+
+    def summary(self) -> Dict[str, float]:
+        r = self.result()
+        return {"steps": float(r.iter_times.size),
+                "total_time": r.total_time, "utilization": r.utilization,
+                "mfu": r.mfu, "updates_per_s": r.updates_per_s,
+                "fwd_passes_per_s": r.fwd_passes_per_s,
+                "mean_grad_staleness": r.mean_grad_staleness}
+
+
+def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
+                 optimizer=None, schedule=None,
+                 hw: Optional[HardwareModel] = None, **kw) -> TrainerBackend:
+    """Single entry point over both backends.
+
+    kind="sim":   requires loss_fn, optimizer, schedule.
+    kind="event": requires hw (or uses the default HardwareModel).
+    Shared kwargs: straggler_delays, fb_ratio, update_delay; sim also takes
+    measure_drift, event also takes sync_every and seed.
+    """
+    if kind == "sim":
+        if loss_fn is None or optimizer is None or schedule is None:
+            raise ValueError("sim backend needs loss_fn, optimizer, schedule")
+        return SimTrainerBackend(algo, loss_fn, optimizer, schedule, M, **kw)
+    if kind == "event":
+        return EventSimBackend(algo, M, hw=hw, **kw)
+    raise ValueError(f"unknown backend kind {kind!r}; use 'sim' or 'event'")
+
+
+def drive(backend: TrainerBackend, batches, rng, params_single=None,
+          history_keys: Tuple[str, ...] = ()) -> Dict[str, Any]:
+    """Run a backend over an iterable of batches; collect metric history.
+
+    Returns {"state": final_state, "history": {key: np.ndarray}, and the
+    backend's summary() entries}. The event backend accepts batches of
+    ``None``."""
+    import jax
+    state = backend.init(rng, params_single)
+    hist: Dict[str, list] = {k: [] for k in history_keys}
+    for t, batch in enumerate(batches):
+        rng, r = jax.random.split(rng)
+        state, metrics = backend.step(state, batch, r)
+        for k in history_keys:
+            if k in metrics:
+                hist[k].append(np.asarray(metrics[k]))
+    out: Dict[str, Any] = {"state": state,
+                           "history": {k: np.asarray(v)
+                                       for k, v in hist.items()}}
+    out.update(backend.summary())
+    return out

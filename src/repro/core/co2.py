@@ -4,6 +4,11 @@ averaging/momentum step overlaps communication by operating on a *stale*
 quotes up to 4× model memory with the penalty gap; like the paper's own
 comparison we implement the overlap without the penalty-gap correction —
 that correction affects final quality only, not convergence speed).
+
+Version clocks: the outer step consumes the average from the *previous*
+sync round, so sync steps stamp ``step + 1 − H`` — CO2's overlap trades a
+full outer round of staleness for hidden communication, which the
+``layer_staleness`` metric now makes visible.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import DistAlgorithm, register_algorithm
+from repro.core.layerview import LayerView, stamp_groups
 from repro.core.slowmo import SlowMo
 
 
@@ -21,13 +27,14 @@ class CO2(SlowMo):
                  outer_beta: float = 0.5):
         super().__init__(sync_every, outer_lr, outer_beta, name="co2")
 
-    def init_extras(self, params, M: int):
-        base = super().init_extras(params, M)
+    def init_extras(self, view: LayerView, M: int):
+        base = super().init_extras(view, M)
         base["stale_avg"] = jax.tree.map(jnp.array, base["z"])
         return base
 
-    def post(self, params, weights, extras, updates, active, rng, step):
-        new_params = self.masked_apply(params, updates, active)
+    def post(self, view: LayerView, weights, extras, updates, active, rng,
+             step):
+        new_groups = self.masked_apply(view.groups, updates, active)
         sync = (jnp.mod(step + 1, self.H) == 0)
 
         # outer step uses the STALE average (communication overlapped)
@@ -40,7 +47,7 @@ class CO2(SlowMo):
             extras["z"], u_new)
         # refresh the stale average with *this* round's mean (arrives "later")
         xavg = jax.tree.map(
-            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), new_params)
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), new_groups)
 
         def sel(a, b):
             return jnp.where(sync, a.astype(jnp.float32),
@@ -53,8 +60,13 @@ class CO2(SlowMo):
             lambda p, zz: jnp.where(
                 sync, jnp.broadcast_to(zz[None].astype(jnp.float32), p.shape),
                 p.astype(jnp.float32)).astype(p.dtype),
-            new_params, z)
-        return (out, weights, {"z": z, "u": u, "stale_avg": stale},
+            new_groups, z)
+        versions = stamp_groups(
+            view.versions,
+            jnp.where(sync,
+                      jnp.asarray(step, jnp.float32) + 1.0 - self.H, 0.0))
+        return (view.with_groups(out).with_versions(versions), weights,
+                {"z": z, "u": u, "stale_avg": stale},
                 {"synced": sync.astype(jnp.float32)})
 
 

@@ -5,6 +5,11 @@ step, so replicas stay bit-identical. In the production backend this is a
 ``psum`` over the ('pod','data') axes; here (sim) a mean over the stacked
 axis. Synchronous ⇒ ignores the straggler mask (it *waits*; the cost shows
 up as wall-clock in repro.core.simulator, reproducing paper Fig. 3B).
+
+Under the v2 layer-granular hooks every group's version clock is stamped to
+the current step on every iteration — synchronous training has zero
+staleness at every layer, the reference point the async algorithms are
+measured against.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import DistAlgorithm, register_algorithm
+from repro.core.layerview import LayerView, stamp_groups
 
 
 class DDP(DistAlgorithm):
@@ -23,10 +29,14 @@ class DDP(DistAlgorithm):
             jnp.mean(x, axis=0, keepdims=True), x.shape), grads)
         return g, extras
 
-    def post(self, params, weights, extras, updates, active, rng, step):
-        new_params = jax.tree.map(
-            lambda p, u: p + u.astype(p.dtype), params, updates)
-        return new_params, weights, extras, {}
+    def post(self, view: LayerView, weights, extras, updates, active, rng,
+             step):
+        new_groups = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), view.groups, updates)
+        versions = stamp_groups(view.versions,
+                                jnp.asarray(step, jnp.float32) + 1.0)
+        return (view.with_groups(new_groups).with_versions(versions),
+                weights, extras, {})
 
 
 @register_algorithm("ddp")

@@ -1,0 +1,189 @@
+"""Layer-granular parameter views — the v2 `DistAlgorithm` currency.
+
+The v1 API handed algorithms a *monolithic* stacked pytree, so "layer-wise"
+could only manifest indirectly (zero-delay mixing). The v2 API partitions
+every parameter tree into **layer groups** and threads a per-group,
+per-worker *version clock* through the hooks, making the paper's layer-wise
+updates (and their staleness) a first-class, measurable concept
+(DESIGN.md §1–§3).
+
+* ``LayerPartition`` — a static partitioner derived from a tree's structure.
+  Leaves are grouped by their tree path: the top-level key normally, or
+  ``"<key>.<idx>"`` for per-layer containers (lists/tuples of blocks), so a
+  transformer's ``params["blocks"][k]`` becomes its own group. Group names
+  are zero-padded and sorted, so order is exact depth order *within* a
+  per-layer container ("blocks.000" < "blocks.001") but alphabetical
+  across top-level keys ("blocks" < "embed") — group index is therefore an
+  approximation of model depth, not ground truth. The staleness guarantees
+  that matter (layer-wise < block at every group) are ordering-independent:
+  every layer-wise stamp lies within the backward pass, in (0, 1] of the
+  iteration, strictly fresher than block mode's 2-iteration queue.
+
+* ``LayerView`` — the pytree handed to the hooks: ``groups`` (an ordered
+  ``{name: {path: leaf}}`` mapping whose leaves keep the stacked ``(M, ...)``
+  layout, so ``jax.tree.map`` works exactly as it did on the raw tree) plus
+  ``versions``, an ``(M, G)`` float32 array holding, per worker and group,
+  the *generation time* (in fractional iterations) of the freshest remote
+  information mixed into that group. Versions only move forward
+  (``stamp_groups`` max-merges).
+
+* Version/staleness conventions: iteration ``t`` spans ``[t, t+1)``;
+  a message whose content was produced at the end of iteration ``t`` carries
+  stamp ``t + 1``. Layer-wise senders ship group ``g`` *during* the backward
+  pass at the fractional time ``send_fractions`` computes (output-most group
+  first), which is why layer-wise staleness is strictly below block
+  staleness at every layer — the paper's §3.2 drift claim, at layer
+  granularity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import DictKey, FlattenedIndexKey, GetAttrKey, SequenceKey
+
+
+def _key_str(entry) -> str:
+    if isinstance(entry, DictKey):
+        return str(entry.key)
+    if isinstance(entry, SequenceKey):
+        return f"{entry.idx:03d}"
+    if isinstance(entry, GetAttrKey):
+        return str(entry.name)
+    if isinstance(entry, FlattenedIndexKey):
+        return f"{entry.key:03d}"
+    return str(entry)
+
+
+def _group_label(path) -> str:
+    """Group = top-level key, or "<key>.<idx>" for per-layer containers."""
+    if not path:
+        return "root"
+    if len(path) >= 2 and isinstance(path[1], (SequenceKey, FlattenedIndexKey)):
+        return f"{_key_str(path[0])}.{_key_str(path[1])}"
+    return _key_str(path[0])
+
+
+class LayerPartition:
+    """Static partitioner: split a tree into layer groups and join it back.
+
+    Built from any tree with the target *structure* (abstract or concrete;
+    stacked or single-worker — only the treedef matters). ``split`` produces
+    the ``groups`` mapping for a :class:`LayerView`; ``join`` restores the
+    original tree. Both are pure reshuffles — safe under ``jit``.
+    """
+
+    def __init__(self, example_tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(example_tree)
+        self._treedef = treedef
+        self._index = []  # (group_label, leaf_key) per leaf, in flatten order
+        seen: Dict[str, None] = {}
+        for path, _ in flat:
+            label = _group_label(path)
+            leaf_key = ".".join(_key_str(e) for e in path) or "leaf"
+            self._index.append((label, leaf_key))
+            seen.setdefault(label, None)
+        self.names: Tuple[str, ...] = tuple(sorted(seen))
+        self._gidx = {n: i for i, n in enumerate(self.names)}
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.names)
+
+    def group_index(self, name: str) -> int:
+        return self._gidx[name]
+
+    def split(self, tree) -> Dict[str, Dict[str, Any]]:
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self._index):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves; partition expects "
+                f"{len(self._index)}")
+        groups: Dict[str, Dict[str, Any]] = {n: {} for n in self.names}
+        for (label, leaf_key), leaf in zip(self._index, leaves):
+            groups[label][leaf_key] = leaf
+        return groups
+
+    def join(self, groups: Dict[str, Dict[str, Any]]):
+        leaves = [groups[label][leaf_key] for label, leaf_key in self._index]
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def init_versions(self, M: int) -> jnp.ndarray:
+        return jnp.zeros((M, self.num_groups), jnp.float32)
+
+    def view(self, tree, versions=None, M: int | None = None) -> "LayerView":
+        if versions is None:
+            if M is None:
+                M = jax.tree_util.tree_leaves(tree)[0].shape[0]
+            versions = self.init_versions(M)
+        return LayerView(groups=self.split(tree), versions=versions,
+                         names=self.names)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class LayerView:
+    """Layer-grouped stacked parameters + per-group version clocks."""
+
+    groups: Dict[str, Any]   # {group: {path: (M, ...) leaf}}
+    versions: jnp.ndarray    # (M, G) float32 generation-time stamps
+    names: Tuple[str, ...] = field(metadata=dict(static=True), default=())
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.names)
+
+    def with_groups(self, groups) -> "LayerView":
+        return replace(self, groups=groups)
+
+    def with_versions(self, versions) -> "LayerView":
+        return replace(self, versions=versions)
+
+
+# ---------------------------------------------------------------------------
+# version-clock arithmetic
+# ---------------------------------------------------------------------------
+
+
+def send_fractions(G: int, bwd_ratio: float = 2.0) -> np.ndarray:
+    """Fractional iteration time at which group ``g``'s update/message is
+    generated during the backward pass.
+
+    The backward visits groups output→input, so group ``g`` (partition
+    order, treated as depth order — an approximation across top-level keys,
+    see the module docstring; 0 = input-most) finishes at fraction
+    ``(G - g)/G`` of the backward:
+    ``phi_g = (1 + bwd_ratio * (G - g)/G) / (1 + bwd_ratio)`` ∈ (0, 1].
+    Output-most groups are generated earliest (small ``phi``); the
+    input-most group lands exactly at the iteration boundary (``phi = 1``).
+    All values stay within the iteration, so the layer-wise < block-mode
+    staleness ordering holds regardless of how groups are numbered.
+    """
+    g = np.arange(G, dtype=np.float32)
+    return ((1.0 + bwd_ratio * (G - g) / G)
+            / (1.0 + bwd_ratio)).astype(np.float32)
+
+
+def stamp_groups(versions: jnp.ndarray, value, worker_mask=None) -> jnp.ndarray:
+    """Max-merge new generation-time stamps into the ``(M, G)`` clock.
+
+    ``value`` broadcasts against ``(M, G)`` — a scalar stamps every group,
+    a ``(G,)`` vector stamps per group. ``worker_mask`` (M,) bool restricts
+    the stamp to receiving workers. Monotone: versions never move backward,
+    so "no news" simply lets staleness grow.
+    """
+    value = jnp.broadcast_to(jnp.asarray(value, jnp.float32), versions.shape)
+    stamped = jnp.maximum(versions, value)
+    if worker_mask is None:
+        return stamped
+    return jnp.where(worker_mask.reshape(-1, 1), stamped, versions)
+
+
+def layer_staleness(versions: jnp.ndarray, step) -> jnp.ndarray:
+    """Per-group staleness ``(G,)`` measured at the end of iteration ``step``:
+    mean over workers of ``(step + 1) - versions``, clipped at 0."""
+    now = (jnp.asarray(step, jnp.float32) + 1.0)
+    return jnp.mean(jnp.maximum(now - versions, 0.0), axis=0)

@@ -1,8 +1,8 @@
 """LayUp — the paper's algorithm (Alg. 1).
 
 Asynchronous decentralized SGD with push-sum randomized gossip and
-layer-wise updates. In the simulation backend the layer-wise mechanism
-manifests as two things (see DESIGN.md §4):
+layer-wise updates. Under the v2 layer-granular API the layer-wise
+mechanism manifests as three things (see DESIGN.md §4):
 
 1. **Zero-delay mixing** — because each layer's parameters are sent *during*
    the backward pass, a peer's next forward sees them immediately
@@ -14,6 +14,11 @@ manifests as two things (see DESIGN.md §4):
    forward-pass parameters x̂ is applied on top of freshly *mixed*
    parameters x̃ (receiver side), which is exactly the gradient bias the
    paper bounds in Lemma 6.1.
+3. **Per-layer version stamps** — receivers stamp each layer group with the
+   fractional generation time of the message (``send_fractions``): layer ℓ's
+   message leaves when its gradient is ready during the backward, so
+   layer-wise staleness is strictly below the block-mode staleness of 2
+   iterations at every layer (asserted in tests/test_algorithms.py).
 
 Collisions (two senders picking the same peer) skip the losing send with
 weights untouched, conserving Σw exactly (paper §3.1: information is
@@ -29,6 +34,7 @@ import jax.numpy as jnp
 from repro.core.api import (
     DistAlgorithm, choose_peers, pushsum_weight_update, register_algorithm,
 )
+from repro.core.layerview import LayerView, send_fractions, stamp_groups
 
 
 class LayUp(DistAlgorithm):
@@ -64,21 +70,23 @@ class LayUp(DistAlgorithm):
     # Block (≡ GoSGD) messages carry the WHOLE model and are sent only after
     # the full backward pass, so they land too late for the peer's next
     # forward — one extra iteration of staleness versus layer-wise sends
-    # (paper §3.2). Modeled as a 2-slot message queue.
-    def _empty_slot(self, params, M):
-        return {"vals": jax.tree.map(jnp.zeros_like, params),
+    # (paper §3.2). Modeled as a 2-slot message queue; each slot carries the
+    # generation-time stamp receivers merge into their version clock.
+    def _empty_slot(self, groups, M):
+        return {"vals": jax.tree.map(jnp.zeros_like, groups),
                 "w": jnp.zeros((M,), jnp.float32),
-                "valid": jnp.zeros((M,), bool)}
+                "valid": jnp.zeros((M,), bool),
+                "stamp": jnp.zeros((), jnp.float32)}
 
-    def init_extras(self, params, M: int):
+    def init_extras(self, view: LayerView, M: int):
         if self.layerwise:
             return ()
-        return {"q0": self._empty_slot(params, M),
-                "q1": self._empty_slot(params, M)}
+        return {"q0": self._empty_slot(view.groups, M),
+                "q1": self._empty_slot(view.groups, M)}
 
-    def pre(self, params, weights, extras):
+    def pre(self, view: LayerView, weights, extras, step):
         if self.layerwise:
-            return params, weights, extras
+            return view, weights, extras
         # apply the oldest buffered block mix (sent two iterations ago)
         slot = extras["q0"]
         w_s = slot["w"]
@@ -93,17 +101,22 @@ class LayUp(DistAlgorithm):
             return (a * x.astype(jnp.float32)
                     + b * v.astype(jnp.float32)).astype(x.dtype)
 
-        params = jax.tree.map(mix, params, slot["vals"])
+        groups = jax.tree.map(mix, view.groups, slot["vals"])
         weights = weights + jnp.where(valid, w_s, 0.0)
+        versions = stamp_groups(view.versions, slot["stamp"],
+                                worker_mask=valid)
         extras = {"q0": extras["q1"],
                   "q1": {**slot, "valid": jnp.zeros_like(valid),
                          "w": jnp.zeros_like(w_s)}}
-        return params, weights, extras
+        return (view.with_groups(groups).with_versions(versions), weights,
+                extras)
 
-    def post(self, params, weights, extras, updates, active, rng, step):
+    def post(self, view: LayerView, weights, extras, updates, active, rng,
+             step):
         M = weights.shape[0]
         send_ok, has_recv, sender_idx = self._peers(rng, M, active, step)
         af = active.astype(jnp.float32)
+        params = view.groups
 
         if self.layerwise:
             # sender transmits its *updated* layer; receiver mixes, then its
@@ -128,15 +141,21 @@ class LayUp(DistAlgorithm):
                                 mixed, upd_x)
                 return out.astype(x.dtype)
 
-            new_params = jax.tree.map(apply_leaf, params, updates)
+            new_groups = jax.tree.map(apply_leaf, params, updates)
             new_weights = pushsum_weight_update(weights, send_ok, has_recv,
                                                 sender_idx)
+            # layer ℓ's message is generated mid-backward at send_fractions[ℓ]
+            phi = jnp.asarray(send_fractions(view.num_groups))
+            versions = stamp_groups(view.versions,
+                                    jnp.asarray(step, jnp.float32) + phi,
+                                    worker_mask=has_recv)
             metrics = {"gossip_sends": jnp.sum(send_ok.astype(jnp.float32))}
-            return new_params, new_weights, extras, metrics
+            return (view.with_groups(new_groups).with_versions(versions),
+                    new_weights, extras, metrics)
 
         # ---- block mode (≡ GoSGD): update now, enqueue the mix --------------
-        new_params = self.masked_apply(params, updates, active)
-        sent = jax.tree.map(lambda x: x[sender_idx], new_params)
+        new_groups = self.masked_apply(params, updates, active)
+        sent = jax.tree.map(lambda x: x[sender_idx], new_groups)
         w_half = weights * 0.5
         new_weights = jnp.where(send_ok, w_half, weights)
         extras = {
@@ -145,10 +164,12 @@ class LayUp(DistAlgorithm):
                 "vals": sent,
                 "w": jnp.where(has_recv, w_half[sender_idx], 0.0),
                 "valid": has_recv,
+                # whole-model message generated at the end of this iteration
+                "stamp": jnp.asarray(step, jnp.float32) + 1.0,
             },
         }
         metrics = {"gossip_sends": jnp.sum(send_ok.astype(jnp.float32))}
-        return new_params, new_weights, extras, metrics
+        return (view.with_groups(new_groups), new_weights, extras, metrics)
 
 
 @register_algorithm("layup")

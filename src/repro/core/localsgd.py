@@ -1,10 +1,17 @@
-"""Local SGD baseline (Stich, 2019): H local steps, then full averaging."""
+"""Local SGD baseline (Stich, 2019): H local steps, then full averaging.
+
+Version clocks: every group is stamped to ``step + 1`` on sync steps only —
+between syncs no remote information flows, so per-layer staleness ramps
+from 0 up to H−1 and resets, the sawtooth the paper's periodic-averaging
+baselines all share.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.api import DistAlgorithm, register_algorithm
+from repro.core.layerview import LayerView, stamp_groups
 
 
 class LocalSGD(DistAlgorithm):
@@ -14,9 +21,10 @@ class LocalSGD(DistAlgorithm):
         self.H = sync_every
         self.name = name
 
-    def post(self, params, weights, extras, updates, active, rng, step):
-        new_params = jax.tree.map(
-            lambda p, u: p + u.astype(p.dtype), params, updates)
+    def post(self, view: LayerView, weights, extras, updates, active, rng,
+             step):
+        new_groups = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), view.groups, updates)
         sync = (jnp.mod(step + 1, self.H) == 0)
 
         def maybe_avg(p):
@@ -25,7 +33,11 @@ class LocalSGD(DistAlgorithm):
                 p.shape).astype(p.dtype)
             return jnp.where(sync, avg, p)
 
-        return (jax.tree.map(maybe_avg, new_params), weights, extras,
+        versions = stamp_groups(
+            view.versions,
+            jnp.where(sync, jnp.asarray(step, jnp.float32) + 1.0, 0.0))
+        return (view.with_groups(jax.tree.map(maybe_avg, new_groups))
+                .with_versions(versions), weights, extras,
                 {"synced": sync.astype(jnp.float32)})
 
 

@@ -3,6 +3,9 @@
 Every ``sync_every`` steps: x̄ ← mean(x); u ← β·u + (z − x̄)/η_out;
 z ← z − η_out·u; all replicas reset to z. Needs an extra model-sized buffer
 (z and u) — one of the memory costs the paper contrasts LayUp against.
+
+Version clocks follow Local SGD: stamped to ``step + 1`` on sync steps,
+free-running (staleness ramps to H−1) in between.
 """
 from __future__ import annotations
 
@@ -10,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import DistAlgorithm, register_algorithm
+from repro.core.layerview import LayerView, stamp_groups
 
 
 class SlowMo(DistAlgorithm):
@@ -22,14 +26,14 @@ class SlowMo(DistAlgorithm):
         self.outer_beta = outer_beta
         self.name = name
 
-    def init_extras(self, params, M: int):
-        single = jax.tree.map(lambda p: p[0], params)
+    def init_extras(self, view: LayerView, M: int):
+        single = jax.tree.map(lambda p: p[0], view.groups)
         return {"z": single, "u": jax.tree.map(jnp.zeros_like, single)}
 
-    def _outer(self, new_params, extras):
-        """One outer step from the current average. Returns (params, extras)."""
+    def _outer(self, new_groups, extras):
+        """One outer step from the current average. Returns (z, u) grouped."""
         xavg = jax.tree.map(
-            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), new_params)
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), new_groups)
         u = jax.tree.map(
             lambda uu, z, xa: self.outer_beta * uu.astype(jnp.float32)
             + (z.astype(jnp.float32) - xa) / self.outer_lr,
@@ -39,11 +43,12 @@ class SlowMo(DistAlgorithm):
             extras["z"], u)
         return z, u
 
-    def post(self, params, weights, extras, updates, active, rng, step):
-        new_params = jax.tree.map(
-            lambda p, u: p + u.astype(p.dtype), params, updates)
+    def post(self, view: LayerView, weights, extras, updates, active, rng,
+             step):
+        new_groups = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), view.groups, updates)
         sync = (jnp.mod(step + 1, self.H) == 0)
-        z_new, u_new = self._outer(new_params, extras)
+        z_new, u_new = self._outer(new_groups, extras)
 
         def sel(a, b):
             return jnp.where(sync, a.astype(jnp.float32),
@@ -55,8 +60,12 @@ class SlowMo(DistAlgorithm):
             lambda p, zz: jnp.where(
                 sync, jnp.broadcast_to(zz[None].astype(jnp.float32), p.shape),
                 p.astype(jnp.float32)).astype(p.dtype),
-            new_params, z)
-        return out, weights, {"z": z, "u": u}, {"synced": sync.astype(jnp.float32)}
+            new_groups, z)
+        versions = stamp_groups(
+            view.versions,
+            jnp.where(sync, jnp.asarray(step, jnp.float32) + 1.0, 0.0))
+        return (view.with_groups(out).with_versions(versions), weights,
+                {"z": z, "u": u}, {"synced": sync.astype(jnp.float32)})
 
 
 @register_algorithm("slowmo")

@@ -15,8 +15,11 @@ Two distribution strategies, mirroring the paper's comparison:
   realization of random-peer gossip (each hop is an ICI-neighbour hop; the
   shift is drawn per step from a static power-of-two set via ``lax.switch``,
   i.e. hypercube gossip — see DESIGN.md §2). Push-sum weights ride along as
-  a per-worker scalar. Collectives are issued **per pytree leaf** = per
-  layer-group: the HLO counterpart of the paper's layer-wise updates.
+  a per-worker scalar. Collectives are issued **per layer group by
+  construction**: the parameter tree is partitioned through the same
+  ``LayerPartition`` the sim backend's v2 hooks use (DESIGN.md §1), and each
+  group's subtree ships as one logical gossip message — the HLO counterpart
+  of the paper's layer-wise updates.
 
 Serving: ``make_prefill_step`` / ``make_decode_step`` build the inference
 paths (params replicated over data axes, TP over 'model'; decode donates the
@@ -31,10 +34,29 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+try:  # jax >= 0.5: top-level export with check_vma/axis_names kwargs
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False,
+                          axis_names=set(axis_names))
+except ImportError:  # jax 0.4.x: experimental API; partial-manual (auto=)
+    # subgroup sharding trips an XLA CHECK in this generation, so fall back
+    # to fully-manual shard_map — the body sees model-axis-replicated
+    # shards (tensor parallelism folds into replication; numerics are
+    # unchanged, memory is the 0.4.x price)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names):
+        return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=False)
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from jax.flatten_util import ravel_pytree
+
 from repro.configs.base import ModelConfig, ShapeConfig, input_specs
+from repro.core.layerview import LayerPartition
 from repro.launch import sharding as SH
 from repro.launch.mesh import data_axes, num_workers
 from repro.models.model import Model
@@ -135,17 +157,28 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
     M = num_workers(mesh)
     shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
 
+    # layer-group partition shared with the sim backend's v2 hooks: gossip
+    # messages are layer groups, not loose leaves (DESIGN.md §1/§2)
+    part = LayerPartition(model.abstract_params())
+
     def gossip_mix(tree, w, shift_idx):
         """Push-sum ring-shift gossip: every worker sends to i+s and receives
-        from i−s. Per-leaf collectives = layer-wise messages."""
+        from i−s. Each layer group's leaves are packed into ONE flat f32
+        buffer, so the wire carries exactly one collective per layer group
+        (f32 is a lossless container for bf16; the mix runs in f32 anyway)."""
+        groups = part.split(tree)
+        packed, unravel = {}, {}
+        for name, sub in groups.items():
+            packed[name], unravel[name] = ravel_pytree(
+                jax.tree.map(lambda v: v.astype(jnp.float32), sub))
 
         def branch(s):
             perm = [(i, (i + s) % M) for i in range(M)]
 
             def run(args):
-                tree, w_half = args
-                recv = jax.tree.map(
-                    lambda x: jax.lax.ppermute(x, ax, perm), tree)
+                packed, w_half = args
+                recv = {name: jax.lax.ppermute(v, ax, perm)
+                        for name, v in packed.items()}
                 rw = jax.lax.ppermute(w_half, ax, perm)
                 return recv, rw
 
@@ -153,14 +186,15 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
 
         w_half = w * 0.5
         recv, rw = jax.lax.switch(shift_idx, [branch(s) for s in shifts],
-                                  (tree, w_half))
+                                  (packed, w_half))
         new_w = w_half + rw
-        mixed = jax.tree.map(
-            lambda mine, theirs: ((w_half * mine.astype(jnp.float32)
-                                   + rw * theirs.astype(jnp.float32))
-                                  / new_w).astype(mine.dtype),
-            tree, recv)
-        return mixed, new_w
+        mixed_groups = {}
+        for name, mine in packed.items():
+            mixed = (w_half * mine + rw * recv[name]) / new_w
+            mixed_groups[name] = jax.tree.map(
+                lambda x, ref: x.astype(ref.dtype),
+                unravel[name](mixed), groups[name])
+        return part.join(mixed_groups), new_w
 
     def worker_fn(params_st, opt_st, w_st, batch, step_idx, shift_idx):
         params = jax.tree.map(lambda x: x[0], params_st)
@@ -230,7 +264,7 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
                   pw, batch_specs_sm, P(), P()),
         out_specs=(jax.tree.map(lambda _: pw, abstract_params), opt_specs,
                    pw, P()),
-        check_vma=False, axis_names=set(worker_axes))
+        axis_names=set(worker_axes))
 
     # model-axis sharding flows in through jit in_shardings (auto axis)
     p_sh = SH.param_shardings(model, mesh, stacked_workers=M,

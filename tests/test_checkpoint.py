@@ -44,3 +44,16 @@ def test_missing_leaf_raises(tmp_path, rng):
     bigger = dict(st, extra=jnp.zeros(3))
     with pytest.raises(KeyError):
         restore_checkpoint(str(tmp_path), 1, bigger)
+
+
+def test_fill_missing_keeps_like_value(tmp_path, rng):
+    """Old checkpoints resume into newer TrainState layouts: leaves absent
+    from the archive keep the `like` value (e.g. the v2 versions clock)."""
+    st = _state(rng)
+    save_checkpoint(str(tmp_path), 1, st)
+    bigger = dict(st, versions=jnp.full((8, 2), 7.0))
+    restored = restore_checkpoint(str(tmp_path), 1, bigger, fill_missing=True)
+    np.testing.assert_array_equal(np.asarray(restored["versions"]),
+                                  np.full((8, 2), 7.0))
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))

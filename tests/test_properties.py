@@ -3,9 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.api import choose_peers, consensus, pushsum_weight_update
+from repro.core.layerview import LayerPartition
 from repro.core.adpsgd import random_matching
 from repro.kernels import ref as KREF
 from repro.models import layers as L
@@ -64,9 +68,11 @@ class TestGossipMassConservation:
         updates = {"w": jnp.zeros((m, n))}
         active = jnp.ones(m, bool)
         before = consensus(params, w)["w"]
-        p2, w2, _, _ = algo.post(params, w, (), updates, active,
+        part = LayerPartition(params)
+        v2, w2, _, _ = algo.post(part.view(params, M=m), w, (),
+                                 part.split(updates), active,
                                  jax.random.fold_in(rng, 3), 0)
-        after = consensus(p2, w2)["w"]
+        after = consensus(part.join(v2.groups), w2)["w"]
         np.testing.assert_allclose(np.asarray(before), np.asarray(after),
                                    rtol=1e-4, atol=1e-5)
 
