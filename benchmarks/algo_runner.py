@@ -37,7 +37,13 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
                   hw: HardwareModel, eval_every: int = 25,
                   straggler_delays: Optional[np.ndarray] = None,
                   warmup: int = 20, seed: int = 0,
-                  fb_ratio: int = 1, update_delay: int = 0) -> RunResult:
+                  fb_ratio: int = 1, update_delay: int = 0,
+                  backend: str = "sim") -> RunResult:
+    """``backend`` selects the numeric engine: "sim" (vmapped workers, any
+    algorithm) or "prod" (the decoupled shard_map lane on a real device
+    mesh, layup family only — needs M local devices). Both consume the same
+    worker batches and report the same metric keys, so the wall-clock join
+    with the event backend is identical."""
     from repro.data.synthetic import make_worker_batches
     sched = linear_warmup_cosine(lr, warmup, steps,
                                  warmup_lr=lr * 0.3)
@@ -50,7 +56,10 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
         raise ValueError(
             f"decoupled execution is only benchmarkable for the gossip "
             f"family, not {algo_name!r}")
-    num = make_backend("sim", algo_name, M=M, loss_fn=loss_fn,
+    if backend not in ("sim", "prod"):
+        raise ValueError(f"numeric backend must be 'sim' or 'prod', "
+                         f"not {backend!r}")
+    num = make_backend(backend, algo_name, M=M, loss_fn=loss_fn,
                        optimizer=momentum(0.9), schedule=sched,
                        straggler_delays=straggler_delays, **decoupled)
     ev = make_backend("event", algo_name, M=M, hw=hw,
@@ -71,7 +80,11 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
         dis.append(float(metrics["disagreement"]))
         stale.append(float(metrics["staleness_mean"]))
         if (t + 1) % eval_every == 0 or t == steps - 1:
-            xbar = consensus(st.params, st.weights)
+            # prod-lane state is a dict (read buffer + push-sum weights);
+            # sim state is a TrainState
+            params, weights = ((st["read"], st["w"]) if isinstance(st, dict)
+                               else (st.params, st.weights))
+            xbar = consensus(params, weights)
             evals.append(float(eval_fn(xbar)))
             esteps.append(t + 1)
 

@@ -19,6 +19,30 @@ def section(title: str):
     print(f"\n# === {title} ===", flush=True)
 
 
+def dump_json(tag: str, prefix: Optional[str] = None,
+              out_dir: Optional[str] = None) -> str:
+    """Write the emitted CSV lines as ``BENCH_<tag>.json`` — the artifact
+    the nightly CI job uploads so the perf trajectory is tracked per run.
+
+    ``prefix`` restricts the dump to that metric-name prefix (modules share
+    the RESULTS buffer when driven by benchmarks.run)."""
+    import json
+    import os
+    out_dir = out_dir or os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{tag}.json")
+    rows = {}
+    for line in RESULTS:
+        name, us, derived = line.split(",", 2)
+        if prefix and not name.startswith(prefix):
+            continue
+        rows[name] = {"us_per_call": float(us), "derived": derived}
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, sort_keys=True)
+    print(f"# wrote {path} ({len(rows)} entries)", flush=True)
+    return path
+
+
 def time_to_target(values: np.ndarray, per_step_time: float, target: float,
                    mode: str = "below") -> Optional[float]:
     """First wall-clock time at which the metric crosses the target."""

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, section
+from benchmarks.common import dump_json, emit, section
 from repro.core.simulator import HardwareModel, simulate
 
 ALGOS = ["ddp", "co2", "slowmo", "gosgd", "adpsgd", "layup"]
@@ -28,7 +28,9 @@ CONFIGS = {
 }
 
 
-def main(iters=200, quick=False):
+def main(iters=None, quick=False):
+    if iters is None:  # CI smoke (--quick): tiny config, same assertions
+        iters = 40 if quick else 200
     section("Table 4 analogue — modeled MFU per algorithm")
     out = {}
     for cname, cfg in CONFIGS.items():
@@ -58,8 +60,14 @@ def main(iters=200, quick=False):
         # decoupled lanes never stall on the NIC → MFU pins at the kernel
         # ceiling and can't fall below the coupled schedule
         assert r1.mfu >= base.mfu - 1e-9, cname
+    dump_json("table4_mfu", prefix="table4.")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(iters=args.iters, quick=args.quick)

@@ -3,17 +3,19 @@ from repro.core.api import (
     make_sim_trainer, register_algorithm, consensus, disagreement,
 )
 from repro.core.backend import (
-    EventSimBackend, SimTrainerBackend, TrainerBackend, drive, make_backend,
+    EventSimBackend, ProdTrainerBackend, SimTrainerBackend, TrainerBackend,
+    drive, make_backend,
 )
 from repro.core.layerview import (
     LayerPartition, LayerView, layer_staleness, send_fractions, stamp_groups,
+    version_metrics,
 )
 
 __all__ = [
     "DistAlgorithm", "TrainState", "get_algorithm", "list_algorithms",
     "make_sim_trainer", "register_algorithm", "consensus", "disagreement",
-    "EventSimBackend", "SimTrainerBackend", "TrainerBackend", "drive",
-    "make_backend",
+    "EventSimBackend", "ProdTrainerBackend", "SimTrainerBackend",
+    "TrainerBackend", "drive", "make_backend",
     "LayerPartition", "LayerView", "layer_staleness", "send_fractions",
-    "stamp_groups",
+    "stamp_groups", "version_metrics",
 ]

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layerview import (
-    LayerPartition, LayerView, layer_staleness, send_fractions, stamp_groups,
+    LayerPartition, LayerView, send_fractions, stamp_groups, version_metrics,
 )
 from repro.optim.optimizers import Optimizer, apply_updates
 
@@ -320,12 +320,10 @@ def make_sim_trainer(algo: DistAlgorithm, loss_fn: Callable, optimizer: Optimize
             view, weights, extras, part.split(updates), active, r1,
             state.step)
         params = part.join(view.groups)
-        lstale = layer_staleness(view.versions, state.step)
         metrics = {"loss": jnp.mean(losses), "lr": lr,
                    "weight_sum": jnp.sum(weights),
-                   "layer_staleness": lstale,
-                   "staleness_mean": jnp.mean(lstale),
                    "update_staleness": update_staleness,
+                   **version_metrics(view.versions, state.step),
                    **algo_metrics}
         if measure_drift:
             metrics["disagreement"] = disagreement(params, weights)

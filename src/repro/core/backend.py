@@ -1,20 +1,26 @@
-"""TrainerBackend — one protocol over the repo's two execution backends.
+"""TrainerBackend — one protocol over the repo's three execution backends.
 
-The repo trains through two engines that historically had disjoint APIs:
+The repo trains through three engines that historically had disjoint APIs:
 
 * the **jitted sim trainer** (``repro.core.api.make_sim_trainer``) — real
   numerics, vmapped M workers on one device; produces losses, drift and
   staleness metrics;
 * the **event-driven simulator** (``repro.core.simulator``) — no numerics,
   models the wall-clock schedule (barriers, NIC serialization, decoupled
-  lanes); produces iteration times, utilization and MFU.
+  lanes); produces iteration times, utilization and MFU;
+* the **production decoupled lane** (``repro.launch.train``) — real
+  numerics through the shard_map path on an actual device mesh: one worker
+  per ('pod','data') mesh cell, double-buffered parameters, D-deep gradient
+  FIFO, per-layer-group ring gossip (DESIGN.md §9). The lane the paper
+  actually ships.
 
-Both now sit behind the :class:`TrainerBackend` protocol (DESIGN.md §7):
+All three sit behind the :class:`TrainerBackend` protocol (DESIGN.md §7):
 ``init(rng, params) → state`` then ``step(state, batch, rng) →
 (state, metrics)`` once per update iteration, plus a ``summary()`` of
-run-level aggregates. Benchmarks and examples drive either — or both in
-lock-step, joining numeric metrics with modeled wall-clock, which is how
-the paper's metric-vs-time plots are produced (``benchmarks/algo_runner``).
+run-level aggregates. Benchmarks and examples drive any of them — or
+several in lock-step, joining numeric metrics with modeled wall-clock,
+which is how the paper's metric-vs-time plots are produced
+(``benchmarks/algo_runner``).
 
 ``make_backend`` is the single entry point::
 
@@ -22,6 +28,13 @@ the paper's metric-vs-time plots are produced (``benchmarks/algo_runner``).
                       schedule=..., fb_ratio=2, update_delay=1)
     ev = make_backend("event", "layup", M=8, hw=HardwareModel(),
                       fb_ratio=2, update_delay=1)
+    pr = make_backend("prod", "layup", M=8, loss_fn=..., optimizer=...,
+                      schedule=..., fb_ratio=2, update_delay=1)
+
+The prod backend needs M local devices on the worker axis (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=M`` before jax init to
+fake them on CPU); it consumes the same sim-layout batches (leading (M,)
+worker axis) as the sim backend, so the two are drop-in interchangeable.
 """
 from __future__ import annotations
 
@@ -35,6 +48,18 @@ from repro.core.simulator import EventSimulator, HardwareModel, SimResult
 # event-time model for algorithms whose numeric semantics differ from their
 # schedule: block-mode LayUp times like GoSGD, hypercube like LayUp
 _EVENT_ALIAS = {"layup-block": "gosgd", "layup-hypercube": "layup"}
+
+# the metric keys every numeric backend (sim and prod) surfaces in summary()
+_NUMERIC_SUMMARY_KEYS = ("loss", "disagreement", "staleness_mean",
+                         "update_staleness", "weight_sum")
+
+
+def _numeric_summary(steps: int, last: Dict[str, Any]) -> Dict[str, float]:
+    out = {"steps": float(steps)}
+    for k in _NUMERIC_SUMMARY_KEYS:
+        if k in last:
+            out[k] = float(last[k])
+    return out
 
 
 @runtime_checkable
@@ -81,12 +106,7 @@ class SimTrainerBackend:
         return state, metrics
 
     def summary(self) -> Dict[str, float]:
-        out = {"steps": float(self._steps)}
-        for k in ("loss", "disagreement", "staleness_mean",
-                  "update_staleness", "weight_sum"):
-            if k in self._last:
-                out[k] = float(self._last[k])
-        return out
+        return _numeric_summary(self._steps, self._last)
 
 
 class EventSimBackend:
@@ -134,15 +154,89 @@ class EventSimBackend:
                 "mean_grad_staleness": r.mean_grad_staleness}
 
 
+class ProdTrainerBackend:
+    """Production backend: the decoupled shard_map lane on a real mesh.
+
+    Runs the same numerics as the mesh step builders in
+    ``repro.launch.train`` — double-buffered parameters, D-deep gradient
+    FIFO, per-layer-group push-sum ring gossip — behind the one-step-per-
+    iteration protocol. Only the layup family is implementable here (the
+    ring IS the layup gossip; barrier algorithms have no decoupled prod
+    lane). Batches use the sim layout (leading (M,) worker axis).
+
+    ``mesh`` defaults to an (M, 1) ('data', 'model') mesh over the local
+    devices; pass an explicit mesh to add tensor parallelism. The per-step
+    gossip shift is drawn from ``shifts`` with the step rng, mirroring the
+    lockstep prod step's ``lax.switch`` hypercube schedule."""
+
+    kind = "prod"
+
+    def __init__(self, algo, loss_fn: Callable, optimizer, schedule,
+                 M: int, *, mesh=None, shifts=(1, 2, 4, 8),
+                 fb_ratio: int = 1, update_delay: int = 0,
+                 straggler_delays=None, measure_drift: bool = True):
+        import jax
+        from repro.launch.mesh import num_workers
+        from repro.launch.train import make_decoupled_backend_trainer
+
+        algo_name = algo.name if isinstance(algo, DistAlgorithm) else str(algo)
+        if not algo_name.startswith("layup"):
+            raise ValueError(
+                f"prod backend implements the layup family only, not "
+                f"{algo_name!r} (the gossip ring is the algorithm)")
+        self.name = f"prod:{algo_name}"
+        if mesh is None:
+            devs = jax.devices()
+            if len(devs) < M:
+                raise ValueError(
+                    f"prod backend needs {M} devices for {M} workers; "
+                    f"found {len(devs)} (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={M})")
+            mesh = jax.make_mesh((M, 1), ("data", "model"),
+                                 devices=devs[:M])
+        if num_workers(mesh) != M:
+            raise ValueError(
+                f"mesh worker axes give {num_workers(mesh)} workers, "
+                f"expected M={M}")
+        self.M = M
+        self.mesh = mesh
+        self._init_fn, self._step_fn, self._shifts = \
+            make_decoupled_backend_trainer(
+                loss_fn, optimizer, schedule, mesh, shifts=shifts,
+                fb_ratio=fb_ratio, update_delay=update_delay,
+                straggler_delays=straggler_delays,
+                measure_drift=measure_drift)
+        self._steps = 0
+        self._last: Dict[str, Any] = {}
+
+    def init(self, rng, params_single):
+        self._steps = 0
+        return self._init_fn(rng, params_single)
+
+    def step(self, state, batch, rng):
+        import jax
+        shift_idx = jax.random.randint(rng, (), 0, len(self._shifts))
+        state, metrics = self._step_fn(state, batch, self._steps, shift_idx)
+        self._steps += 1
+        self._last = metrics
+        return state, metrics
+
+    def summary(self) -> Dict[str, float]:
+        return _numeric_summary(self._steps, self._last)
+
+
 def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
                  optimizer=None, schedule=None,
                  hw: Optional[HardwareModel] = None, **kw) -> TrainerBackend:
-    """Single entry point over both backends.
+    """Single entry point over the three backends.
 
     kind="sim":   requires loss_fn, optimizer, schedule.
     kind="event": requires hw (or uses the default HardwareModel).
-    Shared kwargs: straggler_delays, fb_ratio, update_delay; sim also takes
-    measure_drift, event also takes sync_every and seed.
+    kind="prod":  requires loss_fn, optimizer, schedule and M local devices
+                  (or an explicit mesh kwarg).
+    Shared kwargs: straggler_delays, fb_ratio, update_delay; sim/prod also
+    take measure_drift, event also takes sync_every and seed, prod also
+    takes mesh and shifts.
     """
     if kind == "sim":
         if loss_fn is None or optimizer is None or schedule is None:
@@ -150,7 +244,12 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
         return SimTrainerBackend(algo, loss_fn, optimizer, schedule, M, **kw)
     if kind == "event":
         return EventSimBackend(algo, M, hw=hw, **kw)
-    raise ValueError(f"unknown backend kind {kind!r}; use 'sim' or 'event'")
+    if kind == "prod":
+        if loss_fn is None or optimizer is None or schedule is None:
+            raise ValueError("prod backend needs loss_fn, optimizer, schedule")
+        return ProdTrainerBackend(algo, loss_fn, optimizer, schedule, M, **kw)
+    raise ValueError(
+        f"unknown backend kind {kind!r}; use 'sim', 'event' or 'prod'")
 
 
 def drive(backend: TrainerBackend, batches, rng, params_single=None,

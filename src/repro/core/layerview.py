@@ -187,3 +187,10 @@ def layer_staleness(versions: jnp.ndarray, step) -> jnp.ndarray:
     mean over workers of ``(step + 1) - versions``, clipped at 0."""
     now = (jnp.asarray(step, jnp.float32) + 1.0)
     return jnp.mean(jnp.maximum(now - versions, 0.0), axis=0)
+
+
+def version_metrics(versions: jnp.ndarray, step) -> Dict[str, jnp.ndarray]:
+    """The staleness metrics both the sim trainer and the production
+    decoupled lane report, so sim-vs-prod parity is assertable key by key."""
+    ls = layer_staleness(versions, step)
+    return {"layer_staleness": ls, "staleness_mean": jnp.mean(ls)}

@@ -55,7 +55,7 @@ def effective_config(cfg, shape):
 
 def _compile_step(cfg, mesh, shape, algo, shifts, overrides, preset=None,
                   accum_steps=1, act_pspec=None, moe_groups=1,
-                  constrain_grads=False):
+                  constrain_grads=False, fb_ratio=1, update_delay=0):
     import repro.models.transformer as T
     import repro.models.moe as MOE
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -78,7 +78,8 @@ def _compile_step(cfg, mesh, shape, algo, shifts, overrides, preset=None,
         step = make_step(model, mesh, shape, algo=algo, shifts=shifts,
                          overrides=overrides, preset=preset,
                          accum_steps=accum_steps,
-                         constrain_grads=constrain_grads)
+                         constrain_grads=constrain_grads,
+                         fb_ratio=fb_ratio, update_delay=update_delay)
         return step.lower().compile()
     finally:
         T.ACTIVATION_PSPEC = None
@@ -90,7 +91,8 @@ def run_one(arch: str, shape_name: str, *, algo: str = "layup",
             multi_pod: bool = False, shifts=(1,), overrides=None,
             save: bool = True, verbose: bool = True, tag_suffix: str = "",
             layout: str = "2d", preset=None, accum_steps: int = 1,
-            act_pspec=None, moe_groups: int = 1, constrain_grads=False):
+            act_pspec=None, moe_groups: int = 1, constrain_grads=False,
+            fb_ratio: int = 1, update_delay: int = 0):
     shape = INPUT_SHAPES[shape_name]
     cfg0 = get_config(arch)
     cfg, notes = effective_config(cfg0, shape)
@@ -104,12 +106,14 @@ def run_one(arch: str, shape_name: str, *, algo: str = "layup",
         notes += f"; accum={accum_steps}"
     if moe_groups > 1:
         notes += f"; moe_groups={moe_groups}"
+    if fb_ratio > 1 or update_delay > 0:
+        notes += f"; decoupled R={fb_ratio} D={update_delay}"
 
     # --- lower + compile: the dry-run proof ---------------------------------
     t0 = time.time()
     compiled = _compile_step(cfg, mesh, shape, algo, shifts, overrides,
                              preset, accum_steps, act_pspec, moe_groups,
-                             constrain_grads)
+                             constrain_grads, fb_ratio, update_delay)
     t_full = time.time() - t0
 
     from repro.models.transformer import _superblock_period
@@ -163,6 +167,10 @@ def main():
     ap.add_argument("--preset", default=None,
                     choices=[None, "megatron", "ep", "fsdp"])
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--fb-ratio", type=int, default=1,
+                    help="decoupled lane: forward passes per backward")
+    ap.add_argument("--update-delay", type=int, default=0,
+                    help="decoupled lane: gradient FIFO depth D")
     ap.add_argument("--moe-groups", type=int, default=1)
     ap.add_argument("--constrain-grads", action="store_true")
     ap.add_argument("--act-pspec", default=None,
@@ -204,7 +212,9 @@ def main():
                             accum_steps=args.accum, act_pspec=act_pspec,
                             tag_suffix=args.tag, overrides=overrides,
                             moe_groups=args.moe_groups,
-                            constrain_grads=args.constrain_grads)
+                            constrain_grads=args.constrain_grads,
+                            fb_ratio=args.fb_ratio,
+                            update_delay=args.update_delay)
                 except Exception as e:
                     traceback.print_exc()
                     failures.append((arch, shape, repr(e)[:200]))
@@ -222,7 +232,8 @@ def main():
                 accum_steps=args.accum, act_pspec=act_pspec,
                 tag_suffix=args.tag, overrides=overrides,
                 moe_groups=args.moe_groups,
-                constrain_grads=args.constrain_grads)
+                constrain_grads=args.constrain_grads,
+                fb_ratio=args.fb_ratio, update_delay=args.update_delay)
 
 
 if __name__ == "__main__":

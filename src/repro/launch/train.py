@@ -1,6 +1,6 @@
 """Production-backend step builders (pjit / shard_map on the real mesh).
 
-Two distribution strategies, mirroring the paper's comparison:
+Three distribution strategies, mirroring the paper's comparison:
 
 * **DDP** (baseline): parameters replicated over the ('pod','data') axes,
   tensor-parallel over 'model'. Plain ``jax.jit``: GSPMD inserts the gradient
@@ -20,6 +20,22 @@ Two distribution strategies, mirroring the paper's comparison:
   ``LayerPartition`` the sim backend's v2 hooks use (DESIGN.md §1), and each
   group's subtree ships as one logical gossip message — the HLO counterpart
   of the paper's layer-wise updates.
+
+* **Decoupled LayUp** (the paper's PD-ASGD execution, production form):
+  the per-worker step is assembled from three composable lanes —
+  ``forward_lane`` (loss + grads on the *read* parameter buffer, with an
+  R:1 forward:backward ratio), ``backward_update_lane`` (a D-deep gradient
+  FIFO feeding the optimizer, mutating the *write* buffer), and
+  ``gossip_lane`` (the per-layer-group push-sum ring mix). Parameters are
+  **double-buffered**: the forward lane consumes the read copy while the
+  update lane mutates the write copy; at the end of the step each layer
+  group's read copy adopts the mixed write copy ("buffer swap") and its
+  version clock is stamped with the group's generation time ``t + phi_g``
+  (``send_fractions``). Forward passes at step ``t`` therefore use layer
+  groups whose content reflects gradients through step ``t − 1 − D`` — the
+  production analogue of the sim trainer's ``fb_ratio``/``update_delay``
+  (DESIGN.md §3/§9). DDP and lockstep LayUp are assembled from the same
+  lane pieces (R=1, D=0, with/without the gossip lane).
 
 Serving: ``make_prefill_step`` / ``make_decode_step`` build the inference
 paths (params replicated over data axes, TP over 'model'; decode donates the
@@ -56,7 +72,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import ModelConfig, ShapeConfig, input_specs
-from repro.core.layerview import LayerPartition
+from repro.core.layerview import (
+    LayerPartition, send_fractions, stamp_groups, version_metrics,
+)
 from repro.launch import sharding as SH
 from repro.launch.mesh import data_axes, num_workers
 from repro.models.model import Model
@@ -79,6 +97,220 @@ def _abstract_batch(cfg: ModelConfig, shape: ShapeConfig, dtype=None):
 
 
 # ---------------------------------------------------------------------------
+# composable lanes: forward / backward-update / gossip
+#
+# DDP, lockstep LayUp and decoupled LayUp are assembled from these three
+# factories; each returns a pure per-worker function traced inside the
+# step (shard_map body for the LayUp paths, plain jit for DDP).
+# ---------------------------------------------------------------------------
+
+
+def _batch_dim(leaf) -> int:
+    """Per-leaf batch dimension: M-RoPE positions are (3, B, S) → dim 1,
+    everything else leads with the batch dim."""
+    if len(leaf.shape) == 3 and leaf.shape[0] == 3 and leaf.dtype == jnp.int32:
+        return 1
+    return 0
+
+
+def _worker_batch_pspec(ax):
+    """Per-leaf shard_map batch specs: the worker axes land on the leaf's
+    batch dim (see :func:`_batch_dim`)."""
+    def batch_pspec(s):
+        if _batch_dim(s) == 1:
+            return P(None, ax)
+        return P(ax)
+    return batch_pspec
+
+
+def _split_fwd_slices(batch, R: int):
+    """Split a per-worker batch into R equal forward slices along the batch
+    dim (slice 0 feeds the backward lane — cf. api._split_fwd_lane)."""
+    def slc(x, r):
+        d = _batch_dim(x)
+        n = x.shape[d]
+        if n % R:
+            raise ValueError(
+                f"fb_ratio={R} needs per-worker batch divisible by {R}; "
+                f"got leaf shape {x.shape}")
+        return jax.lax.slice_in_dim(x, (n // R) * r, (n // R) * (r + 1),
+                                    axis=d)
+
+    return [jax.tree.map(lambda x: slc(x, r), batch) for r in range(R)]
+
+
+def forward_lane(loss_fn: Callable, *, fb_ratio: int = 1,
+                 accum_steps: int = 1, grad_specs=None) -> Callable:
+    """Forward(+backward-AD) compute on the read buffer.
+
+    Returns ``fwd(params, batch) -> (loss, grads)``. With ``fb_ratio=R > 1``
+    the worker batch is split into R slices of which only slice 0 receives a
+    backward — the paper's decoupled forward threads, serving data at R× the
+    update rate; the reported loss averages all R slices. ``accum_steps``
+    microbatches the backward (activation footprint scales with the
+    microbatch); it does not compose with R > 1. ``grad_specs`` pins the
+    gradients to the parameter sharding so GSPMD reduce-scatters instead of
+    all-reduce+slice (§Perf iteration A3)."""
+    R = int(fb_ratio)
+    if R < 1:
+        raise ValueError("fb_ratio must be >= 1")
+    if R > 1 and accum_steps > 1:
+        raise ValueError("fb_ratio > 1 does not compose with accum_steps")
+
+    def fwd(params, batch):
+        if accum_steps > 1:
+            def micro(b):
+                return jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+
+            mb = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, b):
+                (l, _), g = micro(b)
+                return jax.tree.map(lambda a, x: a + x, carry,
+                                    {"l": l, "g": g}), ()
+
+            zero = {"l": jnp.zeros((), jnp.float32),
+                    "g": jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+            tot, _ = jax.lax.scan(acc_body, zero, mb)
+            loss = tot["l"] / accum_steps
+            grads = jax.tree.map(
+                lambda g, p: (g / accum_steps).astype(p.dtype),
+                tot["g"], params)
+        elif R > 1:
+            slices = _split_fwd_slices(batch, R)
+            (bwd_loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, slices[0])
+            fwd_losses = [loss_fn(params, s)[0] for s in slices[1:]]
+            loss = (bwd_loss + sum(fwd_losses)) / R
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        if grad_specs is not None:
+            try:
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, grad_specs)
+            except RuntimeError as e:
+                # raw-PartitionSpec constraints need a mesh context; the
+                # jax 0.4.x fully-manual shard_map body has none, and the
+                # constraint is a no-op there anyway (model axes fold into
+                # replication — DESIGN.md §2). Skip only that failure.
+                if "non-empty mesh" not in str(e):
+                    raise
+        return loss, grads
+
+    return fwd
+
+
+def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
+                         update_delay: int = 0) -> Callable:
+    """Delayed update application on the write buffer.
+
+    Returns ``upd(params, opt_state, grads, fifo, step_idx) ->
+    (params, opt_state, fifo, update_staleness)``. With ``update_delay=D > 0``
+    gradients flow through a D-deep FIFO (``{"g": (D, ...) f32 tree,
+    "stamp": (D,) f32}``): the gradient applied at step ``t`` was generated
+    at step ``t − D`` (warm-up: the FIFO holds zeros and stamp −1 for the
+    first D steps, so early updates are no-ops). Mirrors the sim trainer's
+    backward lane exactly (api.make_sim_trainer). ``active`` (scalar 0/1,
+    per worker) masks the *application* of the update — the straggler
+    emulation of the sim backend (the optimizer state still advances,
+    matching api.make_sim_trainer's masked_apply semantics)."""
+    D = int(update_delay)
+    if D < 0:
+        raise ValueError("update_delay must be >= 0")
+
+    def upd(params, opt_state, grads, fifo, step_idx, active=None):
+        step_f = step_idx.astype(jnp.float32)
+        if D > 0:
+            g_apply = jax.tree.map(lambda b: b[0], fifo["g"])
+            applied_stamp = fifo["stamp"][0]
+            fifo = {
+                "g": jax.tree.map(
+                    lambda b, g: jnp.concatenate(
+                        [b[1:], g[None].astype(jnp.float32)], axis=0),
+                    fifo["g"], grads),
+                "stamp": jnp.concatenate([fifo["stamp"][1:], step_f[None]]),
+            }
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype),
+                                 g_apply, params)
+            update_staleness = jnp.where(applied_stamp >= 0.0,
+                                         step_f - applied_stamp, 0.0)
+        else:
+            update_staleness = jnp.zeros((), jnp.float32)
+        lr = schedule(step_idx)
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        if active is not None:
+            updates = jax.tree.map(lambda u: u * active.astype(u.dtype),
+                                   updates)
+        params = apply_updates(params, updates)
+        return params, opt_state, fifo, update_staleness
+
+    return upd
+
+
+def fifo_init(params_single, update_delay: int, M: int = 0):
+    """Abstract/zero FIFO state: gradients in f32 plus generation stamps.
+
+    With ``M > 0`` the gradient buffers are worker-stacked (M, D, ...) —
+    the layout the decoupled step state carries."""
+    D = int(update_delay)
+
+    def zeros(p):
+        shape = ((M, D) if M else (D,)) + tuple(p.shape)
+        return jnp.zeros(shape, jnp.float32)
+
+    return {"g": jax.tree.map(zeros, params_single),
+            "stamp": jnp.full((D,), -1.0, jnp.float32)}
+
+
+def gossip_lane(part: LayerPartition, M: int, ax, shifts: Sequence[int]):
+    """Push-sum ring-shift gossip: every worker sends to i+s and receives
+    from i−s. Each layer group's leaves are packed into ONE flat f32 buffer,
+    so the wire carries exactly one collective per layer group (f32 is a
+    lossless container for bf16; the mix runs in f32 anyway). Returns
+    ``mix(tree, w, shift_idx) -> (tree, w)``; the identity when M == 1."""
+    if M == 1:
+        return lambda tree, w, shift_idx: (tree, w)
+
+    def mix(tree, w, shift_idx):
+        groups = part.split(tree)
+        packed, unravel = {}, {}
+        for name, sub in groups.items():
+            packed[name], unravel[name] = ravel_pytree(
+                jax.tree.map(lambda v: v.astype(jnp.float32), sub))
+
+        def branch(s):
+            perm = [(i, (i + s) % M) for i in range(M)]
+
+            def run(args):
+                packed, w_half = args
+                recv = {name: jax.lax.ppermute(v, ax, perm)
+                        for name, v in packed.items()}
+                rw = jax.lax.ppermute(w_half, ax, perm)
+                return recv, rw
+
+            return run
+
+        w_half = w * 0.5
+        recv, rw = jax.lax.switch(shift_idx, [branch(s) for s in shifts],
+                                  (packed, w_half))
+        new_w = w_half + rw
+        mixed_groups = {}
+        for name, mine in packed.items():
+            mixed = (w_half * mine + rw * recv[name]) / new_w
+            mixed_groups[name] = jax.tree.map(
+                lambda x, ref: x.astype(ref.dtype),
+                unravel[name](mixed), groups[name])
+        return part.join(mixed_groups), new_w
+
+    return mix
+
+
+# ---------------------------------------------------------------------------
 # DDP train step (baseline)
 # ---------------------------------------------------------------------------
 
@@ -88,13 +320,12 @@ def make_ddp_train_step(model: Model, mesh, optimizer: Optimizer,
                         overrides: Optional[Dict[str, Any]] = None,
                         preset: Optional[str] = None) -> ProdStep:
     cfg = model.cfg
+    fwd = forward_lane(model.loss_fn)
+    upd = backward_update_lane(optimizer, schedule)
 
     def step(params, opt_state, batch, step_idx):
-        (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
-            params, batch)
-        lr = schedule(step_idx)
-        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
-        params = apply_updates(params, updates)
+        loss, grads = fwd(params, batch)
+        params, opt_state, _, _ = upd(params, opt_state, grads, (), step_idx)
         return params, opt_state, loss
 
     p_sh = SH.param_shardings(model, mesh, overrides=overrides,
@@ -115,19 +346,40 @@ def make_ddp_train_step(model: Model, mesh, optimizer: Optimizer,
     return ProdStep(fn, abstract, "ddp train")
 
 
+def _param_path_index(abstract_params, per_param):
+    """{param tree-path → (shape, per-param value)} for suffix matching."""
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    vals = jax.tree.leaves(per_param)
+    return {jax.tree_util.keystr(path): (leaf.shape, v)
+            for (path, leaf), v in zip(flat_p, vals)}
+
+
+def _match_param(path, leaf, index):
+    """Optimizer states nest the param tree under wrapper keys ("mu"/"nu"
+    slots, etc.): match the longest tree-path *suffix* that names a param of
+    the same shape. Keying by path (not leaf.shape) keeps two identically
+    shaped params with different shardings from colliding (last-wins)."""
+    for i in range(len(path)):
+        hit = index.get(jax.tree_util.keystr(path[i:]))
+        if hit is not None and hit[0] == leaf.shape:
+            return hit[1]
+    return None
+
+
 def _opt_shardings(optimizer, abstract_params, p_sh, mesh):
-    """Optimizer-state shardings: leaves that mirror a param shape get that
-    param's sharding; scalars are replicated."""
+    """Optimizer-state shardings: leaves whose tree path mirrors a param
+    path (module-prefix-stripped) get that param's sharding; the rest are
+    replicated."""
     abstract_opt = jax.eval_shape(optimizer.init, abstract_params)
-    flat_p = {l.shape: s for l, s in zip(jax.tree.leaves(abstract_params),
-                                         jax.tree.leaves(p_sh))}
-
-    def pick(leaf):
-        if leaf.shape in flat_p:
-            return flat_p[leaf.shape]
-        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
-
-    return jax.tree.map(pick, abstract_opt)
+    index = _param_path_index(abstract_params, p_sh)
+    flat_o, treedef = jax.tree_util.tree_flatten_with_path(abstract_opt)
+    out = []
+    for path, leaf in flat_o:
+        sh = _match_param(path, leaf, index)
+        if sh is None:
+            sh = NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+        out.append(sh)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------
@@ -160,82 +412,19 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
     # layer-group partition shared with the sim backend's v2 hooks: gossip
     # messages are layer groups, not loose leaves (DESIGN.md §1/§2)
     part = LayerPartition(model.abstract_params())
-
-    def gossip_mix(tree, w, shift_idx):
-        """Push-sum ring-shift gossip: every worker sends to i+s and receives
-        from i−s. Each layer group's leaves are packed into ONE flat f32
-        buffer, so the wire carries exactly one collective per layer group
-        (f32 is a lossless container for bf16; the mix runs in f32 anyway)."""
-        groups = part.split(tree)
-        packed, unravel = {}, {}
-        for name, sub in groups.items():
-            packed[name], unravel[name] = ravel_pytree(
-                jax.tree.map(lambda v: v.astype(jnp.float32), sub))
-
-        def branch(s):
-            perm = [(i, (i + s) % M) for i in range(M)]
-
-            def run(args):
-                packed, w_half = args
-                recv = {name: jax.lax.ppermute(v, ax, perm)
-                        for name, v in packed.items()}
-                rw = jax.lax.ppermute(w_half, ax, perm)
-                return recv, rw
-
-            return run
-
-        w_half = w * 0.5
-        recv, rw = jax.lax.switch(shift_idx, [branch(s) for s in shifts],
-                                  (packed, w_half))
-        new_w = w_half + rw
-        mixed_groups = {}
-        for name, mine in packed.items():
-            mixed = (w_half * mine + rw * recv[name]) / new_w
-            mixed_groups[name] = jax.tree.map(
-                lambda x, ref: x.astype(ref.dtype),
-                unravel[name](mixed), groups[name])
-        return part.join(mixed_groups), new_w
+    fwd = forward_lane(model.loss_fn, accum_steps=accum_steps,
+                       grad_specs=grad_specs if constrain_grads else None)
+    upd = backward_update_lane(optimizer, schedule)
+    mix = gossip_lane(part, M, ax, shifts)
 
     def worker_fn(params_st, opt_st, w_st, batch, step_idx, shift_idx):
         params = jax.tree.map(lambda x: x[0], params_st)
         opt_state = jax.tree.map(
             lambda x: x[0] if x.ndim >= 1 else x, opt_st)
         w = w_st[0]
-        if accum_steps > 1:
-            # microbatched gradient accumulation (§Perf memory lever):
-            # activation footprint scales with the microbatch, not the
-            # worker batch
-            def micro(b):
-                return jax.value_and_grad(model.loss_fn, has_aux=True)(
-                    params, b)
-
-            mb = jax.tree.map(
-                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
-                                    + x.shape[1:]), batch)
-
-            def acc_body(carry, b):
-                (l, _), g = micro(b)
-                return jax.tree.map(lambda a, x: a + x, carry,
-                                    {"l": l, "g": g}), ()
-
-            zero = {"l": jnp.zeros((), jnp.float32),
-                    "g": jax.tree.map(
-                        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
-            tot, _ = jax.lax.scan(acc_body, zero, mb)
-            loss = tot["l"] / accum_steps
-            grads = jax.tree.map(lambda g, p: (g / accum_steps).astype(p.dtype),
-                                 tot["g"], params)
-        else:
-            (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
-                params, batch)
-        if constrain_grads:
-            grads = jax.tree.map(
-                lambda g, s: jax.lax.with_sharding_constraint(g, s),
-                grads, grad_specs)
-        lr = schedule(step_idx)
-        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
-        params = apply_updates(params, updates)
-        params, w = gossip_mix(params, w, shift_idx)
+        loss, grads = fwd(params, batch)
+        params, opt_state, _, _ = upd(params, opt_state, grads, (), step_idx)
+        params, w = mix(params, w, shift_idx)
         loss = jax.lax.pmean(loss, worker_axes)
         restack = lambda t: jax.tree.map(lambda x: x[None], t)
         return (restack(params), restack(opt_state), w[None], loss)
@@ -251,13 +440,8 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
         abstract_opt_single)
     opt_specs = jax.tree.map(lambda _: pw, abstract_opt_single)
 
-    def batch_pspec(s):
-        # M-RoPE positions are (3, B, S): worker axis is dim 1
-        if len(s.shape) == 3 and s.shape[0] == 3 and s.dtype == jnp.int32:
-            return P(None, worker_axes if len(worker_axes) > 1 else worker_axes[0])
-        return pw
-
-    batch_specs_sm = jax.tree.map(batch_pspec, _abstract_batch(cfg, shape))
+    batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax),
+                                  _abstract_batch(cfg, shape))
     fn_sm = shard_map(
         worker_fn, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: pw, abstract_params), opt_specs,
@@ -289,22 +473,344 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
 
 
 def _opt_shardings_stacked(abstract_opt_single, abstract_params, p_sh, mesh, M):
-    flat_p = {l.shape: s.spec for l, s in zip(jax.tree.leaves(abstract_params),
-                                              jax.tree.leaves(p_sh))}
+    index = _param_path_index(abstract_params,
+                              [s.spec for s in jax.tree.leaves(p_sh)])
     worker_part = jax.tree.leaves(p_sh)[0].spec[0]  # ('pod','data') part
-
-    def pick(leaf):
-        if leaf.shape in flat_p:
-            return NamedSharding(mesh, flat_p[leaf.shape])
-        return NamedSharding(mesh, P(worker_part,
-                                     *([None] * len(leaf.shape))))
-
-    return jax.tree.map(pick, abstract_opt_single)
+    flat_o, treedef = jax.tree_util.tree_flatten_with_path(
+        abstract_opt_single)
+    out = []
+    for path, leaf in flat_o:
+        spec = _match_param(path, leaf, index)
+        if spec is None:
+            spec = P(worker_part, *([None] * len(leaf.shape)))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------
-# serving steps
+# Decoupled LayUp train step (PD-ASGD execution, production form)
 # ---------------------------------------------------------------------------
+
+
+def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
+                         mix: Callable, M: int, worker_axes, D: int,
+                         squeeze_batch: bool = False,
+                         active_fn: Optional[Callable] = None):
+    """Per-worker decoupled step body (traced inside shard_map).
+
+    Arguments arrive worker-stacked with a leading axis of 1 (the shard):
+    ``(read, write, opt, w, versions[, fifo_g, fifo_stamp], batch, step_idx,
+    shift_idx)`` — the fifo args are present iff ``D > 0``. The three lanes
+    compose: forward on the READ buffer, delayed update on the WRITE buffer,
+    gossip on the updated write copy, then the per-layer-group buffer swap
+    (read adopts each mixed group; its clock is stamped ``t + phi_g``)."""
+    phi = jnp.asarray(send_fractions(part.num_groups))
+    unstack = lambda t: jax.tree.map(lambda x: x[0], t)
+    unstack_opt = lambda t: jax.tree.map(
+        lambda x: x[0] if x.ndim >= 1 else x, t)
+    restack = lambda t: jax.tree.map(lambda x: x[None], t)
+
+    def worker_fn(*args):
+        if D > 0:
+            (read_st, write_st, opt_st, w_st, versions,
+             fifo_g_st, fifo_stamp, batch, step_idx, shift_idx) = args
+            fifo = {"g": unstack(fifo_g_st), "stamp": fifo_stamp}
+        else:
+            (read_st, write_st, opt_st, w_st, versions,
+             batch, step_idx, shift_idx) = args
+            fifo = ()
+        read = unstack(read_st)
+        write = unstack(write_st)
+        opt_state = unstack_opt(opt_st)
+        w = w_st[0]
+        if squeeze_batch:  # sim-layout batches carry a leading worker axis
+            batch = unstack(batch)
+
+        # forward lane: consumes the read buffer (content = updates through
+        # step t − 1 − D; never sees the write buffer mid-mutation)
+        loss, grads = fwd(read, batch)
+        # backward/update lane: delayed gradient lands on the write buffer
+        active = active_fn(step_idx) if active_fn is not None else None
+        write, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
+                                                fifo, step_idx,
+                                                active=active)
+        # gossip lane: per-layer-group push-sum ring mix of the write copy
+        write, w = mix(write, w, shift_idx)
+        # buffer swap: the read copy adopts the mixed write copy and each
+        # group clock is stamped with its generation time t + phi_g. In the
+        # real async system this is a per-group pointer flip as each
+        # delayed gradient lands mid-backward; in the jitted step the swap
+        # is the state carry (read == write at every step boundary — all
+        # numeric staleness lives in the gradient FIFO, which is what keeps
+        # R=1/D=0 exactly equal to the sim trainer). On the ring every
+        # worker receives every step; with M == 1 nothing is received.
+        read = write
+        if M > 1:
+            versions = stamp_groups(versions,
+                                    step_idx.astype(jnp.float32) + phi)
+        loss = jax.lax.pmean(loss, worker_axes)
+        outs = [restack(read), restack(write), restack(opt_state), w[None],
+                versions]
+        if D > 0:
+            outs += [restack(fifo["g"]), fifo["stamp"]]
+        return tuple(outs) + (loss, upd_stale)
+
+    return worker_fn
+
+
+def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
+                         part: Optional[LayerPartition] = None):
+    """Initial step state for the decoupled lane.
+
+    ``read`` and ``write`` start as identical copies. Both are fresh
+    buffers (the step donates its state, so it must not alias the caller's
+    ``params_stacked``, and read/write must not alias each other); the
+    gradient FIFO holds zeros with stamp −1 (warm-up no-ops)."""
+    M = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
+    single = jax.tree.map(lambda x: x[0], params_stacked)
+    part = part or LayerPartition(single)
+    D = int(update_delay)
+    state = {
+        "read": jax.tree.map(jnp.copy, params_stacked),
+        "write": jax.tree.map(jnp.copy, params_stacked),
+        "opt": jax.vmap(optimizer.init)(params_stacked),
+        "w": jnp.full((M,), 1.0 / M, jnp.float32),
+        "versions": part.init_versions(M),
+    }
+    if D > 0:
+        state["fifo"] = fifo_init(single, D, M)
+    return state
+
+
+def _decoupled_metrics(w, versions, loss, upd_stale, step_idx):
+    out = {"loss": loss, "update_staleness": upd_stale,
+           "weight_sum": jnp.sum(w)}
+    out.update(version_metrics(versions, step_idx))
+    return out
+
+
+def _decoupled_state_specs(D: int, pw):
+    """shard_map specs for the flattened decoupled state
+    (read, write, opt, w, versions[, fifo_g, fifo_stamp])."""
+    return [pw] * 5 + ([pw, P()] if D > 0 else [])
+
+
+def _decoupled_step_caller(fn_sm, D: int):
+    """Adapt the flat shard_map'd worker fn to the dict state + metrics
+    step signature shared by both decoupled entry points."""
+
+    def step(state, batch, step_idx, shift_idx):
+        args = [state["read"], state["write"], state["opt"], state["w"],
+                state["versions"]]
+        if D > 0:
+            args += [state["fifo"]["g"], state["fifo"]["stamp"]]
+        outs = fn_sm(*args, batch, step_idx, shift_idx)
+        read, write, opt, w, versions = outs[:5]
+        loss, upd_stale = outs[-2:]
+        new_state = {"read": read, "write": write, "opt": opt, "w": w,
+                     "versions": versions}
+        if D > 0:
+            new_state["fifo"] = {"g": outs[5], "stamp": outs[6]}
+        return new_state, _decoupled_metrics(w, versions, loss, upd_stale,
+                                             step_idx)
+
+    return step
+
+
+def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
+                                    schedule: Callable, shape: ShapeConfig,
+                                    shifts: Sequence[int] = (1, 2, 4, 8),
+                                    overrides: Optional[Dict[str, Any]] = None,
+                                    preset: Optional[str] = None,
+                                    fb_ratio: int = 2,
+                                    update_delay: int = 1,
+                                    constrain_grads: bool = False) -> ProdStep:
+    """The paper's decoupled execution on the real mesh.
+
+    Step signature: ``fn(state, batch, step_idx, shift_idx) -> (state,
+    metrics)`` where ``state`` is the dict built by
+    :func:`make_decoupled_state` (double-buffered params + opt state +
+    push-sum weights + per-group version clocks + D-deep gradient FIFO) and
+    ``metrics`` carries loss / update_staleness / layer_staleness /
+    staleness_mean / weight_sum — the same accounting the sim trainer
+    reports, so sim-vs-prod parity is assertable key by key."""
+    cfg = model.cfg
+    worker_axes = data_axes(mesh)
+    ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    M = num_workers(mesh)
+    R, D = int(fb_ratio), int(update_delay)
+    if shape.global_batch % (M * max(R, 1)):
+        raise ValueError(
+            f"global_batch={shape.global_batch} must divide by "
+            f"M*R={M}*{R} for the decoupled forward lane")
+    shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
+
+    grad_specs = None
+    if constrain_grads:
+        rules_g = SH.rules_for(mesh, overrides, preset)
+        from repro.models.layers import is_spec
+        grad_specs = jax.tree.map(
+            lambda sp: SH.spec_for_axes(tuple(sp.axes), rules_g, mesh,
+                                        tuple(sp.shape)),
+            model.specs, is_leaf=is_spec)
+
+    part = LayerPartition(model.abstract_params())
+    fwd = forward_lane(model.loss_fn, fb_ratio=R, grad_specs=grad_specs)
+    upd = backward_update_lane(optimizer, schedule, update_delay=D)
+    mix = gossip_lane(part, M, ax, shifts)
+    worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes, D)
+
+    pw = P(ax)
+    abstract_params = model.abstract_params()
+    stack = lambda s: jax.ShapeDtypeStruct((M,) + tuple(s.shape), s.dtype)
+    stacked_params = jax.tree.map(stack, abstract_params)
+    abstract_opt_single = jax.eval_shape(optimizer.init, abstract_params)
+    stacked_opt = jax.tree.map(stack, abstract_opt_single)
+    abstract_state = {
+        "read": stacked_params,
+        "write": stacked_params,
+        "opt": stacked_opt,
+        "w": jax.ShapeDtypeStruct((M,), jnp.float32),
+        "versions": jax.ShapeDtypeStruct((M, part.num_groups), jnp.float32),
+    }
+    if D > 0:
+        abstract_state["fifo"] = {
+            "g": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((M, D) + tuple(s.shape),
+                                               jnp.float32), abstract_params),
+            "stamp": jax.ShapeDtypeStruct((D,), jnp.float32),
+        }
+
+    batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax),
+                                  _abstract_batch(cfg, shape))
+    state_specs = _decoupled_state_specs(D, pw)
+    fn_sm = shard_map(
+        worker_fn, mesh=mesh,
+        in_specs=tuple(state_specs + [batch_specs_sm, P(), P()]),
+        out_specs=tuple(state_specs + [P(), P()]),
+        axis_names=set(worker_axes))
+    step = _decoupled_step_caller(fn_sm, D)
+
+    # model-axis sharding flows in through jit in_shardings (auto axis)
+    p_sh = SH.param_shardings(model, mesh, stacked_workers=M,
+                              overrides=overrides, preset=preset)
+    opt_sh = _opt_shardings_stacked(abstract_opt_single, abstract_params,
+                                    p_sh, mesh, M)
+    w_sh = NamedSharding(mesh, pw)
+    scalar = NamedSharding(mesh, P())
+    state_sh = {"read": p_sh, "write": p_sh, "opt": opt_sh, "w": w_sh,
+                "versions": w_sh}
+    if D > 0:
+        # FIFO leaves insert the depth axis after the worker axis
+        state_sh["fifo"] = {
+            "g": jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P(s.spec[0], None, *tuple(s.spec)[1:])), p_sh),
+            "stamp": scalar,
+        }
+    metrics_sh = {"loss": scalar, "update_staleness": scalar,
+                  "layer_staleness": scalar, "staleness_mean": scalar,
+                  "weight_sum": scalar}
+    batch_abs = _abstract_batch(cfg, shape)
+    b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
+                              preset=preset)
+    fn = jax.jit(step,
+                 in_shardings=(state_sh, b_sh, scalar, scalar),
+                 out_shardings=(state_sh, metrics_sh),
+                 donate_argnums=(0,))
+    abstract = (abstract_state, batch_abs,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return ProdStep(fn, abstract,
+                    f"layup decoupled train (M={M}, R={R}, D={D}, "
+                    f"shifts={shifts})")
+
+
+def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
+                                   schedule: Callable, mesh, *,
+                                   shifts: Sequence[int] = (1, 2, 4, 8),
+                                   fb_ratio: int = 1, update_delay: int = 0,
+                                   straggler_delays=None,
+                                   measure_drift: bool = False):
+    """Decoupled LayUp over a generic pytree + loss_fn (no Model/ShapeConfig)
+    — the engine behind the ``"prod"`` TrainerBackend (core/backend.py).
+
+    Batches use the sim layout: every leaf carries a leading ``(M,)`` worker
+    axis, so the same data pipeline drives the sim and prod backends.
+    ``straggler_delays[i] = d`` makes worker ``i`` apply its local update
+    only every ``d + 1`` steps (it still gossips and receives, paper §5.4)
+    — the numeric analogue of the sim backend's straggler mask.
+    ``measure_drift`` adds the ``disagreement`` metric, computed inside the
+    jitted step like the sim trainer does.
+
+    Returns ``(init_fn, step_fn, shifts)``: ``init_fn(rng, params_single)
+    -> state``, ``step_fn(state, batch, step_idx, shift_idx) -> (state,
+    metrics)``, and the effective (mod-M-filtered) gossip shift set the
+    caller draws ``shift_idx`` from."""
+    worker_axes = data_axes(mesh)
+    ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    M = num_workers(mesh)
+    R, D = int(fb_ratio), int(update_delay)
+    shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
+
+    active_fn = None
+    if straggler_delays is not None:
+        delays_c = jnp.asarray(np.asarray(straggler_delays), jnp.int32)
+        sizes = [mesh.shape[a] for a in worker_axes]
+
+        def active_fn(step_idx):
+            idx = jnp.zeros((), jnp.int32)
+            for a, n in zip(worker_axes, sizes):
+                idx = idx * n + jax.lax.axis_index(a)
+            return (jnp.mod(step_idx, delays_c[idx] + 1) == 0).astype(
+                jnp.float32)
+
+    part_box = {}
+
+    def build(params_single):
+        part = LayerPartition(params_single)
+        fwd = forward_lane(loss_fn, fb_ratio=R)
+        upd = backward_update_lane(optimizer, schedule, update_delay=D)
+        mix = gossip_lane(part, M, ax, shifts)
+        worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes,
+                                         D, squeeze_batch=True,
+                                         active_fn=active_fn)
+        pw = P(ax)
+        state_specs = _decoupled_state_specs(D, pw)
+        fn_sm = shard_map(worker_fn, mesh=mesh,
+                          in_specs=tuple(state_specs + [pw, P(), P()]),
+                          out_specs=tuple(state_specs + [P(), P()]),
+                          axis_names=set(worker_axes))
+        base_step = _decoupled_step_caller(fn_sm, D)
+
+        def step(state, batch, step_idx, shift_idx):
+            new_state, metrics = base_step(state, batch, step_idx, shift_idx)
+            if measure_drift:
+                from repro.core.api import disagreement
+                metrics["disagreement"] = disagreement(new_state["read"],
+                                                       new_state["w"])
+            return new_state, metrics
+
+        return jax.jit(step, donate_argnums=(0,)), part
+
+    def init_fn(rng, params_single):
+        del rng
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (M,) + p.shape),
+            params_single)
+        if "step" not in part_box:
+            part_box["step"], part_box["part"] = build(params_single)
+        return make_decoupled_state(stacked, optimizer, update_delay=D,
+                                    part=part_box["part"])
+
+    def step_fn(state, batch, step_idx, shift_idx):
+        if "step" not in part_box:
+            raise RuntimeError("call init_fn before step_fn")
+        return part_box["step"](state, batch,
+                                jnp.asarray(step_idx, jnp.int32),
+                                jnp.asarray(shift_idx, jnp.int32))
+
+    return init_fn, step_fn, shifts
 
 
 def make_prefill_step(model: Model, mesh, shape: ShapeConfig,
@@ -366,14 +872,28 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
               shifts: Sequence[int] = (1, 2, 4, 8),
               preset: Optional[str] = None,
               accum_steps: int = 1,
-              constrain_grads: bool = False) -> ProdStep:
+              constrain_grads: bool = False,
+              fb_ratio: int = 1,
+              update_delay: int = 0) -> ProdStep:
     from repro.optim import momentum, constant
     optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
     schedule = schedule or constant(0.1)
+    decoupled = fb_ratio > 1 or update_delay > 0
+    if decoupled and (shape.kind != "train" or algo == "ddp"):
+        raise ValueError(
+            "fb_ratio/update_delay define the decoupled LayUp lane; they "
+            f"do not apply to algo={algo!r} kind={shape.kind!r}")
     if shape.kind == "train":
         if algo == "ddp":
             return make_ddp_train_step(model, mesh, optimizer, schedule,
                                        shape, overrides, preset)
+        if decoupled:
+            if accum_steps > 1:
+                raise ValueError(
+                    "the decoupled lane does not compose with accum_steps")
+            return make_layup_decoupled_train_step(
+                model, mesh, optimizer, schedule, shape, shifts, overrides,
+                preset, fb_ratio, update_delay, constrain_grads)
         return make_layup_train_step(model, mesh, optimizer, schedule, shape,
                                      shifts, overrides, preset, accum_steps,
                                      constrain_grads)

@@ -1,0 +1,23 @@
+"""Shared subprocess runner for the mesh tests (XLA device-count flags must
+be set before jax init, so these run out-of-process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, timeout=1800):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    # pin the CPU platform: with libtpu present, an unset JAX_PLATFORMS
+    # makes each subprocess spend ~7 min probing a TPU backend before
+    # falling back to CPU (the host-device-count flag applies to the CPU
+    # platform anyway) — most of what made these tests "slow"
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout

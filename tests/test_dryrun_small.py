@@ -1,25 +1,9 @@
 """Integration: the production train/serve steps lower, compile AND RUN on a
 small (2,2)/(2,2,2) host-device mesh in a subprocess (XLA device-count flags
 must be set before jax init, so these run out-of-process)."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run(code: str, timeout=900):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env)
-    assert r.returncode == 0, r.stdout + "\n" + r.stderr
-    return r.stdout
+from _subproc import run_sub as _run
 
 
 PRELUDE = """

@@ -70,3 +70,51 @@ class TestSpecForAxes:
         spec = SH.spec_for_axes(("worker", "embed", "ffn"), rules, MESH3,
                                 (32, 4096, 14336))
         assert spec == P(("pod", "data"), None, "model")
+
+
+class TestOptShardings:
+    """Optimizer-state shardings are keyed by tree path, not leaf shape:
+    two params with identical shapes but different shardings must not
+    collide (the old shape-keyed dict was last-wins)."""
+
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_same_shape_params_keep_distinct_shardings(self):
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from repro.launch.train import _opt_shardings
+        from repro.optim import adamw, momentum
+        mesh = self._mesh()
+        abstract = {"a": jax.ShapeDtypeStruct((4, 8), jnp.float32),
+                    "b": jax.ShapeDtypeStruct((4, 8), jnp.float32)}
+        p_sh = {"a": NamedSharding(mesh, P(None, "model")),
+                "b": NamedSharding(mesh, P("model", None))}
+        opt_sh = _opt_shardings(momentum(0.9), abstract, p_sh, mesh)
+        assert opt_sh["a"].spec == P(None, "model")
+        assert opt_sh["b"].spec == P("model", None)
+        # adamw nests the param tree under mu/nu and adds a scalar count:
+        # suffix matching strips the wrapper key; count is replicated
+        opt_sh = _opt_shardings(adamw(), abstract, p_sh, mesh)
+        assert opt_sh["mu"]["a"].spec == P(None, "model")
+        assert opt_sh["mu"]["b"].spec == P("model", None)
+        assert opt_sh["nu"]["a"].spec == P(None, "model")
+        assert opt_sh["count"].spec == P()
+
+    def test_stacked_variant_keys_by_path(self):
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from repro.launch.train import _opt_shardings_stacked
+        from repro.optim import adamw
+        mesh = self._mesh()
+        abstract = {"a": jax.ShapeDtypeStruct((4, 8), jnp.float32),
+                    "b": jax.ShapeDtypeStruct((4, 8), jnp.float32)}
+        p_sh = {"a": NamedSharding(mesh, P("data", None, "model")),
+                "b": NamedSharding(mesh, P("data", "model", None))}
+        opt_single = jax.eval_shape(adamw().init, abstract)
+        opt_sh = _opt_shardings_stacked(opt_single, abstract, p_sh, mesh, 1)
+        assert opt_sh["mu"]["a"].spec == P("data", None, "model")
+        assert opt_sh["mu"]["b"].spec == P("data", "model", None)
+        assert opt_sh["nu"]["b"].spec == P("data", "model", None)
+        # unmatched leaves (count) fall back to worker-stacked replication
+        assert opt_sh["count"].spec == P("data")
