@@ -30,6 +30,7 @@ class RunResult:
     total_time: float
     mfu: float
     staleness: np.ndarray = None  # per-step mean layer staleness
+    overlap: Optional[Dict] = None  # measured stage overlap (overlap=True)
 
 
 def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
@@ -38,12 +39,14 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
                   straggler_delays: Optional[np.ndarray] = None,
                   warmup: int = 20, seed: int = 0,
                   fb_ratio: int = 1, update_delay: int = 0,
-                  backend: str = "sim") -> RunResult:
+                  backend: str = "sim", overlap: bool = False) -> RunResult:
     """``backend`` selects the numeric engine: "sim" (vmapped workers, any
     algorithm) or "prod" (the decoupled shard_map lane on a real device
     mesh, layup family only — needs M local devices). Both consume the same
     worker batches and report the same metric keys, so the wall-clock join
-    with the event backend is identical."""
+    with the event backend is identical. ``overlap=True`` (prod only) runs
+    the stage-graph pipeline engine and attaches its measured per-stage
+    timeline summary as ``RunResult.overlap``."""
     from repro.data.synthetic import make_worker_batches
     sched = linear_warmup_cosine(lr, warmup, steps,
                                  warmup_lr=lr * 0.3)
@@ -59,9 +62,14 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
     if backend not in ("sim", "prod"):
         raise ValueError(f"numeric backend must be 'sim' or 'prod', "
                          f"not {backend!r}")
+    if overlap and backend != "prod":
+        raise ValueError("overlap=True is a prod-backend engine option")
+    # overlap is a prod-engine option only — it must not reach the event
+    # backend's kwargs
+    num_kw = dict(decoupled, overlap=True) if overlap else decoupled
     num = make_backend(backend, algo_name, M=M, loss_fn=loss_fn,
                        optimizer=momentum(0.9), schedule=sched,
-                       straggler_delays=straggler_delays, **decoupled)
+                       straggler_delays=straggler_delays, **num_kw)
     ev = make_backend("event", algo_name, M=M, hw=hw,
                       straggler_delays=straggler_delays, **decoupled)
 
@@ -69,16 +77,19 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
                   init_params_fn(jax.random.PRNGKey(seed + 1)))
     ev_st = ev.init(jax.random.PRNGKey(seed))
     rng = jax.random.PRNGKey(seed + 2)
-    losses, dis, stale, evals, esteps = [], [], [], [], []
+    raw, evals, esteps = [], [], []
     for t in range(steps):
         batch = jax.tree.map(jnp.asarray,
                              make_worker_batches(ds, M, batch_per_worker, t))
         rng, r = jax.random.split(rng)
         st, metrics = num.step(st, batch, r)
         ev_st, _ = ev.step(ev_st, None, None)
-        losses.append(float(metrics["loss"]))
-        dis.append(float(metrics["disagreement"]))
-        stale.append(float(metrics["staleness_mean"]))
+        # keep metrics as futures — a float() here would synchronize every
+        # step and serialize exactly the overlap the pipeline engine
+        # (overlap=True) exists to measure; conversion happens after the
+        # loop. Eval points still synchronize, which is inherent to
+        # evaluating a consensus snapshot.
+        raw.append(metrics)
         if (t + 1) % eval_every == 0 or t == steps - 1:
             # prod-lane state is a dict (read buffer + push-sum weights);
             # sim state is a TrainState
@@ -88,7 +99,15 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
             evals.append(float(eval_fn(xbar)))
             esteps.append(t + 1)
 
+    losses = [float(m["loss"]) for m in raw]
+    dis = [float(m["disagreement"]) for m in raw]
+    stale = [float(m["staleness_mean"]) for m in raw]
     sim = ev.result()
+    overlap_summary = None
+    if overlap:
+        num.timeline.finalize()
+        overlap_summary = num.timeline.summary()
     return RunResult(np.array(losses), np.array(dis), np.array(evals),
                      np.array(esteps), sim.total_time / steps,
-                     sim.total_time, sim.mfu, np.array(stale))
+                     sim.total_time, sim.mfu, np.array(stale),
+                     overlap_summary)

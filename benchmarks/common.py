@@ -19,13 +19,13 @@ def section(title: str):
     print(f"\n# === {title} ===", flush=True)
 
 
-def dump_json(tag: str, prefix: Optional[str] = None,
-              out_dir: Optional[str] = None) -> str:
+def dump_json(tag: str, prefix=None, out_dir: Optional[str] = None) -> str:
     """Write the emitted CSV lines as ``BENCH_<tag>.json`` — the artifact
     the nightly CI job uploads so the perf trajectory is tracked per run.
 
-    ``prefix`` restricts the dump to that metric-name prefix (modules share
-    the RESULTS buffer when driven by benchmarks.run)."""
+    ``prefix`` (a string or tuple of strings) restricts the dump to those
+    metric-name prefixes (modules share the RESULTS buffer when driven by
+    benchmarks.run)."""
     import json
     import os
     out_dir = out_dir or os.path.join(os.path.dirname(__file__), "results")
@@ -41,6 +41,27 @@ def dump_json(tag: str, prefix: Optional[str] = None,
         json.dump(rows, f, indent=1, sort_keys=True)
     print(f"# wrote {path} ({len(rows)} entries)", flush=True)
     return path
+
+
+def ensure_host_devices(n: int) -> None:
+    """Make sure jax will fake >= ``n`` host CPU devices. Must run BEFORE
+    jax initializes (the prod-backend benchmarks call it from their
+    __main__ guards). Appends the XLA flag if absent; if the environment
+    already pins a SMALLER count, raises the count to ``n`` (and says so)
+    rather than letting the backend fail with a device-count error."""
+    import os
+    import re
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m is None:
+        flags = (flags + f" --xla_force_host_platform_device_count={n}")
+    elif int(m.group(1)) < n:
+        print(f"# raising xla_force_host_platform_device_count "
+              f"{m.group(1)} -> {n} (needed for M={n} workers)", flush=True)
+        flags = re.sub(r"--xla_force_host_platform_device_count=\d+",
+                       f"--xla_force_host_platform_device_count={n}", flags)
+    os.environ["XLA_FLAGS"] = flags.strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 
 def time_to_target(values: np.ndarray, per_step_time: float, target: float,

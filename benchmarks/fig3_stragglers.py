@@ -11,7 +11,7 @@ import numpy as np
 
 from benchmarks.algo_runner import run_algorithm
 from benchmarks.common import emit, section
-from benchmarks.table1_vision import HW, _problem
+from benchmarks.table1_vision import _hw, _problem
 from repro.core.simulator import straggler_sweep
 
 ALGOS = ["ddp", "co2", "slowmo", "gosgd", "adpsgd", "layup"]
@@ -31,13 +31,13 @@ def main(steps=250, M=8, quick=False):
             r = run_algorithm(algo, ds=ds, init_params_fn=init,
                               loss_fn=loss_fn, eval_fn=eval_fn, M=M,
                               steps=steps, batch_per_worker=64, lr=0.08,
-                              hw=HW, straggler_delays=dl,
+                              hw=_hw(), straggler_delays=dl,
                               eval_every=steps)
             emit(f"fig3a.{algo}.delay{d}", 0.0,
                  f"acc={r.eval_metric[-1]:.4f}")
 
     section("Fig 3B analogue — training time vs straggler delay")
-    sweep = straggler_sweep(ALGOS, M=M, iters=steps, hw=HW, delays=DELAYS)
+    sweep = straggler_sweep(ALGOS, M=M, iters=steps, hw=_hw(), delays=DELAYS)
     for algo, times in sweep.items():
         for d, t in zip(DELAYS, times):
             emit(f"fig3b.{algo}.delay{d}", t / steps * 1e6, f"total_s={t:.1f}")

@@ -3,27 +3,39 @@ for all algorithms on the synthetic-vision task (CIFAR stand-in — the
 container has no GPUs or datasets; the task is a k-class Gaussian-prototype
 problem with an MLP, trained by the same 6 algorithms; wall-clock comes from
 the event-driven hardware simulator with ResNet-50-like timing).
+
+``--backend prod`` runs the layup family through the production decoupled
+shard_map lane (prod numerics joined with the same event-driven wall-clock)
+— it needs one host device per worker, so the flag must be set before jax
+initializes; the __main__ guard handles that, which is why every jax-touching
+import in this module is deferred into the functions.
+
+Every run emits metric-vs-wallclock curve rows
+(``table1.<backend>.<algo>.curve.NNN`` → accuracy at that wall-clock) and
+dumps them via ``benchmarks.common.dump_json`` so the nightly BENCH
+trajectory captures convergence curves, not just endpoints.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.algo_runner import run_algorithm
-from benchmarks.common import emit, section, time_to_target
-from repro.core.simulator import HardwareModel
-from repro.data.synthetic import SyntheticVision
-
 ALGOS = ["ddp", "co2", "slowmo", "gosgd", "adpsgd", "layup"]
 
-# ResNet-50 / CIFAR-ish timing on 3×A100 (paper C1): fwd 16.6 ms, bwd ~2×
-HW = HardwareModel(fwd_time=0.0166, bwd_ratio=1.8, num_layers=50,
-                   model_bytes=25.6e6 * 4, bandwidth=25e9,
-                   allreduce_bandwidth=60e9, kernel_mfu=0.45)
+M_WORKERS = 8
+
+
+def _hw():
+    from repro.core.simulator import HardwareModel
+    # ResNet-50 / CIFAR-ish timing on 3×A100 (paper C1): fwd 16.6ms, bwd ~2×
+    return HardwareModel(fwd_time=0.0166, bwd_ratio=1.8, num_layers=50,
+                         model_bytes=25.6e6 * 4, bandwidth=25e9,
+                         allreduce_bandwidth=60e9, kernel_mfu=0.45)
 
 
 def _problem(M):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data.synthetic import SyntheticVision
+
     ds = SyntheticVision(num_classes=10, dim=128, snr=0.9, seed=0)
     eval_rng = np.random.default_rng(10_000)
     eval_batch = ds.sample(eval_rng, 2048)
@@ -54,30 +66,69 @@ def _problem(M):
     return ds, init, loss_fn, eval_fn
 
 
-def main(steps=400, M=8, quick=False):
-    section("Table 1/2 analogue — vision convergence (accuracy/TTC/TTA)")
+def emit_curve(tag: str, r) -> None:
+    """Metric-vs-wallclock curve rows: one row per eval point, us_per_call
+    column = modeled wall-clock (µs) at that step."""
+    from benchmarks.common import emit
+    for i, (step, metric) in enumerate(zip(r.eval_steps, r.eval_metric)):
+        emit(f"{tag}.curve.{i:03d}", step * r.iter_time * 1e6,
+             f"metric={metric:.4f};step={int(step)}")
+
+
+def main(steps=400, M=M_WORKERS, quick=False, backend="sim",
+         fb_ratio=1, update_delay=0):
+    import numpy as np
+
+    from benchmarks.algo_runner import run_algorithm
+    from benchmarks.common import dump_json, emit, section
+
+    section(f"Table 1/2 analogue — vision convergence "
+            f"(accuracy/TTC/TTA, backend={backend})")
     if quick:
         steps = 150
     ds, init, loss_fn, eval_fn = _problem(M)
+    # the prod lane IS the layup gossip ring — barrier algorithms have no
+    # production decoupled form (repro.core.backend)
+    algos = ALGOS if backend == "sim" else ["layup"]
     results = {}
-    for algo in ALGOS:
+    for algo in algos:
         r = run_algorithm(algo, ds=ds, init_params_fn=init, loss_fn=loss_fn,
                           eval_fn=eval_fn, M=M, steps=steps,
-                          batch_per_worker=64, lr=0.08, hw=HW)
+                          batch_per_worker=64 * max(fb_ratio, 1), lr=0.08,
+                          hw=_hw(), backend=backend, fb_ratio=fb_ratio,
+                          update_delay=update_delay)
         results[algo] = r
-        emit(f"table1.{algo}.accuracy", r.iter_time * 1e6,
+        tag = f"table1.{algo}" if backend == "sim" else f"table1.prod.{algo}"
+        emit(f"{tag}.accuracy", r.iter_time * 1e6,
              f"acc={r.eval_metric[-1]:.4f};ttc_s={r.total_time:.1f};"
              f"mfu={r.mfu:.3f}")
+        emit_curve(tag, r)
     # TTA: target = best accuracy of the worst algorithm (paper's method)
     target = min(r.eval_metric.max() for r in results.values())
     for algo, r in results.items():
-        # find first eval step crossing target
         idx = np.argmax(r.eval_metric >= target)
         tta = (r.eval_steps[idx] * r.iter_time
                if (r.eval_metric >= target).any() else float("nan"))
-        emit(f"table2.{algo}.tta", tta * 1e6, f"target={target:.4f}")
+        tag = f"table2.{algo}" if backend == "sim" else f"table2.prod.{algo}"
+        emit(f"{tag}.tta", tta * 1e6, f"target={target:.4f}")
+    dump_json(f"table1_vision_{backend}" if backend != "sim"
+              else "table1_vision", prefix=("table1.", "table2."))
     return results
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", choices=["sim", "prod"], default="sim")
+    ap.add_argument("--fb-ratio", type=int, default=1)
+    ap.add_argument("--update-delay", type=int, default=0)
+    args = ap.parse_args()
+    if args.backend == "prod":
+        # one host device per worker; must be set before jax initializes
+        from benchmarks.common import ensure_host_devices
+        ensure_host_devices(M_WORKERS)
+    main(steps=args.steps, quick=args.quick, backend=args.backend,
+         fb_ratio=args.fb_ratio, update_delay=args.update_delay)

@@ -1,37 +1,47 @@
 """Paper Table 3 analogue (sequence modeling): perplexity + training time for
 all algorithms pre-training a small transformer LM on the synthetic Markov
 language (MiniPile stand-in), with GPT-2-Medium/8×A100 timing from the
-hardware simulator."""
+hardware simulator.
+
+``--backend prod`` runs the layup family through the production decoupled
+shard_map lane (needs one host device per worker — the __main__ guard sets
+the XLA flag before jax initializes, so jax-touching imports are deferred).
+Every run emits perplexity-vs-wallclock curve rows and dumps them via
+``benchmarks.common.dump_json``."""
 from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.algo_runner import run_algorithm
-from benchmarks.common import emit, section
-from repro.configs.base import ModelConfig
-from repro.data.synthetic import SyntheticLM
-from repro.core.simulator import HardwareModel
-from repro.models import build_model
 
 ALGOS = ["ddp", "co2", "slowmo", "gosgd", "adpsgd", "layup"]
 
-# GPT-2 Medium on 8×A100-40G (paper C2): ~400M params fp32
-HW = HardwareModel(fwd_time=0.11, bwd_ratio=2.0, num_layers=24,
-                   model_bytes=0.4e9 * 4, bandwidth=100e9,
-                   allreduce_bandwidth=150e9, kernel_mfu=0.70)
+M_WORKERS = 4
 
-BENCH_CFG = ModelConfig(
-    name="bench-lm", family="dense", num_layers=2, d_model=128,
-    num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=128,
-    tie_embeddings=True)
+
+def _hw():
+    from repro.core.simulator import HardwareModel
+    # GPT-2 Medium on 8×A100-40G (paper C2): ~400M params fp32
+    return HardwareModel(fwd_time=0.11, bwd_ratio=2.0, num_layers=24,
+                         model_bytes=0.4e9 * 4, bandwidth=100e9,
+                         allreduce_bandwidth=150e9, kernel_mfu=0.70)
+
+
+def _bench_cfg():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(
+        name="bench-lm", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=128,
+        tie_embeddings=True)
 
 
 def _problem(M, seq=64):
-    ds = SyntheticLM(vocab=BENCH_CFG.vocab_size, seq_len=seq,
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data.synthetic import SyntheticLM
+    from repro.models import build_model
+
+    cfg = _bench_cfg()
+    ds = SyntheticLM(vocab=cfg.vocab_size, seq_len=seq,
                      temperature=1.2, seed=0)
-    model = build_model(BENCH_CFG)
+    model = build_model(cfg)
     eval_rng = np.random.default_rng(77)
     eb = ds.sample(eval_rng, 128)
     eval_batch = {k: jnp.asarray(v) for k, v in eb.items()}
@@ -46,26 +56,56 @@ def _problem(M, seq=64):
     return ds, model, loss_fn, eval_ppl
 
 
-def main(steps=300, M=4, quick=False):
-    section("Table 3 analogue — LM pre-training (perplexity/time)")
+def main(steps=300, M=M_WORKERS, quick=False, backend="sim",
+         fb_ratio=1, update_delay=0):
+    import numpy as np
+
+    from benchmarks.algo_runner import run_algorithm
+    from benchmarks.common import dump_json, emit, section
+    from benchmarks.table1_vision import emit_curve
+
+    section(f"Table 3 analogue — LM pre-training "
+            f"(perplexity/time, backend={backend})")
     if quick:
         steps = 120
     ds, model, loss_fn, eval_ppl = _problem(M)
     floor = float(np.exp(ds.entropy))
     print(f"# irreducible ppl floor (Markov entropy): {floor:.2f}")
+    algos = ALGOS if backend == "sim" else ["layup"]
     out = {}
-    for algo in ALGOS:
+    for algo in algos:
         r = run_algorithm(algo, ds=ds,
                           init_params_fn=lambda rng: model.init(rng),
                           loss_fn=loss_fn, eval_fn=eval_ppl, M=M,
-                          steps=steps, batch_per_worker=16, lr=0.15, hw=HW,
-                          eval_every=max(steps // 6, 1))
+                          steps=steps,
+                          batch_per_worker=16 * max(fb_ratio, 1), lr=0.15,
+                          hw=_hw(), eval_every=max(steps // 6, 1),
+                          backend=backend, fb_ratio=fb_ratio,
+                          update_delay=update_delay)
         out[algo] = r
-        emit(f"table3.{algo}", r.iter_time * 1e6,
+        tag = f"table3.{algo}" if backend == "sim" else f"table3.prod.{algo}"
+        emit(tag, r.iter_time * 1e6,
              f"ppl={r.eval_metric[-1]:.2f};time_s={r.total_time:.1f};"
              f"floor={floor:.2f}")
+        emit_curve(tag, r)
+    dump_json(f"table3_lm_{backend}" if backend != "sim" else "table3_lm",
+              prefix="table3.")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", choices=["sim", "prod"], default="sim")
+    ap.add_argument("--fb-ratio", type=int, default=1)
+    ap.add_argument("--update-delay", type=int, default=0)
+    args = ap.parse_args()
+    if args.backend == "prod":
+        # one host device per worker; must be set before jax initializes
+        from benchmarks.common import ensure_host_devices
+        ensure_host_devices(M_WORKERS)
+    main(steps=args.steps, quick=args.quick, backend=args.backend,
+         fb_ratio=args.fb_ratio, update_delay=args.update_delay)

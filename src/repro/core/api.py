@@ -247,9 +247,12 @@ def make_sim_trainer(algo: DistAlgorithm, loss_fn: Callable, optimizer: Optimize
         opt_state = jax.vmap(optimizer.init)(params)
         delay = ()
         if D > 0:
+            # FIFO buffers live in the params' dtypes (matching the prod
+            # lane's fifo_init) so sim-vs-prod D>0 parity holds for any
+            # parameter dtype, not just f32
             delay = {
                 "g": jax.tree.map(
-                    lambda p: jnp.zeros((D,) + p.shape, jnp.float32), params),
+                    lambda p: jnp.zeros((D,) + p.shape, p.dtype), params),
                 "stamp": jnp.full((D,), -1.0, jnp.float32),
             }
         return TrainState(
@@ -293,7 +296,7 @@ def make_sim_trainer(algo: DistAlgorithm, loss_fn: Callable, optimizer: Optimize
             delay = {
                 "g": jax.tree.map(
                     lambda b, g: jnp.concatenate(
-                        [b[1:], g[None].astype(jnp.float32)], axis=0),
+                        [b[1:], g[None].astype(b.dtype)], axis=0),
                     delay["g"], grads),
                 "stamp": jnp.concatenate(
                     [delay["stamp"][1:],

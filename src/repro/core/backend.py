@@ -166,15 +166,26 @@ class ProdTrainerBackend:
 
     ``mesh`` defaults to an (M, 1) ('data', 'model') mesh over the local
     devices; pass an explicit mesh to add tensor parallelism. The per-step
-    gossip shift is drawn from ``shifts`` with the step rng, mirroring the
-    lockstep prod step's ``lax.switch`` hypercube schedule."""
+    gossip shift is drawn from ``shifts`` by a HOST-side numpy generator
+    seeded at init (deterministic per run, identical across the monolithic
+    and overlap paths); the protocol's per-step ``rng`` argument is NOT
+    used by this backend — a device-side draw would be a device-0
+    computation whose reshard serializes the pipeline engine's dispatch.
+
+    ``overlap=True`` swaps the monolithic jitted step for the stage-graph
+    pipeline engine (``repro.launch.pipeline``): the same lanes compiled
+    into separately jitted fwd-slice / bwd+update / gossip stages that the
+    host dispatches asynchronously, recording per-stage dispatch/complete
+    timestamps on ``self.timeline``. Numerics are identical (the monolithic
+    path is the oracle); ``summary()`` gains the measured overlap fields."""
 
     kind = "prod"
 
     def __init__(self, algo, loss_fn: Callable, optimizer, schedule,
                  M: int, *, mesh=None, shifts=(1, 2, 4, 8),
                  fb_ratio: int = 1, update_delay: int = 0,
-                 straggler_delays=None, measure_drift: bool = True):
+                 straggler_delays=None, measure_drift: bool = True,
+                 overlap: bool = False):
         import jax
         from repro.launch.mesh import num_workers
         from repro.launch.train import make_decoupled_backend_trainer
@@ -200,29 +211,69 @@ class ProdTrainerBackend:
                 f"expected M={M}")
         self.M = M
         self.mesh = mesh
-        self._init_fn, self._step_fn, self._shifts = \
-            make_decoupled_backend_trainer(
-                loss_fn, optimizer, schedule, mesh, shifts=shifts,
-                fb_ratio=fb_ratio, update_delay=update_delay,
-                straggler_delays=straggler_delays,
-                measure_drift=measure_drift)
+        self.overlap = bool(overlap)
+        if overlap:
+            from repro.launch.pipeline import (StageTimeline,
+                                               make_pipeline_backend_trainer)
+            self.timeline = StageTimeline()
+            self._init_fn, self._step_fn, self._shifts, self._engine_box = \
+                make_pipeline_backend_trainer(
+                    loss_fn, optimizer, schedule, mesh, shifts=shifts,
+                    fb_ratio=fb_ratio, update_delay=update_delay,
+                    straggler_delays=straggler_delays,
+                    measure_drift=measure_drift, timeline=self.timeline)
+        else:
+            self.timeline = None
+            self._engine_box = {}
+            self._init_fn, self._step_fn, self._shifts = \
+                make_decoupled_backend_trainer(
+                    loss_fn, optimizer, schedule, mesh, shifts=shifts,
+                    fb_ratio=fb_ratio, update_delay=update_delay,
+                    straggler_delays=straggler_delays,
+                    measure_drift=measure_drift)
         self._steps = 0
         self._last: Dict[str, Any] = {}
+        # host-side gossip-shift schedule: deterministic per backend, no
+        # per-step device RNG (a jax.random draw is a device-0 computation
+        # whose reshard would serialize the pipeline engine's dispatch)
+        self._shift_rng = np.random.default_rng(0xC0FFEE)
+
+    @property
+    def engine(self):
+        """The PipelineEngine (overlap=True, after init); else None."""
+        return self._engine_box.get("engine")
 
     def init(self, rng, params_single):
         self._steps = 0
+        self._shift_rng = np.random.default_rng(0xC0FFEE)
+        if self.engine is not None:
+            # re-init measures a fresh run: stale events would collide in
+            # the overlap accounting's event index
+            self.engine.reset()
+        elif self.timeline is not None:  # overlap=True, first init
+            self.timeline.reset()
         return self._init_fn(rng, params_single)
 
     def step(self, state, batch, rng):
-        import jax
-        shift_idx = jax.random.randint(rng, (), 0, len(self._shifts))
+        # rng is part of the TrainerBackend protocol (the sim backend uses
+        # it for peer selection); the prod ring's shift schedule is drawn
+        # host-side so stepping never enqueues device work beyond the lanes
+        shift_idx = np.int32(self._shift_rng.integers(0, len(self._shifts)))
         state, metrics = self._step_fn(state, batch, self._steps, shift_idx)
         self._steps += 1
         self._last = metrics
         return state, metrics
 
     def summary(self) -> Dict[str, float]:
-        return _numeric_summary(self._steps, self._last)
+        out = _numeric_summary(self._steps, self._last)
+        if self.timeline is not None:
+            self.timeline.finalize()
+            t = self.timeline.summary()
+            out.update(pipeline_wall_s=t["wall_s"],
+                       overlap_events=float(t["overlap_events"]),
+                       overlap_s=t["overlap_s"],
+                       fwd_gossip_overlap_s=t["fwd_gossip_overlap_s"])
+        return out
 
 
 def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
@@ -236,7 +287,7 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
                   (or an explicit mesh kwarg).
     Shared kwargs: straggler_delays, fb_ratio, update_delay; sim/prod also
     take measure_drift, event also takes sync_every and seed, prod also
-    takes mesh and shifts.
+    takes mesh, shifts and overlap (the stage-graph pipeline engine).
     """
     if kind == "sim":
         if loss_fn is None or optimizer is None or schedule is None:

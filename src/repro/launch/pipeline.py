@@ -1,0 +1,686 @@
+"""Stage-graph pipeline engine for the decoupled LayUp lane (DESIGN.md §10).
+
+The monolithic ``make_layup_decoupled_train_step`` fuses the R forward
+slices, the delayed backward/update and the gossip collectives into ONE
+jitted program, so on real hardware they serialize and the paper's overlap
+(forward threads hiding communication/update latency — the source of the
+up-to-5.95× speedups) cannot manifest. This module compiles the SAME lane
+factories (``forward_slice_lane`` / ``backward_update_lane`` /
+``gossip_lane`` from ``repro.launch.train``) into **separately jitted,
+buffer-donating stage executables**:
+
+    fwd-slice r   (read, batch)                  -> loss_r [, grads]
+    bwd+update    (write, opt[, fifo], grads, t) -> write', opt'[, fifo'], stale
+    gossip-mix    (write', w, versions,
+                   losses, stale, t, s)          -> mixed, w', versions', metrics
+
+(the gossip stage also folds the metric reduction, so one step is exactly
+R + 2 dispatches — the CPU PJRT client bounds the number of in-flight
+executions, and every extra executable per step is one less step of
+host run-ahead before dispatch throttles)
+
+and drives them from a host-side dispatch loop that exploits JAX **async
+dispatch**: every stage call returns a future immediately, so the host can
+enqueue step ``t+1``'s forward slices while step ``t``'s gossip collectives
+and delayed update are still executing on the device — data dependencies
+are sequenced by the runtime, not by python. Numerics are IDENTICAL to the
+monolithic step (the stage bodies are the very same lane closures, split at
+the same boundaries; the monolithic path remains the numerics oracle and
+``tests/test_pipeline.py`` asserts loss/staleness parity at
+(R, D) ∈ {(1,0), (1,1), (2,1)}).
+
+**Buffer ownership / donation rules.** The engine manages the
+double-buffered parameters instead of carrying them as step-state pytrees:
+
+* the *read* buffer (forward input) is never donated — all R forward
+  slices of a step share it;
+* the update stage donates the optimizer state, the gradient FIFO and the
+  incoming gradients, but NOT its parameter input: after the gossip swap
+  the read and write handles alias one engine-owned buffer, and donating a
+  buffer that a still-in-flight forward reads would alias a live input;
+* the gossip stage donates its parameter input (the update stage's fresh
+  output — sole reference), the push-sum weights and the version clocks.
+  Its mixed output becomes BOTH next-step handles (read == write at every
+  step boundary, exactly like the monolithic step — all numeric staleness
+  lives in the gradient FIFO).
+
+**Timestamps.** Every dispatch is recorded in a :class:`StageTimeline`
+with the host dispatch time, the set of stages still in flight at that
+moment (probed via non-blocking ``jax.Array.is_ready`` on a per-stage
+fence output — stage executables complete atomically, so any output
+serves), and the first-observed-ready completion time. Overlap is
+therefore *measured*, not simulated: ``fwd_gossip_overlap_s`` sums, over
+forward dispatches that found the previous step's gossip in flight, the
+window between the dispatch and the gossip's completion. Completion times
+are first-*observed*-ready (an upper bound — polling happens at dispatch
+points and at ``finalize()``), so reported overlap is what the host
+provably ran ahead of, never an extrapolation.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.layerview import LayerPartition, send_fractions, stamp_groups
+from repro.launch.mesh import data_axes, num_workers
+from repro.launch.train import (
+    _abstract_batch, _decoupled_metrics, _opt_shardings_stacked,
+    _worker_batch_pspec, backward_update_lane, forward_slice_lane,
+    gossip_lane, make_decoupled_state, shard_map, straggler_active_fn,
+)
+from repro.launch import sharding as SH
+from repro.optim.optimizers import Optimizer
+
+
+# ---------------------------------------------------------------------------
+# stage timeline: measured dispatch/complete timestamps + overlap accounting
+# ---------------------------------------------------------------------------
+
+
+def _is_ready(x) -> bool:
+    """Non-blocking readiness probe; arrays already consumed by a donating
+    stage count as retired."""
+    try:
+        return bool(x.is_ready())
+    except Exception:
+        return True
+
+
+class StageTimeline:
+    """Host-side record of every stage dispatch.
+
+    Each event: ``{stage, step, slice, dispatch, complete, concurrent}``.
+    ``dispatch`` is stamped when the host *initiates* the stage call
+    (``begin``), and ``concurrent`` lists the ``(stage, step, slice)``
+    triples whose fences were NOT ready at that moment — direct evidence
+    the host ran ahead of the device (the runtime may still synchronize
+    inside the call; the initiation order is what the engine controls).
+    ``complete`` is the first time the fence was observed ready (polled at
+    subsequent dispatches and at ``finalize()``), i.e. an upper bound on
+    the true completion."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self._clock = clock
+        self.events: List[Dict[str, Any]] = []
+        self._pending: List[Tuple[Dict[str, Any], Any]] = []
+
+    def begin(self, stage: str, step: int, slice_idx=None) -> Dict[str, Any]:
+        """Open an event at stage-call initiation: timestamp + snapshot of
+        the stages still in flight. Pair with :meth:`commit`."""
+        now = self._clock()
+        self.poll(now)
+        concurrent = [(e["stage"], e["step"], e["slice"])
+                      for e, _ in self._pending]
+        ev = {"stage": stage, "step": int(step), "slice": slice_idx,
+              "dispatch": now, "complete": None, "concurrent": concurrent}
+        self.events.append(ev)
+        return ev
+
+    def commit(self, ev: Dict[str, Any], fence) -> None:
+        """Attach the dispatched stage's fence output to its event."""
+        self._pending.append((ev, fence))
+        self.poll()
+
+    def poll(self, now: Optional[float] = None) -> None:
+        if not self._pending:
+            return
+        now = self._clock() if now is None else now
+        still = []
+        for ev, fence in self._pending:
+            if _is_ready(fence):
+                ev["complete"] = now
+            else:
+                still.append((ev, fence))
+        self._pending = still
+
+    def finalize(self) -> None:
+        """Block on every outstanding fence and close its event."""
+        for ev, fence in self._pending:
+            try:
+                jax.block_until_ready(fence)
+            except Exception:
+                pass
+            ev["complete"] = self._clock()
+        self._pending = []
+
+    def reset(self) -> None:
+        """Drop all recorded events (finalizing outstanding ones first) —
+        for backends that re-init and measure a fresh run."""
+        self.finalize()
+        self.events = []
+
+    def summary(self) -> Dict[str, Any]:
+        evs = [e for e in self.events if e["complete"] is not None]
+        out: Dict[str, Any] = {
+            "events": len(self.events), "steps": 0, "wall_s": 0.0,
+            "overlap_events": 0, "overlap_s": 0.0,
+            "fwd_gossip_overlap_s": 0.0, "stage_s": {},
+        }
+        if not evs:
+            return out
+        t0 = min(e["dispatch"] for e in evs)
+        out["steps"] = max(e["step"] for e in evs) + 1
+        out["wall_s"] = max(e["complete"] for e in evs) - t0
+        stage_s: Dict[str, float] = {}
+        for e in evs:
+            stage_s[e["stage"]] = (stage_s.get(e["stage"], 0.0)
+                                   + e["complete"] - e["dispatch"])
+        out["stage_s"] = stage_s
+        index = {(e["stage"], e["step"], e["slice"]): e for e in evs}
+        overlap = 0.0
+        overlap_events = 0
+        # the paper's overlap: step t's forward slices dispatched while
+        # step t−1's gossip is still in flight. Count each gossip once,
+        # from the EARLIEST forward that found it unretired, so neither
+        # multiple slices nor deep run-ahead double-count the window.
+        first_fwd: Dict[int, Dict[str, Any]] = {}
+        for e in evs:
+            window = 0.0
+            for key in e["concurrent"]:
+                g = index.get(tuple(key))
+                if g is None or g["complete"] is None:
+                    continue
+                window = max(window, min(g["complete"], e["complete"])
+                             - e["dispatch"])
+                if (e["stage"] == "fwd" and key[0] == "gossip"
+                        and key[1] == e["step"] - 1
+                        and e["step"] not in first_fwd):
+                    first_fwd[e["step"]] = e
+            if e["concurrent"]:
+                overlap_events += 1
+                overlap += max(0.0, window)
+        fwd_gossip = 0.0
+        for t_step, e in first_fwd.items():
+            g = index[("gossip", t_step - 1, None)]
+            fwd_gossip += max(0.0, min(g["complete"], e["complete"])
+                              - e["dispatch"])
+        out["overlap_events"] = overlap_events
+        out["overlap_s"] = overlap
+        out["fwd_gossip_overlap_s"] = fwd_gossip
+        return out
+
+    def dump(self, path: str) -> str:
+        """Write events (dispatch/complete relative to the first dispatch)
+        plus the summary as JSON — the nightly per-stage timing artifact."""
+        s = self.summary()
+        t0 = min((e["dispatch"] for e in self.events), default=0.0)
+        events = [{**e,
+                   "dispatch": e["dispatch"] - t0,
+                   "complete": (None if e["complete"] is None
+                                else e["complete"] - t0),
+                   "concurrent": [list(c) for c in e["concurrent"]]}
+                  for e in self.events]
+        with open(path, "w") as f:
+            json.dump({"summary": s, "events": events}, f, indent=1)
+        return path
+
+
+# ---------------------------------------------------------------------------
+# stage bodies (traced inside shard_map) — split at the lane boundaries
+# ---------------------------------------------------------------------------
+
+
+def _unstack(t):
+    return jax.tree.map(lambda x: x[0], t)
+
+
+def _unstack_opt(t):
+    return jax.tree.map(lambda x: x[0] if x.ndim >= 1 else x, t)
+
+
+def _restack(t):
+    return jax.tree.map(lambda x: x[None], t)
+
+
+def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
+                  fwd_slices: Sequence[Callable], upd: Callable,
+                  mix: Callable, *, squeeze_batch: bool = False,
+                  active_fn: Optional[Callable] = None):
+    """Per-worker stage bodies. They compose the SAME lane closures as
+    ``_decoupled_worker_fn``, split at the stage boundaries, so each
+    stage's math is identical to the corresponding span of the monolithic
+    body. The loss is NOT pmean'd per stage: each fwd stage returns its
+    per-worker loss vector and the metrics stage combines slices first
+    (monolithic order: ``(l0 + sum(rest)) / R``), then means over workers —
+    bitwise-equal to ``lax.pmean`` of the per-worker combination for
+    M ≤ 2, and within reduction-order noise beyond."""
+    phi = jnp.asarray(send_fractions(part.num_groups))
+
+    def make_fwd_body(r):
+        lane = fwd_slices[r]
+
+        def fwd_body(read_st, batch):
+            read = _unstack(read_st)
+            if squeeze_batch:  # sim-layout batches carry a worker axis
+                batch = _unstack(batch)
+            loss, grads = lane(read, batch)
+            if r == 0:
+                return loss[None], _restack(grads)
+            return loss[None]
+
+        return fwd_body
+
+    def update_body(*args):
+        if D > 0:
+            write_st, opt_st, fifo_g_st, fifo_stamp, grads_st, step_idx = args
+            fifo = {"g": _unstack(fifo_g_st), "stamp": fifo_stamp}
+        else:
+            write_st, opt_st, grads_st, step_idx = args
+            fifo = ()
+        write = _unstack(write_st)
+        opt_state = _unstack_opt(opt_st)
+        grads = _unstack(grads_st)
+        active = active_fn(step_idx) if active_fn is not None else None
+        write, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
+                                                fifo, step_idx, active=active)
+        outs = [_restack(write), _restack(opt_state)]
+        if D > 0:
+            outs += [_restack(fifo["g"]), fifo["stamp"]]
+        return tuple(outs) + (upd_stale,)
+
+    def gossip_body(write_st, w_st, versions, step_idx, shift_idx):
+        write = _unstack(write_st)
+        w = w_st[0]
+        write, w = mix(write, w, shift_idx)
+        if M > 1:
+            versions = stamp_groups(versions,
+                                    step_idx.astype(jnp.float32) + phi)
+        return _restack(write), w[None], versions
+
+    def metrics_fn(losses, w, versions, upd_stale, step_idx):
+        per_worker = (losses[0] + sum(losses[1:])) / R
+        loss = jnp.mean(per_worker)
+        return _decoupled_metrics(w, versions, loss, upd_stale, step_idx)
+
+    return ([make_fwd_body(r) for r in range(R)], update_body, gossip_body,
+            metrics_fn)
+
+
+def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
+                shardings: Optional[Dict[str, Any]] = None):
+    """shard_map + jit each stage body into its executable.
+
+    ``shardings`` (Model path) pins jit-level in/out shardings so the model
+    axis flows through GSPMD exactly like the monolithic step; the generic
+    backend path omits it (plain jit, shardings inferred from shard_map)."""
+    pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
+    fwd_bodies, update_body, gossip_body, metrics_fn = bodies
+
+    def sm(f, in_specs, out_specs):
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, axis_names=set(worker_axes))
+
+    fwd_sm = [sm(fwd_bodies[0], (pw, batch_specs), (pw, pw))]
+    fwd_sm += [sm(b, (pw, batch_specs), pw) for b in fwd_bodies[1:]]
+    fifo_in = (pw, P()) if D > 0 else ()
+    update_sm = sm(update_body, (pw, pw) + fifo_in + (pw, P()),
+                   (pw, pw) + fifo_in + (P(),))
+    gossip_sm = sm(gossip_body, (pw, pw, pw, P(), P()), (pw, pw, pw))
+
+    def gossip_step(write_st, w_st, versions, losses, upd_stale, step_idx,
+                    shift_idx):
+        # gossip + the metric reduction in ONE executable: per-slice
+        # per-worker losses combine in the monolithic order
+        # ((l0 + sum(rest)) / R, then mean over workers) and the staleness
+        # metrics read the freshly stamped clocks — identical math to
+        # _decoupled_step_caller, one less dispatch per step
+        mixed, w, versions = gossip_sm(write_st, w_st, versions, step_idx,
+                                       shift_idx)
+        metrics = metrics_fn(losses, w, versions, upd_stale, step_idx)
+        return mixed, w, versions, metrics
+
+    donate_upd = (1, 2, 3, 4) if D > 0 else (1, 2)
+    if shardings is None:
+        fwd = [jax.jit(f) for f in fwd_sm]
+        update = jax.jit(update_sm, donate_argnums=donate_upd)
+        gossip = jax.jit(gossip_step, donate_argnums=(0, 1, 2))
+    else:
+        s = shardings
+        fwd = [jax.jit(fwd_sm[0], in_shardings=(s["p"], s["batch"]),
+                       out_shardings=(s["lossvec"], s["p"]))]
+        fwd += [jax.jit(f, in_shardings=(s["p"], s["batch"]),
+                        out_shardings=s["lossvec"]) for f in fwd_sm[1:]]
+        fifo_sh = (s["fifo_g"], s["scalar"]) if D > 0 else ()
+        update = jax.jit(
+            update_sm,
+            in_shardings=(s["p"], s["opt"]) + fifo_sh + (s["p"], s["scalar"]),
+            out_shardings=(s["p"], s["opt"]) + fifo_sh + (s["scalar"],),
+            donate_argnums=donate_upd)
+        R_loss = tuple([s["lossvec"]] * len(fwd_sm))
+        gossip = jax.jit(
+            gossip_step,
+            in_shardings=(s["p"], s["w"], s["w"], R_loss, s["scalar"],
+                          s["scalar"], s["scalar"]),
+            out_shardings=(s["p"], s["w"], s["w"], s["metrics"]),
+            donate_argnums=(0, 1, 2))
+    return {"fwd": fwd, "update": update, "gossip": gossip}
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class PipelineEngine:
+    """Owns the stage executables, the double buffers and the timeline.
+
+    ``step(state, batch, step_idx, shift_idx) -> (state, metrics)`` keeps
+    the monolithic step's signature and state layout (``read``/``write``/
+    ``opt``/``w``/``versions``[/``fifo``] dict), but every return value is
+    an un-awaited future: the caller can dispatch the next step before this
+    one finished, and the runtime chains the data dependencies. Blocking
+    happens only when the caller converts a metric (or calls
+    ``timeline.finalize()``)."""
+
+    def __init__(self, *, R: int, D: int, M: int, stages: Dict[str, Any],
+                 timeline: Optional[StageTimeline] = None, describe: str = "",
+                 abstract_args: Optional[Dict[str, tuple]] = None,
+                 max_inflight_steps: int = 3):
+        self.R, self.D, self.M = int(R), int(D), int(M)
+        self._stages = stages
+        self.timeline = timeline if timeline is not None else StageTimeline()
+        self.describe = describe
+        self.abstract_args = abstract_args or {}
+        # deferred-release buffers: dropping the LAST python reference to a
+        # buffer that an in-flight stage still reads makes the CPU PJRT
+        # client block the host until the readers retire — rebinding the
+        # state dict each step would silently serialize the pipeline. The
+        # engine therefore keeps each step's consumed handles alive until
+        # that step's final fence is ready, and releases them on a later
+        # (non-blocking) prune. ``max_inflight_steps`` is the backpressure
+        # bound: the host blocks on the oldest step's fence rather than
+        # run further ahead, capping the extra memory at that many
+        # retired-but-held step states.
+        self.max_inflight_steps = int(max_inflight_steps)
+        self._graveyard: List[Tuple[Any, Any]] = []
+
+    def step(self, state, batch, step_idx, shift_idx):
+        tl = self.timeline
+        t = int(step_idx)
+        # release buffers whose step has fully retired (never blocks), then
+        # apply backpressure: at most max_inflight_steps steps in flight
+        self._graveyard = [(f, p) for f, p in self._graveyard
+                           if not _is_ready(f)]
+        while len(self._graveyard) >= self.max_inflight_steps:
+            try:
+                jax.block_until_ready(self._graveyard[0][0])
+            except Exception:
+                pass
+            self._graveyard.pop(0)
+            self._graveyard = [(f, p) for f, p in self._graveyard
+                               if not _is_ready(f)]
+        # numpy scalars, NOT jnp.asarray: an eager conversion is a tiny
+        # computation committed to device 0 whose reshard-to-replicated
+        # then queues behind every in-flight stage — one jnp scalar per
+        # step silently serializes the whole pipeline (measured on the
+        # CPU PJRT client). A numpy scalar rides the jit call's host→device
+        # put, which never touches the execution queue.
+        si = (step_idx if isinstance(step_idx, jax.Array)
+              else np.int32(step_idx))
+        sh = (shift_idx if isinstance(shift_idx, jax.Array)
+              else np.int32(shift_idx))
+
+        # forward lane: all R slices read the same (never-donated) buffer
+        ev = tl.begin("fwd", t, slice_idx=0)
+        loss0, grads = self._stages["fwd"][0](state["read"], batch)
+        tl.commit(ev, loss0)
+        losses = [loss0]
+        for r in range(1, self.R):
+            ev = tl.begin("fwd", t, slice_idx=r)
+            lr = self._stages["fwd"][r](state["read"], batch)
+            tl.commit(ev, lr)
+            losses.append(lr)
+
+        # backward/update lane: donates opt + fifo + grads, NOT the params
+        # (the write handle aliases the read buffer the fwd slices consume)
+        ev = tl.begin("update", t)
+        if self.D > 0:
+            write, opt, fifo_g, fifo_stamp, upd_stale = self._stages[
+                "update"](state["write"], state["opt"], state["fifo"]["g"],
+                          state["fifo"]["stamp"], grads, si)
+        else:
+            write, opt, upd_stale = self._stages["update"](
+                state["write"], state["opt"], grads, si)
+        tl.commit(ev, upd_stale)
+
+        # gossip lane (+ fused metric reduction): donates the update's
+        # fresh output + w + versions; the mixed result becomes both
+        # next-step buffer handles
+        ev = tl.begin("gossip", t)
+        mixed, w, versions, metrics = self._stages["gossip"](
+            write, state["w"], state["versions"], tuple(losses), upd_stale,
+            si, sh)
+        tl.commit(ev, metrics["loss"])
+
+        # hold EVERY handle this step touched until its last fence retires:
+        # on the CPU PJRT client, dropping the final python reference to
+        # any buffer an in-flight execution reads (the old read/write
+        # params), was donated (opt/fifo/w/versions, grads), or has not
+        # yet materialized (the previous metrics dict the caller rebinds)
+        # blocks the host until that execution completes — any one of
+        # those silently serializes the pipeline. Holding the handles is
+        # free (no copies); they are released on a later non-blocking
+        # prune once the fence is ready.
+        self._graveyard.append(
+            (metrics["loss"], (state, metrics, losses, upd_stale, grads,
+                               write)))
+
+        new_state = {"read": mixed, "write": mixed, "opt": opt, "w": w,
+                     "versions": versions}
+        if self.D > 0:
+            new_state["fifo"] = {"g": fifo_g, "stamp": fifo_stamp}
+        return new_state, metrics
+
+    def reset(self) -> None:
+        """Prepare for a fresh measured run: finalize and drop the
+        timeline's events, then release the held step handles (safe —
+        finalize just retired every fence they wait on)."""
+        self.timeline.reset()
+        self._graveyard = []
+
+    def lower(self) -> Dict[str, Any]:
+        """Lower every stage executable against its abstract args (Model
+        path only — the generic backend builds stages at init time)."""
+        if not self.abstract_args:
+            raise ValueError("engine has no abstract args to lower against")
+        out = {}
+        for r, f in enumerate(self._stages["fwd"]):
+            out[f"fwd{r}"] = f.lower(*self.abstract_args["fwd"])
+        for name in ("update", "gossip"):
+            out[name] = self._stages[name].lower(*self.abstract_args[name])
+        return out
+
+
+@dataclass
+class PipelineStep:
+    """Drop-in analogue of :class:`~repro.launch.train.ProdStep` for the
+    overlap engine: ``fn(state, batch, step_idx, shift_idx)`` like the
+    monolithic decoupled step, ``init_state(params_stacked)`` builds the
+    engine-managed state, ``lower()`` lowers every stage."""
+    engine: PipelineEngine
+    init_state: Callable
+    describe: str = ""
+
+    def fn(self, state, batch, step_idx, shift_idx):
+        return self.engine.step(state, batch, step_idx, shift_idx)
+
+    def lower(self):
+        return self.engine.lower()
+
+    @property
+    def timeline(self) -> StageTimeline:
+        return self.engine.timeline
+
+
+# ---------------------------------------------------------------------------
+# factories: Model/mesh path and generic-backend path
+# ---------------------------------------------------------------------------
+
+
+def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
+                                  schedule: Callable, shape,
+                                  shifts: Sequence[int] = (1, 2, 4, 8),
+                                  overrides: Optional[Dict[str, Any]] = None,
+                                  preset: Optional[str] = None,
+                                  fb_ratio: int = 2, update_delay: int = 1,
+                                  constrain_grads: bool = False,
+                                  timeline: Optional[StageTimeline] = None
+                                  ) -> PipelineStep:
+    """The decoupled LayUp lane as a stage-graph pipeline on the real mesh —
+    same sharding/abstract setup as ``make_layup_decoupled_train_step``,
+    split into separately jitted stages."""
+    cfg = model.cfg
+    worker_axes = data_axes(mesh)
+    ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    M = num_workers(mesh)
+    R, D = int(fb_ratio), int(update_delay)
+    if shape.global_batch % (M * max(R, 1)):
+        raise ValueError(
+            f"global_batch={shape.global_batch} must divide by "
+            f"M*R={M}*{R} for the decoupled forward lane")
+    shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
+
+    grad_specs = None
+    if constrain_grads:
+        rules_g = SH.rules_for(mesh, overrides, preset)
+        from repro.models.layers import is_spec
+        grad_specs = jax.tree.map(
+            lambda sp: SH.spec_for_axes(tuple(sp.axes), rules_g, mesh,
+                                        tuple(sp.shape)),
+            model.specs, is_leaf=is_spec)
+
+    part = LayerPartition(model.abstract_params())
+    fwd_slices = [forward_slice_lane(model.loss_fn, fb_ratio=R, slice_idx=r,
+                                     grad_specs=grad_specs)
+                  for r in range(R)]
+    upd = backward_update_lane(optimizer, schedule, update_delay=D)
+    mix = gossip_lane(part, M, ax, shifts)
+    bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd, mix)
+
+    pw = P(ax)
+    abstract_params = model.abstract_params()
+    stack = lambda s: jax.ShapeDtypeStruct((M,) + tuple(s.shape), s.dtype)
+    stacked_params = jax.tree.map(stack, abstract_params)
+    abstract_opt_single = jax.eval_shape(optimizer.init, abstract_params)
+    stacked_opt = jax.tree.map(stack, abstract_opt_single)
+    batch_abs = _abstract_batch(cfg, shape)
+
+    p_sh = SH.param_shardings(model, mesh, stacked_workers=M,
+                              overrides=overrides, preset=preset)
+    opt_sh = _opt_shardings_stacked(abstract_opt_single, abstract_params,
+                                    p_sh, mesh, M)
+    w_sh = NamedSharding(mesh, pw)
+    scalar = NamedSharding(mesh, P())
+    b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
+                              preset=preset)
+    shardings = {
+        "p": p_sh, "opt": opt_sh, "w": w_sh, "scalar": scalar, "batch": b_sh,
+        "lossvec": w_sh,
+        "fifo_g": jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, P(s.spec[0], None, *tuple(s.spec)[1:])), p_sh),
+        "metrics": {"loss": scalar, "update_staleness": scalar,
+                    "layer_staleness": scalar, "staleness_mean": scalar,
+                    "weight_sum": scalar},
+    }
+    batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax), batch_abs)
+    stages = _jit_stages(bodies, mesh, worker_axes, R, D,
+                         batch_specs=batch_specs_sm, shardings=shardings)
+
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    w_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
+    v_abs = jax.ShapeDtypeStruct((M, part.num_groups), jnp.float32)
+    lossvec_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
+    fifo_abs = ()
+    if D > 0:
+        fifo_abs = (jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((M, D) + tuple(s.shape), s.dtype),
+            abstract_params), jax.ShapeDtypeStruct((D,), jnp.float32))
+    abstract_args = {
+        "fwd": (stacked_params, batch_abs),
+        "update": (stacked_params, stacked_opt) + fifo_abs
+                  + (stacked_params, i32),
+        "gossip": (stacked_params, w_abs, v_abs, tuple([lossvec_abs] * R),
+                   f32, i32, i32),
+    }
+    engine = PipelineEngine(
+        R=R, D=D, M=M, stages=stages, timeline=timeline,
+        describe=(f"layup decoupled pipeline (M={M}, R={R}, D={D}, "
+                  f"shifts={shifts}, stages={R + 2})"),
+        abstract_args=abstract_args)
+
+    def init_state(params_stacked):
+        return make_decoupled_state(params_stacked, optimizer,
+                                    update_delay=D, part=part)
+
+    return PipelineStep(engine, init_state, engine.describe)
+
+
+def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
+                                  schedule: Callable, mesh, *,
+                                  shifts: Sequence[int] = (1, 2, 4, 8),
+                                  fb_ratio: int = 1, update_delay: int = 0,
+                                  straggler_delays=None,
+                                  measure_drift: bool = False,
+                                  timeline: Optional[StageTimeline] = None):
+    """Pipeline-engine counterpart of ``make_decoupled_backend_trainer``:
+    same generic pytree + loss_fn contract, same sim-layout batches, but
+    the step is the stage-graph engine instead of one jitted program.
+
+    Returns ``(init_fn, step_fn, shifts, box)`` — ``box["engine"]`` holds
+    the :class:`PipelineEngine` once ``init_fn`` has seen the params."""
+    worker_axes = data_axes(mesh)
+    ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    M = num_workers(mesh)
+    R, D = int(fb_ratio), int(update_delay)
+    shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
+    active_fn = straggler_active_fn(mesh, straggler_delays)
+    pw = P(ax)
+    box: Dict[str, Any] = {}
+
+    def build(params_single):
+        part = LayerPartition(params_single)
+        fwd_slices = [forward_slice_lane(loss_fn, fb_ratio=R, slice_idx=r)
+                      for r in range(R)]
+        upd = backward_update_lane(optimizer, schedule, update_delay=D)
+        mix = gossip_lane(part, M, ax, shifts)
+        bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd,
+                               mix, squeeze_batch=True, active_fn=active_fn)
+        stages = _jit_stages(bodies, mesh, worker_axes, R, D, batch_specs=pw)
+        engine = PipelineEngine(
+            R=R, D=D, M=M, stages=stages, timeline=timeline,
+            describe=f"pipeline backend (M={M}, R={R}, D={D})")
+        return engine, part
+
+    def init_fn(rng, params_single):
+        del rng
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (M,) + p.shape),
+            params_single)
+        if "engine" not in box:
+            box["engine"], box["part"] = build(params_single)
+            if measure_drift:
+                from repro.core.api import disagreement
+                box["drift"] = jax.jit(disagreement)
+        return make_decoupled_state(stacked, optimizer, update_delay=D,
+                                    part=box["part"])
+
+    def step_fn(state, batch, step_idx, shift_idx):
+        if "engine" not in box:
+            raise RuntimeError("call init_fn before step_fn")
+        state, metrics = box["engine"].step(state, batch, step_idx,
+                                            shift_idx)
+        if measure_drift:
+            metrics["disagreement"] = box["drift"](state["read"], state["w"])
+        return state, metrics
+
+    return init_fn, step_fn, shifts, box

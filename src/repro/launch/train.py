@@ -139,6 +139,26 @@ def _split_fwd_slices(batch, R: int):
     return [jax.tree.map(lambda x: slc(x, r), batch) for r in range(R)]
 
 
+def _apply_grad_specs(grads, grad_specs):
+    """Pin gradients to the parameter sharding (reduce-scatter instead of
+    all-reduce+slice, §Perf iteration A3). Shared by the monolithic forward
+    lane and the per-slice pipeline stages so both compile identical HLO."""
+    if grad_specs is None:
+        return grads
+    try:
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_specs)
+    except RuntimeError as e:
+        # raw-PartitionSpec constraints need a mesh context; the jax 0.4.x
+        # fully-manual shard_map body has none, and the constraint is a
+        # no-op there anyway (model axes fold into replication —
+        # DESIGN.md §2). Skip only that failure.
+        if "non-empty mesh" not in str(e):
+            raise
+        return grads
+
+
 def forward_lane(loss_fn: Callable, *, fb_ratio: int = 1,
                  accum_steps: int = 1, grad_specs=None) -> Callable:
     """Forward(+backward-AD) compute on the read buffer.
@@ -188,19 +208,34 @@ def forward_lane(loss_fn: Callable, *, fb_ratio: int = 1,
         else:
             (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, batch)
-        if grad_specs is not None:
-            try:
-                grads = jax.tree.map(
-                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
-                    grads, grad_specs)
-            except RuntimeError as e:
-                # raw-PartitionSpec constraints need a mesh context; the
-                # jax 0.4.x fully-manual shard_map body has none, and the
-                # constraint is a no-op there anyway (model axes fold into
-                # replication — DESIGN.md §2). Skip only that failure.
-                if "non-empty mesh" not in str(e):
-                    raise
+        grads = _apply_grad_specs(grads, grad_specs)
         return loss, grads
+
+    return fwd
+
+
+def forward_slice_lane(loss_fn: Callable, *, fb_ratio: int = 1,
+                       slice_idx: int = 0, grad_specs=None) -> Callable:
+    """ONE forward slice of the decoupled forward lane, as a standalone
+    stage — the unit the pipeline engine (repro.launch.pipeline) compiles
+    into its own jitted executable.
+
+    Slice 0 is the backward slice: returns ``(loss, grads)``. Slices
+    ``1..R-1`` are forward-only: returns ``(loss, None)``. Slicing uses the
+    same :func:`_split_fwd_slices` as the monolithic :func:`forward_lane`,
+    so the per-slice math (and therefore the combined loss) is identical —
+    the engine's parity with the monolithic step rests on it."""
+    R, r = int(fb_ratio), int(slice_idx)
+    if not 0 <= r < R:
+        raise ValueError(f"slice_idx={r} out of range for fb_ratio={R}")
+
+    def fwd(params, batch):
+        s = _split_fwd_slices(batch, R)[r] if R > 1 else batch
+        if r == 0:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, s)
+            return loss, _apply_grad_specs(grads, grad_specs)
+        return loss_fn(params, s)[0], None
 
     return fwd
 
@@ -211,8 +246,9 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
 
     Returns ``upd(params, opt_state, grads, fifo, step_idx) ->
     (params, opt_state, fifo, update_staleness)``. With ``update_delay=D > 0``
-    gradients flow through a D-deep FIFO (``{"g": (D, ...) f32 tree,
-    "stamp": (D,) f32}``): the gradient applied at step ``t`` was generated
+    gradients flow through a D-deep FIFO (``{"g": (D, ...) tree in the
+    params' dtypes, "stamp": (D,) f32}``): the gradient applied at step
+    ``t`` was generated
     at step ``t − D`` (warm-up: the FIFO holds zeros and stamp −1 for the
     first D steps, so early updates are no-ops). Mirrors the sim trainer's
     backward lane exactly (api.make_sim_trainer). ``active`` (scalar 0/1,
@@ -231,7 +267,7 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
             fifo = {
                 "g": jax.tree.map(
                     lambda b, g: jnp.concatenate(
-                        [b[1:], g[None].astype(jnp.float32)], axis=0),
+                        [b[1:], g[None].astype(b.dtype)], axis=0),
                     fifo["g"], grads),
                 "stamp": jnp.concatenate([fifo["stamp"][1:], step_f[None]]),
             }
@@ -253,7 +289,12 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
 
 
 def fifo_init(params_single, update_delay: int, M: int = 0):
-    """Abstract/zero FIFO state: gradients in f32 plus generation stamps.
+    """Abstract/zero FIFO state: gradients in the params' dtypes plus f32
+    generation stamps. Matching the parameter dtype (instead of a fixed
+    f32) keeps the D param-sized FIFO slots at the parameter memory
+    footprint — for bf16 params the FIFO is half the size, and the
+    gradients it carries are quantized exactly like the updates the
+    optimizer would apply anyway.
 
     With ``M > 0`` the gradient buffers are worker-stacked (M, D, ...) —
     the layout the decoupled step state carries."""
@@ -261,7 +302,7 @@ def fifo_init(params_single, update_delay: int, M: int = 0):
 
     def zeros(p):
         shape = ((M, D) if M else (D,)) + tuple(p.shape)
-        return jnp.zeros(shape, jnp.float32)
+        return jnp.zeros(shape, p.dtype)
 
     return {"g": jax.tree.map(zeros, params_single),
             "stamp": jnp.full((D,), -1.0, jnp.float32)}
@@ -677,7 +718,7 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
         abstract_state["fifo"] = {
             "g": jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((M, D) + tuple(s.shape),
-                                               jnp.float32), abstract_params),
+                                               s.dtype), abstract_params),
             "stamp": jax.ShapeDtypeStruct((D,), jnp.float32),
         }
 
@@ -726,6 +767,28 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                     f"shifts={shifts})")
 
 
+def straggler_active_fn(mesh, straggler_delays) -> Optional[Callable]:
+    """Per-worker 0/1 activity mask from a straggler-delay vector:
+    ``straggler_delays[i] = d`` makes worker ``i`` active every ``d + 1``
+    steps. Traced inside the shard_map body (uses ``axis_index``); shared
+    by the monolithic decoupled step and the pipeline engine's update
+    stage. Returns ``None`` when no delays are given."""
+    if straggler_delays is None:
+        return None
+    worker_axes = data_axes(mesh)
+    delays_c = jnp.asarray(np.asarray(straggler_delays), jnp.int32)
+    sizes = [mesh.shape[a] for a in worker_axes]
+
+    def active_fn(step_idx):
+        idx = jnp.zeros((), jnp.int32)
+        for a, n in zip(worker_axes, sizes):
+            idx = idx * n + jax.lax.axis_index(a)
+        return (jnp.mod(step_idx, delays_c[idx] + 1) == 0).astype(
+            jnp.float32)
+
+    return active_fn
+
+
 def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                    schedule: Callable, mesh, *,
                                    shifts: Sequence[int] = (1, 2, 4, 8),
@@ -752,19 +815,7 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
     M = num_workers(mesh)
     R, D = int(fb_ratio), int(update_delay)
     shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
-
-    active_fn = None
-    if straggler_delays is not None:
-        delays_c = jnp.asarray(np.asarray(straggler_delays), jnp.int32)
-        sizes = [mesh.shape[a] for a in worker_axes]
-
-        def active_fn(step_idx):
-            idx = jnp.zeros((), jnp.int32)
-            for a, n in zip(worker_axes, sizes):
-                idx = idx * n + jax.lax.axis_index(a)
-            return (jnp.mod(step_idx, delays_c[idx] + 1) == 0).astype(
-                jnp.float32)
-
+    active_fn = straggler_active_fn(mesh, straggler_delays)
     part_box = {}
 
     def build(params_single):
@@ -874,15 +925,22 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
               accum_steps: int = 1,
               constrain_grads: bool = False,
               fb_ratio: int = 1,
-              update_delay: int = 0) -> ProdStep:
+              update_delay: int = 0,
+              overlap: bool = False) -> ProdStep:
+    """``overlap=True`` selects the stage-graph pipeline engine
+    (repro.launch.pipeline): the decoupled lane compiled into separately
+    jitted fwd-slice / bwd+update / gossip stages dispatched asynchronously
+    from the host, instead of one monolithic jitted step. Numerics are
+    identical (the monolithic path stays as the oracle — DESIGN.md §10);
+    only the dispatch schedule and the per-stage timestamps differ."""
     from repro.optim import momentum, constant
     optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
     schedule = schedule or constant(0.1)
-    decoupled = fb_ratio > 1 or update_delay > 0
+    decoupled = fb_ratio > 1 or update_delay > 0 or overlap
     if decoupled and (shape.kind != "train" or algo == "ddp"):
         raise ValueError(
-            "fb_ratio/update_delay define the decoupled LayUp lane; they "
-            f"do not apply to algo={algo!r} kind={shape.kind!r}")
+            "fb_ratio/update_delay/overlap define the decoupled LayUp lane; "
+            f"they do not apply to algo={algo!r} kind={shape.kind!r}")
     if shape.kind == "train":
         if algo == "ddp":
             return make_ddp_train_step(model, mesh, optimizer, schedule,
@@ -891,6 +949,13 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
             if accum_steps > 1:
                 raise ValueError(
                     "the decoupled lane does not compose with accum_steps")
+            if overlap:
+                from repro.launch.pipeline import make_layup_decoupled_pipeline
+                return make_layup_decoupled_pipeline(
+                    model, mesh, optimizer, schedule, shape, shifts=shifts,
+                    overrides=overrides, preset=preset, fb_ratio=fb_ratio,
+                    update_delay=update_delay,
+                    constrain_grads=constrain_grads)
             return make_layup_decoupled_train_step(
                 model, mesh, optimizer, schedule, shape, shifts, overrides,
                 preset, fb_ratio, update_delay, constrain_grads)

@@ -1,0 +1,26 @@
+"""Shared problem fixtures for the decoupled-lane and pipeline-engine
+tests: one small MLP classification problem + sim-layout batches. The
+engine-vs-monolithic parity suites in test_pipeline.py and the lane tests
+in test_decoupled_lane.py must exercise the SAME problem, so it lives in
+one place."""
+import jax
+import jax.numpy as jnp
+
+
+def mlp_problem():
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["l1"])
+        logits = h @ p["l2"]
+        ce = -jnp.mean(jax.nn.log_softmax(logits)[
+            jnp.arange(logits.shape[0]), b["labels"]])
+        return ce, {}
+
+    params = {"l1": jax.random.normal(jax.random.PRNGKey(1), (16, 32)) * 0.2,
+              "l2": jax.random.normal(jax.random.PRNGKey(2), (32, 10)) * 0.2}
+    return loss_fn, params
+
+
+def mlp_batch(t, M=1, b=8):
+    return {"x": jax.random.normal(jax.random.PRNGKey(10 + t), (M, b, 16)),
+            "labels": jax.random.randint(jax.random.PRNGKey(90 + t),
+                                         (M, b), 0, 10)}

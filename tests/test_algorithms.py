@@ -334,7 +334,15 @@ class TestDecoupledExecution:
     def test_decoupled_layup_converges_on_synthetic_lm(self):
         """Acceptance regression: layup with R=2, D=1 converges on the
         synthetic LM, and its measured per-layer staleness is strictly lower
-        than layup-block's at every layer group."""
+        than layup-block's at every layer group.
+
+        The convergence check SEED-AVERAGES over 3 inits: XLA CPU can
+        compile numerically different (reassociated) binaries across
+        processes and a single 80-step trajectory amplifies that past any
+        single-seed threshold (the PR-2-widened 0.95 still flaked; ROADMAP
+        names seed-averaging, not threshold tuning, as the fix). Averaging
+        washes out per-trajectory amplification, so the original 0.92
+        threshold holds."""
         from repro.configs.base import ModelConfig
         from repro.data.synthetic import SyntheticLM
         from repro.models import build_model
@@ -349,16 +357,16 @@ class TestDecoupledExecution:
         ds = SyntheticLM(vocab=cfg.vocab_size, seq_len=16, temperature=2.5)
         Mw = 4
 
-        def run(algo_name, steps):
+        def run(algo_name, steps, seed=0):
             be = make_backend(
                 "sim", algo_name, M=Mw,
                 loss_fn=lambda p, b: model.loss_fn(p, b, block_k=16),
                 optimizer=momentum(0.9),
                 schedule=linear_warmup_cosine(0.1, 10, steps),
                 fb_ratio=2, update_delay=1)
-            st = be.init(jax.random.PRNGKey(0),
-                         model.init(jax.random.PRNGKey(1)))
-            rng = jax.random.PRNGKey(2)
+            st = be.init(jax.random.PRNGKey(seed),
+                         model.init(jax.random.PRNGKey(seed + 1)))
+            rng = jax.random.PRNGKey(seed + 2)
             losses, stale = [], []
             for t in range(steps):
                 batch = jax.tree.map(jnp.asarray,
@@ -369,14 +377,12 @@ class TestDecoupledExecution:
                 stale.append(np.asarray(m["layer_staleness"]))
             return np.array(losses), np.array(stale)
 
-        losses, stale = run("layup", steps=80)
-        # threshold: the clean-compile ratio is ~0.885, but XLA CPU can
-        # compile numerically different (reassociated) binaries across
-        # processes and the 80-step trajectory amplifies that — 0.92 was
-        # observed flaking ~1-in-3 full-suite runs, so keep ≥6% margin
-        assert np.mean(losses[-10:]) < 0.95 * np.mean(losses[:5]), losses[-10:]
-        # staleness is structural, not convergence-dependent — a shorter
-        # block run suffices for the per-layer comparison
+        runs = [run("layup", steps=80, seed=100 * s) for s in range(3)]
+        losses = np.mean([r[0] for r in runs], axis=0)
+        stale = runs[0][1]
+        assert np.mean(losses[-10:]) < 0.92 * np.mean(losses[:5]), losses[-10:]
+        # staleness is structural, not convergence-dependent — one seed and
+        # a shorter block run suffice for the per-layer comparison
         _, stale_block = run("layup-block", steps=40)
         mean_layer = stale[40:].mean(axis=0)
         mean_block = stale_block[20:].mean(axis=0)

@@ -10,28 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _fixtures import mlp_batch as _batch, mlp_problem as _mlp_problem
 from _subproc import run_sub as _run
 from repro.core import TrainerBackend, make_backend
 from repro.optim import constant, momentum
-
-
-def _mlp_problem():
-    def loss_fn(p, b):
-        h = jnp.tanh(b["x"] @ p["l1"])
-        logits = h @ p["l2"]
-        ce = -jnp.mean(jax.nn.log_softmax(logits)[
-            jnp.arange(logits.shape[0]), b["labels"]])
-        return ce, {}
-
-    params = {"l1": jax.random.normal(jax.random.PRNGKey(1), (16, 32)) * 0.2,
-              "l2": jax.random.normal(jax.random.PRNGKey(2), (32, 10)) * 0.2}
-    return loss_fn, params
-
-
-def _batch(t, M=1, b=8):
-    return {"x": jax.random.normal(jax.random.PRNGKey(10 + t), (M, b, 16)),
-            "labels": jax.random.randint(jax.random.PRNGKey(90 + t),
-                                         (M, b), 0, 10)}
 
 
 class TestProdBackend:
@@ -117,6 +99,38 @@ class TestProdBackend:
                     for a, b in zip(jax.tree.leaves(st["read"]),
                                     jax.tree.leaves(p0)))
         assert moved > 0.0
+
+    def test_fifo_buffers_match_param_dtype(self):
+        """Satellite: the gradient FIFO allocates in the params' dtypes
+        (bf16 params get a bf16 FIFO — half the memory of the old f32
+        buffers), in BOTH FIFO implementations (prod fifo_init and the sim
+        trainer's delay state), and a step preserves the dtype."""
+        from repro.core import get_algorithm, make_sim_trainer
+        loss_fn, params = _mlp_problem()
+        params16 = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          update_delay=2)
+        st = be.init(jax.random.PRNGKey(0), params16)
+        for buf, p in zip(jax.tree.leaves(st["fifo"]["g"]),
+                          jax.tree.leaves(params16)):
+            assert buf.dtype == p.dtype, (buf.dtype, p.dtype)
+        st, _ = be.step(st, _batch(0), jax.random.PRNGKey(1))
+        for buf, p in zip(jax.tree.leaves(st["fifo"]["g"]),
+                          jax.tree.leaves(params16)):
+            assert buf.dtype == p.dtype, (buf.dtype, p.dtype)
+        assert st["fifo"]["stamp"].dtype == jnp.float32
+        init_fn, step_fn = make_sim_trainer(
+            get_algorithm("layup-hypercube"), loss_fn, momentum(0.9),
+            constant(0.05), 1, update_delay=2)
+        sst = init_fn(jax.random.PRNGKey(0), params16)
+        for buf, p in zip(jax.tree.leaves(sst.delay["g"]),
+                          jax.tree.leaves(params16)):
+            assert buf.dtype == p.dtype, (buf.dtype, p.dtype)
+        sst, _ = step_fn(sst, _batch(0), jax.random.PRNGKey(1))
+        for buf, p in zip(jax.tree.leaves(sst.delay["g"]),
+                          jax.tree.leaves(params16)):
+            assert buf.dtype == p.dtype, (buf.dtype, p.dtype)
 
     def test_version_clock_monotone_and_buffers_consistent(self):
         loss_fn, params = _mlp_problem()

@@ -1,0 +1,339 @@
+"""Stage-graph pipeline engine (DESIGN.md §10): loss/staleness parity with
+the monolithic decoupled step, buffer-lifetime management, and the measured
+per-stage timeline.
+
+The parity class is the tentpole acceptance: ``overlap=True`` must
+reproduce the monolithic ``make_layup_decoupled_train_step`` numerics
+EXACTLY at (R, D) ∈ {(1,0), (1,1), (2,1)} — the monolithic path is the
+numerics oracle, the engine only changes the dispatch schedule. In-process
+tests run the M=1 prod backend; the mesh tests run in subprocesses (the CI
+matrix covers both shard_map shim paths via its two jax versions)."""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _fixtures import mlp_batch as _batch, mlp_problem as _mlp_problem
+from _subproc import run_sub as _run
+from repro.core import make_backend
+from repro.launch.pipeline import StageTimeline
+from repro.optim import constant, momentum
+
+
+class TestEngineParity:
+    """Acceptance: the overlap engine is loss- and staleness-exact vs. the
+    monolithic decoupled step at every required operating point."""
+
+    @pytest.mark.parametrize("R,D", [(1, 0), (1, 1), (2, 1)])
+    def test_exact_vs_monolithic(self, R, D):
+        loss_fn, params = _mlp_problem()
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=R, update_delay=D)
+        mono = make_backend("prod", "layup", **kw)
+        pipe = make_backend("prod", "layup", overlap=True, **kw)
+        ms = mono.init(jax.random.PRNGKey(0), params)
+        ps = pipe.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(6):
+            b = _batch(t)
+            rng, r = jax.random.split(rng)
+            ms, mm = mono.step(ms, b, r)
+            ps, pm = pipe.step(ps, b, r)
+            assert float(mm["loss"]) == float(pm["loss"]), (R, D, t)
+            np.testing.assert_array_equal(
+                np.asarray(mm["layer_staleness"]),
+                np.asarray(pm["layer_staleness"]))
+            assert float(mm["update_staleness"]) == float(
+                pm["update_staleness"]), (R, D, t)
+            assert float(mm["disagreement"]) == float(pm["disagreement"])
+        # the engine-managed buffers end bit-identical to the step state
+        for a, b in zip(jax.tree.leaves(ps["read"]),
+                        jax.tree.leaves(ms["read"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_exact_with_straggler_mask(self):
+        """The update stage's active-mask path matches the monolithic
+        lane's straggler emulation step by step."""
+        loss_fn, params = _mlp_problem()
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=2, update_delay=1,
+                  straggler_delays=np.array([1]))
+        mono = make_backend("prod", "layup", **kw)
+        pipe = make_backend("prod", "layup", overlap=True, **kw)
+        ms = mono.init(jax.random.PRNGKey(0), params)
+        ps = pipe.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(4):
+            rng, r = jax.random.split(rng)
+            ms, mm = mono.step(ms, _batch(t), r)
+            ps, pm = pipe.step(ps, _batch(t), r)
+            assert float(mm["loss"]) == float(pm["loss"]), t
+
+    def test_sim_trainer_parity(self):
+        """Transitively: engine == monolithic == sim trainer, so the
+        engine inherits the PR-2 sim-vs-prod contract."""
+        loss_fn, params = _mlp_problem()
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=2, update_delay=1)
+        sim = make_backend("sim", "layup-hypercube", **kw)
+        pipe = make_backend("prod", "layup", overlap=True, **kw)
+        ss = sim.init(jax.random.PRNGKey(0), params)
+        ps = pipe.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(5):
+            rng, r = jax.random.split(rng)
+            ss, sm = sim.step(ss, _batch(t), r)
+            ps, pm = pipe.step(ps, _batch(t), r)
+            assert abs(float(sm["loss"]) - float(pm["loss"])) < 1e-5, t
+            np.testing.assert_array_equal(
+                np.asarray(sm["layer_staleness"]),
+                np.asarray(pm["layer_staleness"]))
+
+
+class TestEngineMechanics:
+    def test_timeline_records_all_stages(self):
+        loss_fn, params = _mlp_problem()
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          fb_ratio=2, update_delay=1, overlap=True)
+        st = be.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(3):
+            rng, r = jax.random.split(rng)
+            st, _ = be.step(st, _batch(t), r)
+        be.timeline.finalize()
+        stages = {e["stage"] for e in be.timeline.events}
+        assert stages == {"fwd", "update", "gossip"}
+        # R=2: two fwd slices per step
+        assert sum(1 for e in be.timeline.events
+                   if e["stage"] == "fwd" and e["step"] == 1) == 2
+        for e in be.timeline.events:
+            assert e["complete"] is not None
+            assert e["complete"] >= e["dispatch"]
+        s = be.timeline.summary()
+        for k in ("wall_s", "overlap_events", "overlap_s",
+                  "fwd_gossip_overlap_s", "stage_s", "steps"):
+            assert k in s
+        assert s["steps"] == 3
+
+    def test_summary_includes_overlap_fields(self):
+        loss_fn, params = _mlp_problem()
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          overlap=True)
+        st = be.init(jax.random.PRNGKey(0), params)
+        st, _ = be.step(st, _batch(0), jax.random.PRNGKey(1))
+        s = be.summary()
+        for k in ("pipeline_wall_s", "overlap_events", "overlap_s",
+                  "fwd_gossip_overlap_s"):
+            assert k in s
+
+    def test_graveyard_bounded_by_backpressure(self):
+        loss_fn, params = _mlp_problem()
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          fb_ratio=2, update_delay=1, overlap=True)
+        st = be.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(8):
+            rng, r = jax.random.split(rng)
+            st, _ = be.step(st, _batch(t), r)
+            assert len(be.engine._graveyard) <= be.engine.max_inflight_steps
+        # held handles are released once their fences retire
+        jax.block_until_ready(st)
+        st, _ = be.step(st, _batch(9), rng)
+        assert len(be.engine._graveyard) <= 1 + 1
+
+    def test_timeline_dump_is_json(self, tmp_path):
+        loss_fn, params = _mlp_problem()
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          overlap=True)
+        st = be.init(jax.random.PRNGKey(0), params)
+        st, _ = be.step(st, _batch(0), jax.random.PRNGKey(1))
+        be.timeline.finalize()
+        path = be.timeline.dump(str(tmp_path / "stages.json"))
+        with open(path) as f:
+            doc = json.load(f)
+        assert "summary" in doc and "events" in doc
+        assert doc["events"][0]["dispatch"] >= 0.0
+
+
+class TestTimelineAccounting:
+    """The overlap arithmetic, pinned with a synthetic clock and fences —
+    no jax, no timing flakes."""
+
+    class Fence:
+        def __init__(self):
+            self.ready = False
+
+        def is_ready(self):
+            return self.ready
+
+    def test_fwd_gossip_overlap_adjacent_and_counted_once(self):
+        clk = itertools.count()
+        tl = StageTimeline(clock=lambda: float(next(clk)))
+        g0 = self.Fence()
+        ev = tl.begin("gossip", 0)          # t=0 (poll at t=0)
+        tl.commit(ev, g0)                   # poll at t=1
+        f1a, f1b = self.Fence(), self.Fence()
+        ev = tl.begin("fwd", 1, slice_idx=0)   # t=2: gossip 0 in flight
+        assert ("gossip", 0, None) in ev["concurrent"]
+        tl.commit(ev, f1a)
+        ev = tl.begin("fwd", 1, slice_idx=1)   # t=4: still in flight
+        assert ("gossip", 0, None) in ev["concurrent"]
+        tl.commit(ev, f1b)
+        g0.ready = True
+        tl.poll()                           # gossip 0 completes at t=6
+        f1a.ready = f1b.ready = True
+        tl.finalize()
+        s = tl.summary()
+        # one window only (earliest fwd, dispatch t=2 → gossip complete
+        # t=6), even though both slices saw the gossip in flight
+        assert s["fwd_gossip_overlap_s"] == pytest.approx(4.0)
+        assert s["overlap_events"] == 2
+
+    def test_no_overlap_when_fences_ready(self):
+        clk = itertools.count()
+        tl = StageTimeline(clock=lambda: float(next(clk)))
+        g = self.Fence()
+        ev = tl.begin("gossip", 0)
+        tl.commit(ev, g)
+        g.ready = True
+        ev = tl.begin("fwd", 1, slice_idx=0)
+        assert ev["concurrent"] == []
+        f = self.Fence()
+        f.ready = True
+        tl.commit(ev, f)
+        tl.finalize()
+        assert tl.summary()["fwd_gossip_overlap_s"] == 0.0
+
+    def test_non_adjacent_gossip_not_counted(self):
+        clk = itertools.count()
+        tl = StageTimeline(clock=lambda: float(next(clk)))
+        g = self.Fence()
+        ev = tl.begin("gossip", 0)
+        tl.commit(ev, g)
+        ev = tl.begin("fwd", 5, slice_idx=0)  # step jump: not adjacent
+        assert ("gossip", 0, None) in ev["concurrent"]
+        f = self.Fence()
+        tl.commit(ev, f)
+        g.ready = f.ready = True
+        tl.finalize()
+        s = tl.summary()
+        assert s["fwd_gossip_overlap_s"] == 0.0
+        assert s["overlap_s"] > 0.0  # still counted as generic overlap
+
+
+class TestRouting:
+    def test_make_step_overlap_rejects_ddp(self):
+        from repro.configs import get_config, reduced, ShapeConfig
+        from repro.launch.train import make_step
+        from repro.models import build_model
+        m = build_model(reduced(get_config("stablelm-1.6b")))
+        shape = ShapeConfig("t", 16, 4, "train")
+        with pytest.raises(ValueError, match="decoupled"):
+            make_step(m, None, shape, algo="ddp", overlap=True)
+
+    def test_make_step_overlap_rejects_accum(self):
+        from repro.configs import get_config, reduced, ShapeConfig
+        from repro.launch.train import make_step
+        from repro.models import build_model
+        m = build_model(reduced(get_config("stablelm-1.6b")))
+        shape = ShapeConfig("t", 16, 4, "train")
+        with pytest.raises(ValueError, match="accum_steps"):
+            make_step(m, None, shape, algo="layup", overlap=True,
+                      accum_steps=2)
+
+    def test_forward_slice_lane_bounds(self):
+        from repro.launch.train import forward_slice_lane
+        loss_fn, _ = _mlp_problem()
+        with pytest.raises(ValueError, match="slice_idx"):
+            forward_slice_lane(loss_fn, fb_ratio=2, slice_idx=2)
+
+
+def test_pipeline_lowers_on_dryrun_mesh():
+    """make_step(..., overlap=True) lowers every stage executable on the
+    host-device dry-run meshes — tier-1, so the CI matrix exercises BOTH
+    shard_map shim paths on every PR (lower-only: no XLA compile)."""
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_config, reduced, ShapeConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import make_step
+from repro.models import build_model
+from repro.optim import momentum, constant
+cfg = reduced(get_config("stablelm-1.6b"))
+m = build_model(cfg)
+shape = ShapeConfig("t", 16, 4, "train")
+for mesh_shape, axes in (((1, 1, 2), ("pod", "data", "model")),
+                         ((2, 2), ("data", "model"))):
+    mesh = make_test_mesh(mesh_shape, axes)
+    step = make_step(m, mesh, shape, algo="layup", optimizer=momentum(0.9),
+                     schedule=constant(0.05), shifts=(1,), fb_ratio=2,
+                     update_delay=1, overlap=True)
+    lowered = step.lower()
+    assert sorted(lowered) == ["fwd0", "fwd1", "gossip", "update"], lowered
+    print("LOWERED", step.describe)
+""", timeout=900)
+    assert out.count("LOWERED") == 2
+    assert "R=2, D=1" in out
+
+
+@pytest.mark.slow
+def test_pipeline_m2_mesh_parity_with_monolithic():
+    """Acceptance (mesh form): the engine compiles AND RUNS on the dry-run
+    meshes, matching the monolithic step's losses and staleness exactly at
+    (R,D)=(2,1) with real gossip (M=2) and at (1,0)."""
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced, ShapeConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import (make_layup_decoupled_train_step,
+                                make_decoupled_state, make_step)
+from repro.models import build_model
+from repro.optim import momentum, constant
+from repro.data.synthetic import lm_batch_for
+
+cfg = reduced(get_config("stablelm-1.6b"))
+m = build_model(cfg)
+opt = momentum(0.9)
+for (mesh_shape, axes, M, bsz, R, D) in (
+        ((2, 2), ("data", "model"), 2, 8, 2, 1),
+        ((1, 1, 2), ("pod", "data", "model"), 1, 4, 1, 0)):
+    mesh = make_test_mesh(mesh_shape, axes)
+    shape = ShapeConfig("t", 16, bsz, "train")
+    mono = make_layup_decoupled_train_step(
+        m, mesh, opt, constant(0.05), shape, shifts=(1,), fb_ratio=R,
+        update_delay=D)
+    c = mono.lower().compile()
+    pipe = make_step(m, mesh, shape, algo="layup", optimizer=opt,
+                     schedule=constant(0.05), shifts=(1,), fb_ratio=R,
+                     update_delay=D, overlap=True)
+    params = m.init(jax.random.PRNGKey(0))
+    sp = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (M,) + p.shape) + 0, params)
+    ms = make_decoupled_state(sp, opt, update_delay=D)
+    ps = pipe.init_state(jax.tree.map(jnp.copy, sp))
+    batch = lm_batch_for(cfg, bsz, 16)
+    for t in range(3):
+        ms, mm = c(ms, batch, jnp.asarray(t, jnp.int32),
+                   jnp.zeros((), jnp.int32))
+        ps, pm = pipe.fn(ps, batch, t, 0)
+        dl = abs(float(mm["loss"]) - float(pm["loss"]))
+        ds = np.abs(np.asarray(mm["layer_staleness"])
+                    - np.asarray(pm["layer_staleness"])).max()
+        assert dl < 1e-6, (M, R, D, t, dl)
+        assert ds == 0.0, (M, R, D, t, ds)
+    pipe.timeline.finalize()
+    assert len(pipe.timeline.events) == 3 * (R + 2)
+    print(f"MESH PARITY OK M={M} R={R} D={D}")
+""")
+    assert out.count("MESH PARITY OK") == 2
