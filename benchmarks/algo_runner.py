@@ -91,9 +91,12 @@ def run_algorithm(algo_name: str, *, ds, init_params_fn, loss_fn, eval_fn,
         # evaluating a consensus snapshot.
         raw.append(metrics)
         if (t + 1) % eval_every == 0 or t == steps - 1:
-            # prod-lane state is a dict (read buffer + push-sum weights);
-            # sim state is a TrainState
-            params, weights = ((st["read"], st["w"]) if isinstance(st, dict)
+            # prod-lane state is a dict whose read buffer is the flat
+            # parameter plane — export_params unpacks it back to the
+            # stacked tree eval_fn expects (DESIGN.md §11); sim state is
+            # a TrainState
+            params, weights = ((num.export_params(st), st["w"])
+                               if isinstance(st, dict)
                                else (st.params, st.weights))
             xbar = consensus(params, weights)
             evals.append(float(eval_fn(xbar)))

@@ -1,0 +1,167 @@
+"""Gossip/update-path benchmark: legacy per-step repack vs flat plane.
+
+The legacy decoupled lane re-packed every layer group with ``ravel_pytree``
+on EVERY step and shipped a blanket-f32 wire; the flat-plane lane
+(DESIGN.md §11) packs once at init and gossips the persistent per-group
+buffers directly, in the params' dtype. This benchmark times full decoupled
+steps of the SAME workload through both lanes at several parameter sizes
+(small batch, parameter-heavy MLP — the step cost is dominated by the
+gossip/update path being compared), and records the bytes-on-wire of one
+plane for f32 vs bf16 params (the wire-dtype fix: bf16 must be exactly
+half).
+
+Emits ``gossip_path.*`` rows and dumps ``BENCH_gossip_path.json`` via
+``common.dump_json`` — the nightly job runs ``--quick`` and uploads the
+artifact, seeding the gossip-path perf trajectory. Asserts flat is
+strictly faster per step than the legacy repack at the largest benchmarked
+size (acceptance for the flat-plane PR).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dump_json, emit, section
+
+# (width, depth) of the MLP stack; params ≈ depth · width² floats
+SIZES = [(256, 4), (512, 6), (1024, 8)]
+SIZES_QUICK = [(128, 2), (256, 4)]
+
+
+def _problem(width: int, depth: int, dtype):
+    import jax
+    import jax.numpy as jnp
+
+    def loss_fn(p, b):
+        h = b["x"]
+        for blk in p["blocks"]:
+            h = jnp.tanh(h @ blk["w"] + blk["b"])
+        logits = (h @ p["head"]).astype(jnp.float32)
+        ce = -jnp.mean(jax.nn.log_softmax(logits)[
+            jnp.arange(logits.shape[0]), b["labels"]])
+        return ce, {}
+
+    k = jax.random.PRNGKey(0)
+    params = {
+        "blocks": [
+            {"w": (jax.random.normal(jax.random.fold_in(k, i), (width, width))
+                   * (1.0 / np.sqrt(width))).astype(dtype),
+             "b": jnp.zeros((width,), dtype)}
+            for i in range(depth)],
+        "head": (jax.random.normal(jax.random.fold_in(k, 99), (width, 16))
+                 * 0.05).astype(dtype),
+    }
+    return loss_fn, params
+
+
+def _batch(M: int, b: int, width: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.standard_normal((M, b, width)).astype(np.float32),
+            "labels": rng.integers(0, 16, (M, b))}
+
+
+def _time_steps(be, params, width: int, M: int, steps: int, warmup: int = 3):
+    """(median, min) per-step wall time (s). Each step blocks on its loss
+    — the monolithic lane is one jitted call, so per-step blocking
+    measures the true step latency (compile excluded by the warmup
+    steps). The median is the reported figure; the min (best case, the
+    standard microbenchmark statistic — scheduler noise only ever ADDS
+    time) is what the acceptance comparison uses."""
+    import jax
+    st = be.init(jax.random.PRNGKey(0), params)
+    batches = [_batch(M, 4, width, s) for s in range(4)]
+    times = []
+    for t in range(warmup + steps):
+        t0 = time.perf_counter()
+        st, m = be.step(st, batches[t % 4], None)
+        float(m["loss"])
+        if t >= warmup:
+            times.append(time.perf_counter() - t0)
+    return float(np.median(times)), float(np.min(times))
+
+
+def main(steps=None, quick=False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import FlatPartition, make_backend
+    from repro.optim import constant, momentum
+
+    steps = steps or (8 if quick else 30)
+    sizes = SIZES_QUICK if quick else SIZES
+    M = 2
+
+    section("Gossip path — legacy per-step repack vs persistent flat plane")
+
+    def measure(width, depth, steps):
+        loss_fn, params = _problem(width, depth, jnp.float32)
+        res = {}
+        for flavor, flat in (("legacy", False), ("flat", True)):
+            be = make_backend("prod", "layup", M=M, loss_fn=loss_fn,
+                              optimizer=momentum(0.9),
+                              schedule=constant(0.05), fb_ratio=1,
+                              update_delay=1, measure_drift=False,
+                              flat=flat)
+            res[flavor] = _time_steps(be, params, width, M, steps)
+        return res, params
+
+    per_size = {}
+    for width, depth in sizes:
+        res, params = measure(width, depth, steps)
+        nparams = sum(int(np.prod(l.shape))
+                      for l in jax.tree.leaves(params))
+        for flavor in ("legacy", "flat"):
+            med, best = res[flavor]
+            emit(f"gossip_path.W{width}xL{depth}.{flavor}", med * 1e6,
+                 f"min_us={best * 1e6:.1f};params={nparams};M={M};"
+                 f"steps={steps}")
+        emit(f"gossip_path.W{width}xL{depth}.speedup",
+             (res["legacy"][0] - res["flat"][0]) * 1e6,
+             f"x{res['legacy'][0] / res['flat'][0]:.3f}")
+        per_size[(width, depth)] = res
+
+    section("Wire bytes — param-dtype wire (bf16 = half the f32 plane)")
+    for width, depth in sizes:
+        _, p32 = _problem(width, depth, jnp.float32)
+        _, p16 = _problem(width, depth, jnp.bfloat16)
+        b32 = FlatPartition(p32).plane_nbytes()
+        b16 = FlatPartition(p16).plane_nbytes()
+        emit(f"gossip_path.W{width}xL{depth}.wire_bytes_f32", b32, "")
+        emit(f"gossip_path.W{width}xL{depth}.wire_bytes_bf16", b16,
+             f"ratio={b16 / b32:.3f}")
+        assert b16 * 2 == b32, (width, depth, b16, b32)
+
+    dump_json("gossip_path", prefix="gossip_path.")
+
+    # acceptance: the flat plane is strictly faster than the legacy repack
+    # at the LARGEST size of whichever size set ran (--quick included).
+    # Wall-clock comparisons on a shared runner are noisy, so the
+    # comparison uses the per-flavor MIN step time (noise only ever adds
+    # time — the min is the intrinsic cost) and, if even that is inverted
+    # by a noisy window, re-measures once before failing.
+    big = per_size[sizes[-1]]
+    if big["flat"][1] >= big["legacy"][1]:
+        print("# largest-size comparison inverted (noisy run?) — "
+              "re-measuring once", flush=True)
+        big, _ = measure(*sizes[-1], steps)
+    assert big["flat"][1] < big["legacy"][1], (
+        f"flat plane not faster at {sizes[-1]} (min per-step): "
+        f"flat={big['flat'][1] * 1e6:.1f}us "
+        f"legacy={big['legacy'][1] * 1e6:.1f}us")
+    print(f"# flat plane {big['legacy'][1] / big['flat'][1]:.3f}x faster "
+          f"(min per-step) at W{sizes[-1][0]}xL{sizes[-1][1]}", flush=True)
+    return per_size
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import ensure_host_devices
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    ensure_host_devices(2)
+    main(steps=args.steps, quick=args.quick)

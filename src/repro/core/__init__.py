@@ -7,7 +7,8 @@ from repro.core.backend import (
     drive, make_backend,
 )
 from repro.core.layerview import (
-    LayerPartition, LayerView, layer_staleness, send_fractions, stamp_groups,
+    FlatPartition, LayerPartition, LayerView, layer_staleness, send_fractions,
+    stamp_groups,
     version_metrics,
 )
 
@@ -16,6 +17,7 @@ __all__ = [
     "make_sim_trainer", "register_algorithm", "consensus", "disagreement",
     "EventSimBackend", "ProdTrainerBackend", "SimTrainerBackend",
     "TrainerBackend", "drive", "make_backend",
-    "LayerPartition", "LayerView", "layer_staleness", "send_fractions",
+    "FlatPartition", "LayerPartition", "LayerView", "layer_staleness",
+    "send_fractions",
     "stamp_groups", "version_metrics",
 ]

@@ -185,7 +185,8 @@ class ProdTrainerBackend:
                  M: int, *, mesh=None, shifts=(1, 2, 4, 8),
                  fb_ratio: int = 1, update_delay: int = 0,
                  straggler_delays=None, measure_drift: bool = True,
-                 overlap: bool = False):
+                 overlap: bool = False, flat: bool = True,
+                 use_pallas: bool = False):
         import jax
         from repro.launch.mesh import num_workers
         from repro.launch.train import make_decoupled_backend_trainer
@@ -212,6 +213,7 @@ class ProdTrainerBackend:
         self.M = M
         self.mesh = mesh
         self.overlap = bool(overlap)
+        self.flat = bool(flat)
         if overlap:
             from repro.launch.pipeline import (StageTimeline,
                                                make_pipeline_backend_trainer)
@@ -221,16 +223,17 @@ class ProdTrainerBackend:
                     loss_fn, optimizer, schedule, mesh, shifts=shifts,
                     fb_ratio=fb_ratio, update_delay=update_delay,
                     straggler_delays=straggler_delays,
-                    measure_drift=measure_drift, timeline=self.timeline)
+                    measure_drift=measure_drift, timeline=self.timeline,
+                    flat=flat, use_pallas=use_pallas)
         else:
             self.timeline = None
-            self._engine_box = {}
-            self._init_fn, self._step_fn, self._shifts = \
+            self._init_fn, self._step_fn, self._shifts, self._engine_box = \
                 make_decoupled_backend_trainer(
                     loss_fn, optimizer, schedule, mesh, shifts=shifts,
                     fb_ratio=fb_ratio, update_delay=update_delay,
                     straggler_delays=straggler_delays,
-                    measure_drift=measure_drift)
+                    measure_drift=measure_drift, flat=flat,
+                    use_pallas=use_pallas)
         self._steps = 0
         self._last: Dict[str, Any] = {}
         # host-side gossip-shift schedule: deterministic per backend, no
@@ -242,6 +245,19 @@ class ProdTrainerBackend:
     def engine(self):
         """The PipelineEngine (overlap=True, after init); else None."""
         return self._engine_box.get("engine")
+
+    def export_params(self, state):
+        """Stacked ``(M, ...)`` parameter TREE view of the state's read
+        buffer — unpacks the persistent flat plane (DESIGN.md §11);
+        identity on the legacy ``flat=False`` tree state. The handle for
+        anything that consumes parameters structurally: eval/consensus
+        snapshots (benchmarks/algo_runner) and checkpoint export."""
+        if not self.flat:
+            return state["read"]
+        part = self._engine_box.get("part")
+        if part is None:
+            raise RuntimeError("call init() before export_params()")
+        return part.unpack(state["read"])
 
     def init(self, rng, params_single):
         self._steps = 0
@@ -287,7 +303,10 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
                   (or an explicit mesh kwarg).
     Shared kwargs: straggler_delays, fb_ratio, update_delay; sim/prod also
     take measure_drift, event also takes sync_every and seed, prod also
-    takes mesh, shifts and overlap (the stage-graph pipeline engine).
+    takes mesh, shifts, overlap (the stage-graph pipeline engine), flat
+    (default True — the persistent flat parameter plane with param-dtype
+    gossip wire; False restores the legacy tree state + per-step f32
+    ravel) and use_pallas (fused gossip_mix kernel).
     """
     if kind == "sim":
         if loss_fn is None or optimizer is None or schedule is None:

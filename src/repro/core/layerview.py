@@ -19,6 +19,16 @@ updates (and their staleness) a first-class, measurable concept
   every layer-wise stamp lies within the backward pass, in (0, 1] of the
   iteration, strictly fresher than block mode's 2-iteration queue.
 
+* ``FlatPartition`` — a :class:`LayerPartition` that additionally fixes a
+  **persistent flat layout**: every layer group packs into ONE contiguous
+  buffer per dtype (leaves flattened and concatenated in tree order, each
+  leaf stored at its own dtype). ``pack`` runs once at state init
+  (`make_decoupled_state`) — from then on the plane IS the parameter
+  representation: gossip collectives ship the per-group buffers directly
+  (no per-step ``ravel_pytree``, no f32 upcast of a bf16 wire) and
+  ``unpack`` is a cheap static slice+reshape view materialized only for
+  the forward pass and for checkpoint export (DESIGN.md §11).
+
 * ``LayerView`` — the pytree handed to the hooks: ``groups`` (an ordered
   ``{name: {path: leaf}}`` mapping whose leaves keep the stacked ``(M, ...)``
   layout, so ``jax.tree.map`` works exactly as it did on the raw tree) plus
@@ -38,7 +48,7 @@ updates (and their staleness) a first-class, measurable concept
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,6 +131,126 @@ class LayerPartition:
             versions = self.init_versions(M)
         return LayerView(groups=self.split(tree), versions=versions,
                          names=self.names)
+
+
+class _LeafSlot(NamedTuple):
+    """Where one leaf lives inside its group's flat buffer."""
+    group: str
+    offset: int
+    size: int
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+class FlatPartition(LayerPartition):
+    """A :class:`LayerPartition` with a fixed flat layout per group.
+
+    Each group's leaves are flattened (C order) and concatenated, in tree
+    order, into one contiguous buffer PER DTYPE: a uniform-dtype group
+    (the usual case) is exactly one buffer named after the group, in the
+    params' dtype — so a bf16 model gets a bf16 plane and a bf16 gossip
+    wire; a group mixing dtypes (e.g. bf16 weights + f32 norm scales)
+    gets one ``"<group>:<dtype>"`` buffer per dtype. Every leaf is stored
+    at ITS OWN dtype — the flat plane never silently promotes bf16
+    leaves to f32 master copies, so the persistent representation is
+    numerically identical to the legacy per-leaf tree state.
+    ``pack``/``unpack`` accept any number of leading batch axes
+    (worker-stacked ``(M, ...)`` trees, ``(M, D, ...)`` FIFO stacks) —
+    the leading axes are inferred from the first leaf and carried through
+    to the buffers.
+
+    Both directions are pure static reshuffles (reshape/concat on pack,
+    slice/reshape on unpack), safe under ``jit`` and free to fuse into
+    their consumers. The intended discipline is pack-once: the plane is
+    the persistent state, ``unpack`` produces the tree view for the
+    forward pass / checkpoint export, and per-step packing is only ever
+    applied to gradients (DESIGN.md §11).
+
+    ``group_sizes``/``group_dtypes`` are keyed by plane-buffer name
+    (== group name for uniform groups); ``names`` (inherited) stays the
+    per-group key of the version clocks.
+    """
+
+    def __init__(self, example_tree):
+        super().__init__(example_tree)
+        flat, _ = jax.tree_util.tree_flatten_with_path(example_tree)
+        dtypes_by_group: Dict[str, list] = {n: [] for n in self.names}
+        for (label, _), (_, leaf) in zip(self._index, flat):
+            dt = jnp.dtype(leaf.dtype)
+            if dt not in dtypes_by_group[label]:
+                dtypes_by_group[label].append(dt)
+
+        def bucket(label, dt):
+            if len(dtypes_by_group[label]) == 1:
+                return label
+            return f"{label}:{jnp.dtype(dt).name}"
+
+        self.group_dtypes: Dict[str, Any] = {}
+        sizes: Dict[str, int] = {}
+        self._slots: list = []  # per leaf, in tree-flatten order
+        for (label, _), (_, leaf) in zip(self._index, flat):
+            dt = jnp.dtype(leaf.dtype)
+            key = bucket(label, dt)
+            self.group_dtypes[key] = dt
+            shape = tuple(int(d) for d in leaf.shape)
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            self._slots.append(_LeafSlot(key, sizes.get(key, 0), size,
+                                         shape, dt))
+            sizes[key] = sizes.get(key, 0) + size
+        self.group_sizes: Dict[str, int] = sizes
+
+    def plane_nbytes(self) -> int:
+        """Bytes of ONE flat plane (single worker) — the per-step gossip
+        wire cost per peer, and the regression hook for the
+        wire-dtype-follows-params guarantee (bf16 plane = half the f32
+        plane)."""
+        return sum(size * jnp.dtype(self.group_dtypes[n]).itemsize
+                   for n, size in self.group_sizes.items())
+
+    def abstract_plane(self, lead: Tuple[int, ...] = ()) -> Dict[str, Any]:
+        """ShapeDtypeStructs of the plane with the given leading axes."""
+        return {n: jax.ShapeDtypeStruct(tuple(lead) + (size,),
+                                        self.group_dtypes[n])
+                for n, size in self.group_sizes.items()}
+
+    def pack(self, tree) -> Dict[str, Any]:
+        """Tree → ``{group: (*lead, group_size) buffer}``. Leading axes are
+        inferred (leaves must share them); leaves are cast to the group
+        dtype."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self._slots):
+            raise ValueError(f"tree has {len(leaves)} leaves; partition "
+                             f"expects {len(self._slots)}")
+        lead = leaves[0].ndim - len(self._slots[0].shape)
+        if lead < 0:
+            raise ValueError(
+                f"leaf rank {leaves[0].ndim} below partition rank "
+                f"{len(self._slots[0].shape)}")
+        chunks: Dict[str, list] = {n: [] for n in self.group_sizes}
+        for slot, leaf in zip(self._slots, leaves):
+            if tuple(leaf.shape[lead:]) != slot.shape:
+                raise ValueError(
+                    f"leaf shape {tuple(leaf.shape)} does not end with "
+                    f"partition shape {slot.shape} (lead={lead})")
+            buf = jnp.asarray(leaf).astype(self.group_dtypes[slot.group])
+            chunks[slot.group].append(
+                buf.reshape(tuple(leaf.shape[:lead]) + (slot.size,)))
+        return {n: (jnp.concatenate(c, axis=-1) if len(c) > 1 else c[0])
+                for n, c in chunks.items()}
+
+    def unpack(self, plane: Dict[str, Any]):
+        """``{group: (*lead, group_size)}`` → tree (original shapes and
+        dtypes, leading axes preserved). Static slices — a view, not a
+        repack."""
+        leaves = []
+        for slot in self._slots:
+            buf = plane[slot.group]
+            lead = tuple(buf.shape[:-1])
+            piece = jax.lax.slice_in_dim(buf, slot.offset,
+                                         slot.offset + slot.size, axis=-1)
+            leaves.append(piece.reshape(lead + slot.shape)
+                          .astype(slot.dtype))
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
 
 
 @jax.tree_util.register_dataclass

@@ -8,6 +8,13 @@ Fusing the three reads + one write into a single pass halves HBM traffic for
 the update path versus separate mix and apply ops (the op is purely
 memory-bound: 3 reads + 1 write per element). 1-D grid over (8·TILE,128)
 tiles of the flattened parameter; α/β prefetched as scalars.
+
+``upd=None`` selects the pure-mix variant (2 reads + 1 write: the lockstep
+gossip path, which mixes already-updated parameters). The gossip lanes in
+``repro.launch.train`` call this kernel per layer group on the persistent
+flat plane (`FlatPartition` buffers) behind their ``use_pallas`` flag, with
+``interpret=True`` on CPU and ``repro.kernels.ref.gossip_mix_ref`` as the
+numerics oracle.
 """
 from __future__ import annotations
 
@@ -31,9 +38,20 @@ def _mix_kernel(ab_ref, x_ref, r_ref, u_ref, o_ref):
     o_ref[...] = (a * x + b * r + u).astype(o_ref.dtype)
 
 
+def _mix_kernel_pure(ab_ref, x_ref, r_ref, o_ref):
+    a = ab_ref[0]
+    b = ab_ref[1]
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    o_ref[...] = (a * x + b * r).astype(o_ref.dtype)
+
+
 def gossip_mix(x, x_recv, upd, alpha, beta, *, tile_rows: int = 256,
                interpret: bool = False):
-    """Flat fused mix+update on one parameter leaf (any shape)."""
+    """Flat fused mix+update on one parameter leaf (any shape).
+
+    ``upd=None`` drops the update operand entirely (pure mix, 2 reads +
+    1 write) rather than streaming a zeros buffer through the kernel."""
     shape, dtype = x.shape, x.dtype
     n = x.size
     cols = LANE
@@ -52,19 +70,19 @@ def gossip_mix(x, x_recv, upd, alpha, beta, *, tile_rows: int = 256,
     ab = jnp.stack([jnp.asarray(alpha, jnp.float32),
                     jnp.asarray(beta, jnp.float32)])
 
+    operands = [ab, flat(x), flat(x_recv)]
+    if upd is not None:
+        operands.append(flat(upd))
     out = pl.pallas_call(
-        _mix_kernel,
+        _mix_kernel if upd is not None else _mix_kernel_pure,
         grid=(ntiles,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
-            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
-            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
-        ],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
+        + [pl.BlockSpec((tile, cols), lambda i: (i, 0))
+           for _ in operands[1:]],
         out_specs=pl.BlockSpec((tile, cols), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, cols), dtype),
         interpret=interpret,
-    )(ab, flat(x), flat(x_recv), flat(upd))
+    )(*operands)
     return out.reshape(-1)[:n].reshape(shape)
 
 

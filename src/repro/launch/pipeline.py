@@ -69,12 +69,15 @@ import numpy as np
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.layerview import LayerPartition, send_fractions, stamp_groups
+from repro.core.layerview import (
+    FlatPartition, LayerPartition, send_fractions, stamp_groups,
+)
 from repro.launch.mesh import data_axes, num_workers
 from repro.launch.train import (
     _abstract_batch, _decoupled_metrics, _opt_shardings_stacked,
     _worker_batch_pspec, backward_update_lane, forward_slice_lane,
-    gossip_lane, make_decoupled_state, shard_map, straggler_active_fn,
+    gossip_fused_lane, gossip_lane_legacy, gossip_plane_lane,
+    make_decoupled_state, shard_map, straggler_active_fn,
 )
 from repro.launch import sharding as SH
 from repro.optim.optimizers import Optimizer
@@ -243,7 +246,8 @@ def _restack(t):
 def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
                   fwd_slices: Sequence[Callable], upd: Callable,
                   mix: Callable, *, squeeze_batch: bool = False,
-                  active_fn: Optional[Callable] = None):
+                  active_fn: Optional[Callable] = None, flat: bool = False,
+                  fused: bool = False):
     """Per-worker stage bodies. They compose the SAME lane closures as
     ``_decoupled_worker_fn``, split at the stage boundaries, so each
     stage's math is identical to the corresponding span of the monolithic
@@ -251,7 +255,15 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
     per-worker loss vector and the metrics stage combines slices first
     (monolithic order: ``(l0 + sum(rest)) / R``), then means over workers —
     bitwise-equal to ``lax.pmean`` of the per-worker combination for
-    M ≤ 2, and within reduction-order noise beyond."""
+    M ≤ 2, and within reduction-order noise beyond.
+
+    ``flat``: read/write/opt/fifo are the persistent flat plane; the
+    backward fwd slice packs its gradients before returning them, so the
+    grads that cross the stage boundary are already plane buffers.
+    ``fused`` (use_pallas): the update stage consumes the write plane
+    READ-ONLY and returns the update deltas; the gossip stage takes
+    (write, updates) and folds apply+mix into the fused kernel pass
+    (``mix`` is then a :func:`gossip_fused_lane` closure)."""
     phi = jnp.asarray(send_fractions(part.num_groups))
 
     def make_fwd_body(r):
@@ -261,8 +273,10 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
             read = _unstack(read_st)
             if squeeze_batch:  # sim-layout batches carry a worker axis
                 batch = _unstack(batch)
-            loss, grads = lane(read, batch)
+            loss, grads = lane(part.unpack(read) if flat else read, batch)
             if r == 0:
+                if flat:
+                    grads = part.pack(grads)
                 return loss[None], _restack(grads)
             return loss[None]
 
@@ -279,17 +293,26 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
         opt_state = _unstack_opt(opt_st)
         grads = _unstack(grads_st)
         active = active_fn(step_idx) if active_fn is not None else None
-        write, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
-                                                fifo, step_idx, active=active)
-        outs = [_restack(write), _restack(opt_state)]
+        out, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
+                                              fifo, step_idx, active=active)
+        # fused: ``out`` is the update-delta plane (write untouched);
+        # default: ``out`` is the updated write buffer
+        outs = [_restack(out), _restack(opt_state)]
         if D > 0:
             outs += [_restack(fifo["g"]), fifo["stamp"]]
         return tuple(outs) + (upd_stale,)
 
-    def gossip_body(write_st, w_st, versions, step_idx, shift_idx):
+    def gossip_body(*args):
+        if fused:
+            write_st, upd_st, w_st, versions, step_idx, shift_idx = args
+        else:
+            write_st, w_st, versions, step_idx, shift_idx = args
         write = _unstack(write_st)
         w = w_st[0]
-        write, w = mix(write, w, shift_idx)
+        if fused:
+            write, w = mix(write, _unstack(upd_st), w, shift_idx)
+        else:
+            write, w = mix(write, w, shift_idx)
         if M > 1:
             versions = stamp_groups(versions,
                                     step_idx.astype(jnp.float32) + phi)
@@ -305,12 +328,20 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
 
 
 def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
-                shardings: Optional[Dict[str, Any]] = None):
+                shardings: Optional[Dict[str, Any]] = None,
+                fused: bool = False):
     """shard_map + jit each stage body into its executable.
 
     ``shardings`` (Model path) pins jit-level in/out shardings so the model
     axis flows through GSPMD exactly like the monolithic step; the generic
-    backend path omits it (plain jit, shardings inferred from shard_map)."""
+    backend path omits it (plain jit, shardings inferred from shard_map).
+
+    ``fused`` (use_pallas): the update stage's first output is the
+    update-delta plane (its parameter input stays read-only — same
+    donation set: opt/fifo/grads) and the gossip stage gains the deltas
+    as a second argument. Gossip then donates the DELTAS instead of the
+    plane: its plane input aliases the engine's read buffer, which the
+    in-flight forward slices of the same step still read."""
     pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
     fwd_bodies, update_body, gossip_body, metrics_fn = bodies
 
@@ -323,44 +354,49 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
     fifo_in = (pw, P()) if D > 0 else ()
     update_sm = sm(update_body, (pw, pw) + fifo_in + (pw, P()),
                    (pw, pw) + fifo_in + (P(),))
-    gossip_sm = sm(gossip_body, (pw, pw, pw, P(), P()), (pw, pw, pw))
+    gossip_in = ((pw, pw) if fused else (pw,)) + (pw, pw, P(), P())
+    gossip_sm = sm(gossip_body, gossip_in, (pw, pw, pw))
 
-    def gossip_step(write_st, w_st, versions, losses, upd_stale, step_idx,
-                    shift_idx):
+    def gossip_step(*args):
         # gossip + the metric reduction in ONE executable: per-slice
         # per-worker losses combine in the monolithic order
         # ((l0 + sum(rest)) / R, then mean over workers) and the staleness
         # metrics read the freshly stamped clocks — identical math to
         # _decoupled_step_caller, one less dispatch per step
-        mixed, w, versions = gossip_sm(write_st, w_st, versions, step_idx,
-                                       shift_idx)
+        *plane_args, w_st, versions, losses, upd_stale, step_idx, \
+            shift_idx = args
+        mixed, w, versions = gossip_sm(*plane_args, w_st, versions,
+                                       step_idx, shift_idx)
         metrics = metrics_fn(losses, w, versions, upd_stale, step_idx)
         return mixed, w, versions, metrics
 
     donate_upd = (1, 2, 3, 4) if D > 0 else (1, 2)
+    donate_gossip = (1, 2, 3) if fused else (0, 1, 2)
     if shardings is None:
         fwd = [jax.jit(f) for f in fwd_sm]
         update = jax.jit(update_sm, donate_argnums=donate_upd)
-        gossip = jax.jit(gossip_step, donate_argnums=(0, 1, 2))
+        gossip = jax.jit(gossip_step, donate_argnums=donate_gossip)
     else:
         s = shardings
         fwd = [jax.jit(fwd_sm[0], in_shardings=(s["p"], s["batch"]),
-                       out_shardings=(s["lossvec"], s["p"]))]
+                       out_shardings=(s["lossvec"], s["grads"]))]
         fwd += [jax.jit(f, in_shardings=(s["p"], s["batch"]),
                         out_shardings=s["lossvec"]) for f in fwd_sm[1:]]
         fifo_sh = (s["fifo_g"], s["scalar"]) if D > 0 else ()
         update = jax.jit(
             update_sm,
-            in_shardings=(s["p"], s["opt"]) + fifo_sh + (s["p"], s["scalar"]),
-            out_shardings=(s["p"], s["opt"]) + fifo_sh + (s["scalar"],),
+            in_shardings=(s["p"], s["opt"]) + fifo_sh
+            + (s["grads"], s["scalar"]),
+            out_shardings=(s["upd"], s["opt"]) + fifo_sh + (s["scalar"],),
             donate_argnums=donate_upd)
         R_loss = tuple([s["lossvec"]] * len(fwd_sm))
+        gossip_p = (s["p"], s["upd"]) if fused else (s["p"],)
         gossip = jax.jit(
             gossip_step,
-            in_shardings=(s["p"], s["w"], s["w"], R_loss, s["scalar"],
-                          s["scalar"], s["scalar"]),
+            in_shardings=gossip_p + (s["w"], s["w"], R_loss, s["scalar"],
+                                     s["scalar"], s["scalar"]),
             out_shardings=(s["p"], s["w"], s["w"], s["metrics"]),
-            donate_argnums=(0, 1, 2))
+            donate_argnums=donate_gossip)
     return {"fwd": fwd, "update": update, "gossip": gossip}
 
 
@@ -383,8 +419,9 @@ class PipelineEngine:
     def __init__(self, *, R: int, D: int, M: int, stages: Dict[str, Any],
                  timeline: Optional[StageTimeline] = None, describe: str = "",
                  abstract_args: Optional[Dict[str, tuple]] = None,
-                 max_inflight_steps: int = 3):
+                 max_inflight_steps: int = 3, fused: bool = False):
         self.R, self.D, self.M = int(R), int(D), int(M)
+        self.fused = bool(fused)
         self._stages = stages
         self.timeline = timeline if timeline is not None else StageTimeline()
         self.describe = describe
@@ -440,7 +477,9 @@ class PipelineEngine:
             losses.append(lr)
 
         # backward/update lane: donates opt + fifo + grads, NOT the params
-        # (the write handle aliases the read buffer the fwd slices consume)
+        # (the write handle aliases the read buffer the fwd slices
+        # consume). In fused (use_pallas) mode the first output is the
+        # update-delta plane and the write buffer is consumed read-only.
         ev = tl.begin("update", t)
         if self.D > 0:
             write, opt, fifo_g, fifo_stamp, upd_stale = self._stages[
@@ -451,13 +490,20 @@ class PipelineEngine:
                 state["write"], state["opt"], grads, si)
         tl.commit(ev, upd_stale)
 
-        # gossip lane (+ fused metric reduction): donates the update's
-        # fresh output + w + versions; the mixed result becomes both
-        # next-step buffer handles
+        # gossip lane (+ fused metric reduction): the mixed result becomes
+        # both next-step buffer handles. Default: donates the update's
+        # fresh output — the flat plane itself — + w + versions. Fused:
+        # the plane argument aliases the live read buffer, so the deltas
+        # are donated instead of the plane.
         ev = tl.begin("gossip", t)
-        mixed, w, versions, metrics = self._stages["gossip"](
-            write, state["w"], state["versions"], tuple(losses), upd_stale,
-            si, sh)
+        if self.fused:
+            mixed, w, versions, metrics = self._stages["gossip"](
+                state["write"], write, state["w"], state["versions"],
+                tuple(losses), upd_stale, si, sh)
+        else:
+            mixed, w, versions, metrics = self._stages["gossip"](
+                write, state["w"], state["versions"], tuple(losses),
+                upd_stale, si, sh)
         tl.commit(ev, metrics["loss"])
 
         # hold EVERY handle this step touched until its last fence retires:
@@ -532,11 +578,15 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                   preset: Optional[str] = None,
                                   fb_ratio: int = 2, update_delay: int = 1,
                                   constrain_grads: bool = False,
-                                  timeline: Optional[StageTimeline] = None
-                                  ) -> PipelineStep:
+                                  timeline: Optional[StageTimeline] = None,
+                                  flat: bool = True,
+                                  use_pallas: bool = False) -> PipelineStep:
     """The decoupled LayUp lane as a stage-graph pipeline on the real mesh —
     same sharding/abstract setup as ``make_layup_decoupled_train_step``,
-    split into separately jitted stages."""
+    split into separately jitted stages. ``flat=True`` (default): the
+    engine's double buffers ARE the persistent flat plane and the gossip
+    stage donates it; ``use_pallas`` swaps in the fused-kernel gossip
+    stage (DESIGN.md §11)."""
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
@@ -557,43 +607,67 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                         tuple(sp.shape)),
             model.specs, is_leaf=is_spec)
 
-    part = LayerPartition(model.abstract_params())
+    if use_pallas and not flat:
+        raise ValueError("use_pallas requires the flat plane (flat=True)")
+    part = FlatPartition(model.abstract_params())
     fwd_slices = [forward_slice_lane(model.loss_fn, fb_ratio=R, slice_idx=r,
                                      grad_specs=grad_specs)
                   for r in range(R)]
-    upd = backward_update_lane(optimizer, schedule, update_delay=D)
-    mix = gossip_lane(part, M, ax, shifts)
-    bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd, mix)
+    upd = backward_update_lane(optimizer, schedule, update_delay=D,
+                               apply=not use_pallas)
+    if use_pallas:
+        mix = gossip_fused_lane(part, M, ax, shifts)
+    elif flat:
+        mix = gossip_plane_lane(part, M, ax, shifts)
+    else:
+        mix = gossip_lane_legacy(part, M, ax, shifts)
+    bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd, mix,
+                           flat=flat, fused=use_pallas)
 
     pw = P(ax)
     abstract_params = model.abstract_params()
     stack = lambda s: jax.ShapeDtypeStruct((M,) + tuple(s.shape), s.dtype)
-    stacked_params = jax.tree.map(stack, abstract_params)
-    abstract_opt_single = jax.eval_shape(optimizer.init, abstract_params)
+    abstract_opt_base = part.abstract_plane() if flat else abstract_params
+    if flat:
+        stacked_params = part.abstract_plane((M,))
+        fifo_g_abs = part.abstract_plane((M, D))
+    else:
+        stacked_params = jax.tree.map(stack, abstract_params)
+        fifo_g_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((M, D) + tuple(s.shape), s.dtype),
+            abstract_params)
+    abstract_opt_single = jax.eval_shape(optimizer.init, abstract_opt_base)
     stacked_opt = jax.tree.map(stack, abstract_opt_single)
     batch_abs = _abstract_batch(cfg, shape)
 
-    p_sh = SH.param_shardings(model, mesh, stacked_workers=M,
-                              overrides=overrides, preset=preset)
-    opt_sh = _opt_shardings_stacked(abstract_opt_single, abstract_params,
-                                    p_sh, mesh, M)
     w_sh = NamedSharding(mesh, pw)
     scalar = NamedSharding(mesh, P())
+    if flat:
+        p_sh = jax.tree.map(lambda _: w_sh, stacked_params)
+        opt_sh = jax.tree.map(lambda _: w_sh, stacked_opt)
+        fifo_g_sh = jax.tree.map(lambda _: w_sh, fifo_g_abs)
+    else:
+        p_sh = SH.param_shardings(model, mesh, stacked_workers=M,
+                                  overrides=overrides, preset=preset)
+        opt_sh = _opt_shardings_stacked(abstract_opt_single, abstract_params,
+                                        p_sh, mesh, M)
+        fifo_g_sh = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, P(s.spec[0], None, *tuple(s.spec)[1:])), p_sh)
     b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
                               preset=preset)
     shardings = {
         "p": p_sh, "opt": opt_sh, "w": w_sh, "scalar": scalar, "batch": b_sh,
-        "lossvec": w_sh,
-        "fifo_g": jax.tree.map(
-            lambda s: NamedSharding(
-                mesh, P(s.spec[0], None, *tuple(s.spec)[1:])), p_sh),
+        "lossvec": w_sh, "grads": p_sh, "upd": p_sh,
+        "fifo_g": fifo_g_sh,
         "metrics": {"loss": scalar, "update_staleness": scalar,
                     "layer_staleness": scalar, "staleness_mean": scalar,
                     "weight_sum": scalar},
     }
     batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax), batch_abs)
     stages = _jit_stages(bodies, mesh, worker_axes, R, D,
-                         batch_specs=batch_specs_sm, shardings=shardings)
+                         batch_specs=batch_specs_sm, shardings=shardings,
+                         fused=use_pallas)
 
     i32 = jax.ShapeDtypeStruct((), jnp.int32)
     f32 = jax.ShapeDtypeStruct((), jnp.float32)
@@ -602,25 +676,32 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
     lossvec_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
     fifo_abs = ()
     if D > 0:
-        fifo_abs = (jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct((M, D) + tuple(s.shape), s.dtype),
-            abstract_params), jax.ShapeDtypeStruct((D,), jnp.float32))
+        fifo_abs = (fifo_g_abs, jax.ShapeDtypeStruct((D,), jnp.float32))
+    upd_abs = (jax.eval_shape(
+        lambda p: optimizer.update(p, optimizer.init(p), p, 0.1)[0],
+        abstract_opt_base) if use_pallas else stacked_params)
+    if use_pallas:
+        upd_abs = jax.tree.map(stack, upd_abs)
+    gossip_plane_abs = ((stacked_params, upd_abs) if use_pallas
+                       else (stacked_params,))
     abstract_args = {
         "fwd": (stacked_params, batch_abs),
         "update": (stacked_params, stacked_opt) + fifo_abs
                   + (stacked_params, i32),
-        "gossip": (stacked_params, w_abs, v_abs, tuple([lossvec_abs] * R),
-                   f32, i32, i32),
+        "gossip": gossip_plane_abs + (w_abs, v_abs,
+                                      tuple([lossvec_abs] * R),
+                                      f32, i32, i32),
     }
     engine = PipelineEngine(
-        R=R, D=D, M=M, stages=stages, timeline=timeline,
+        R=R, D=D, M=M, stages=stages, timeline=timeline, fused=use_pallas,
         describe=(f"layup decoupled pipeline (M={M}, R={R}, D={D}, "
-                  f"shifts={shifts}, stages={R + 2})"),
+                  f"shifts={shifts}, stages={R + 2}, flat={flat}"
+                  f"{', pallas' if use_pallas else ''})"),
         abstract_args=abstract_args)
 
     def init_state(params_stacked):
         return make_decoupled_state(params_stacked, optimizer,
-                                    update_delay=D, part=part)
+                                    update_delay=D, part=part, flat=flat)
 
     return PipelineStep(engine, init_state, engine.describe)
 
@@ -631,7 +712,9 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                   fb_ratio: int = 1, update_delay: int = 0,
                                   straggler_delays=None,
                                   measure_drift: bool = False,
-                                  timeline: Optional[StageTimeline] = None):
+                                  timeline: Optional[StageTimeline] = None,
+                                  flat: bool = True,
+                                  use_pallas: bool = False):
     """Pipeline-engine counterpart of ``make_decoupled_backend_trainer``:
     same generic pytree + loss_fn contract, same sim-layout batches, but
     the step is the stage-graph engine instead of one jitted program.
@@ -647,18 +730,31 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
     pw = P(ax)
     box: Dict[str, Any] = {}
 
+    if use_pallas and not flat:
+        raise ValueError("use_pallas requires the flat plane (flat=True)")
+
     def build(params_single):
-        part = LayerPartition(params_single)
+        part = FlatPartition(params_single)
         fwd_slices = [forward_slice_lane(loss_fn, fb_ratio=R, slice_idx=r)
                       for r in range(R)]
-        upd = backward_update_lane(optimizer, schedule, update_delay=D)
-        mix = gossip_lane(part, M, ax, shifts)
+        upd = backward_update_lane(optimizer, schedule, update_delay=D,
+                                   apply=not use_pallas)
+        if use_pallas:
+            mix = gossip_fused_lane(part, M, ax, shifts)
+        elif flat:
+            mix = gossip_plane_lane(part, M, ax, shifts)
+        else:
+            mix = gossip_lane_legacy(part, M, ax, shifts)
         bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd,
-                               mix, squeeze_batch=True, active_fn=active_fn)
-        stages = _jit_stages(bodies, mesh, worker_axes, R, D, batch_specs=pw)
+                               mix, squeeze_batch=True, active_fn=active_fn,
+                               flat=flat, fused=use_pallas)
+        stages = _jit_stages(bodies, mesh, worker_axes, R, D, batch_specs=pw,
+                             fused=use_pallas)
         engine = PipelineEngine(
             R=R, D=D, M=M, stages=stages, timeline=timeline,
-            describe=f"pipeline backend (M={M}, R={R}, D={D})")
+            fused=use_pallas,
+            describe=(f"pipeline backend (M={M}, R={R}, D={D}, flat={flat}"
+                      f"{', pallas' if use_pallas else ''})"))
         return engine, part
 
     def init_fn(rng, params_single):
@@ -672,7 +768,7 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                 from repro.core.api import disagreement
                 box["drift"] = jax.jit(disagreement)
         return make_decoupled_state(stacked, optimizer, update_delay=D,
-                                    part=box["part"])
+                                    part=box["part"], flat=flat)
 
     def step_fn(state, batch, step_idx, shift_idx):
         if "engine" not in box:

@@ -35,7 +35,13 @@ Three distribution strategies, mirroring the paper's comparison:
   groups whose content reflects gradients through step ``t − 1 − D`` — the
   production analogue of the sim trainer's ``fb_ratio``/``update_delay``
   (DESIGN.md §3/§9). DDP and lockstep LayUp are assembled from the same
-  lane pieces (R=1, D=0, with/without the gossip lane).
+  lane pieces (R=1, D=0, with/without the gossip lane). By default the
+  decoupled state carries the parameters as a **persistent flat plane**
+  (one contiguous buffer per layer group, packed once at init through
+  :class:`~repro.core.layerview.FlatPartition`): gossip ships the plane
+  directly in the params' dtype — no per-step repack, no f32 wire bloat —
+  and ``use_pallas`` fuses mix+apply into the ``gossip_mix`` kernel
+  (DESIGN.md §11).
 
 Serving: ``make_prefill_step`` / ``make_decode_step`` build the inference
 paths (params replicated over data axes, TP over 'model'; decode donates the
@@ -73,8 +79,10 @@ from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import ModelConfig, ShapeConfig, input_specs
 from repro.core.layerview import (
-    LayerPartition, send_fractions, stamp_groups, version_metrics,
+    FlatPartition, LayerPartition, send_fractions, stamp_groups,
+    version_metrics,
 )
+from repro.kernels.gossip_mix import gossip_mix as _gossip_mix_kernel
 from repro.launch import sharding as SH
 from repro.launch.mesh import data_axes, num_workers
 from repro.models.model import Model
@@ -241,7 +249,8 @@ def forward_slice_lane(loss_fn: Callable, *, fb_ratio: int = 1,
 
 
 def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
-                         update_delay: int = 0) -> Callable:
+                         update_delay: int = 0,
+                         apply: bool = True) -> Callable:
     """Delayed update application on the write buffer.
 
     Returns ``upd(params, opt_state, grads, fifo, step_idx) ->
@@ -254,7 +263,13 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
     backward lane exactly (api.make_sim_trainer). ``active`` (scalar 0/1,
     per worker) masks the *application* of the update — the straggler
     emulation of the sim backend (the optimizer state still advances,
-    matching api.make_sim_trainer's masked_apply semantics)."""
+    matching api.make_sim_trainer's masked_apply semantics).
+
+    ``apply=False`` returns the (masked) update DELTAS in place of the
+    new params — the contract of the fused gossip lane
+    (:func:`gossip_fused_lane`), which folds the apply into the mix's
+    single memory pass. Params are still consumed read-only (weight
+    decay, delayed-gradient dtype)."""
     D = int(update_delay)
     if D < 0:
         raise ValueError("update_delay must be >= 0")
@@ -282,6 +297,8 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
         if active is not None:
             updates = jax.tree.map(lambda u: u * active.astype(u.dtype),
                                    updates)
+        if not apply:
+            return updates, opt_state, fifo, update_staleness
         params = apply_updates(params, updates)
         return params, opt_state, fifo, update_staleness
 
@@ -308,11 +325,141 @@ def fifo_init(params_single, update_delay: int, M: int = 0):
             "stamp": jnp.full((D,), -1.0, jnp.float32)}
 
 
-def gossip_lane(part: LayerPartition, M: int, ax, shifts: Sequence[int]):
-    """Push-sum ring-shift gossip: every worker sends to i+s and receives
-    from i−s. Each layer group's leaves are packed into ONE flat f32 buffer,
-    so the wire carries exactly one collective per layer group (f32 is a
-    lossless container for bf16; the mix runs in f32 anyway). Returns
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Pallas interpret mode: on by default off-TPU (this container), so
+    the same lanes run on CPU CI and real hardware."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _ring_exchange(plane, w, shift_idx, M: int, ax, shifts: Sequence[int]):
+    """One push-sum ring hop on the flat plane: ship every group buffer
+    (in its own dtype — the wire cost is exactly ``plane_nbytes`` per
+    peer) plus the halved push-sum weight. Returns (recv, w_half, rw)."""
+    def branch(s):
+        perm = [(i, (i + s) % M) for i in range(M)]
+
+        def run(args):
+            plane, w_half = args
+            recv = {name: jax.lax.ppermute(v, ax, perm)
+                    for name, v in plane.items()}
+            rw = jax.lax.ppermute(w_half, ax, perm)
+            return recv, rw
+
+        return run
+
+    w_half = w * 0.5
+    recv, rw = jax.lax.switch(shift_idx, [branch(s) for s in shifts],
+                              (plane, w_half))
+    return recv, w_half, rw
+
+
+def gossip_plane_lane(part: FlatPartition, M: int, ax,
+                      shifts: Sequence[int], *, use_pallas: bool = False,
+                      interpret: Optional[bool] = None):
+    """Push-sum ring gossip directly on the persistent flat plane: no
+    per-step ravel, no unravel, and the wire dtype IS the plane dtype
+    (bf16 params ship half the bytes of the old blanket-f32 wire; the
+    push-sum weight accounting stays f32). Returns
+    ``mix(plane, w, shift_idx) -> (plane, w)``; the identity when M == 1.
+
+    ``use_pallas`` routes the per-group mix through the fused
+    ``gossip_mix`` kernel (pure-mix variant — the update was already
+    applied by the backward lane); the default jnp path computes
+    ``(w/2·mine + w'/2·recv) / (w/2 + w'/2)`` in f32, bitwise-identical
+    per element to the legacy ravel_pytree lane."""
+    if M == 1:
+        return lambda plane, w, shift_idx: (plane, w)
+    interpret = _resolve_interpret(interpret)
+
+    def mix(plane, w, shift_idx):
+        recv, w_half, rw = _ring_exchange(plane, w, shift_idx, M, ax, shifts)
+        new_w = w_half + rw
+        mixed = {}
+        for name, mine in plane.items():
+            if use_pallas:
+                mixed[name] = _gossip_mix_kernel(
+                    mine, recv[name], None, w_half / new_w, rw / new_w,
+                    interpret=interpret)
+            else:
+                mf = (w_half * mine.astype(jnp.float32)
+                      + rw * recv[name].astype(jnp.float32)) / new_w
+                mixed[name] = mf.astype(mine.dtype)
+        return mixed, new_w
+
+    return mix
+
+
+def gossip_fused_lane(part: FlatPartition, M: int, ax,
+                      shifts: Sequence[int], *, use_pallas: bool = True,
+                      interpret: Optional[bool] = None):
+    """The paper's Alg. 1 ordering, fused: ship the PRE-update plane, then
+    one pass per group computes ``mixed = α·x + β·recv + upd`` (3 reads +
+    1 write — the memory-bound op the ``gossip_mix`` Pallas kernel was
+    written for; separate apply-then-mix costs 4 reads + 2 writes).
+    Returns ``mix_apply(plane, updates, w, shift_idx) -> (plane, w)``.
+
+    Note the semantic difference from the default lane: a worker's own
+    update reaches its peers one ring hop later (it is not mixed into the
+    outgoing message). Both orderings are valid push-sum ASGD; the fused
+    lane is the kernel's contract and is selected by ``use_pallas`` on
+    the decoupled paths. At M == 1 it degenerates to a fused
+    ``x + upd`` apply (α=1, β=0), still through the kernel."""
+    interpret = _resolve_interpret(interpret)
+    if use_pallas:
+        op = lambda x, r, u, a, b: _gossip_mix_kernel(
+            x, r, u, a, b, interpret=interpret)
+    else:
+        from repro.kernels.ref import gossip_mix_ref as op
+
+    def mix_apply(plane, updates, w, shift_idx):
+        if M == 1:
+            mixed = {name: op(x, x, updates[name], jnp.float32(1.0),
+                              jnp.float32(0.0))
+                     for name, x in plane.items()}
+            return mixed, w
+        recv, w_half, rw = _ring_exchange(plane, w, shift_idx, M, ax, shifts)
+        new_w = w_half + rw
+        alpha, beta = w_half / new_w, rw / new_w
+        mixed = {name: op(x, recv[name], updates[name], alpha, beta)
+                 for name, x in plane.items()}
+        return mixed, new_w
+
+    return mix_apply
+
+
+def gossip_lane(part: FlatPartition, M: int, ax, shifts: Sequence[int], *,
+                use_pallas: bool = False,
+                interpret: Optional[bool] = None):
+    """Tree-level gossip for the lockstep LayUp step (whose state stays a
+    parameter pytree): pack each layer group through the shared
+    :class:`FlatPartition` layout, mix on the flat buffers, unpack. One
+    collective per layer group, in the params' dtype — the decoupled
+    lanes skip the per-call pack entirely by keeping the plane persistent
+    (``gossip_plane_lane``). Returns ``mix(tree, w, shift_idx) ->
+    (tree, w)``; the identity when M == 1."""
+    if M == 1:
+        return lambda tree, w, shift_idx: (tree, w)
+    plane_mix = gossip_plane_lane(part, M, ax, shifts,
+                                  use_pallas=use_pallas,
+                                  interpret=interpret)
+
+    def mix(tree, w, shift_idx):
+        plane, w = plane_mix(part.pack(tree), w, shift_idx)
+        return part.unpack(plane), w
+
+    return mix
+
+
+def gossip_lane_legacy(part: LayerPartition, M: int, ax,
+                       shifts: Sequence[int]):
+    """The pre-flat-plane gossip lane: re-packs every layer group with
+    ``ravel_pytree`` on EVERY step and ships a blanket-f32 wire. Kept as
+    the baseline side of ``benchmarks/gossip_path.py`` and behind the
+    decoupled builders' ``flat=False`` escape hatch (which also retains
+    per-leaf model-axis sharding of the parameters — the flat plane
+    replicates them over 'model', see DESIGN.md §11). Returns
     ``mix(tree, w, shift_idx) -> (tree, w)``; the identity when M == 1."""
     if M == 1:
         return lambda tree, w, shift_idx: (tree, w)
@@ -324,21 +471,8 @@ def gossip_lane(part: LayerPartition, M: int, ax, shifts: Sequence[int]):
             packed[name], unravel[name] = ravel_pytree(
                 jax.tree.map(lambda v: v.astype(jnp.float32), sub))
 
-        def branch(s):
-            perm = [(i, (i + s) % M) for i in range(M)]
-
-            def run(args):
-                packed, w_half = args
-                recv = {name: jax.lax.ppermute(v, ax, perm)
-                        for name, v in packed.items()}
-                rw = jax.lax.ppermute(w_half, ax, perm)
-                return recv, rw
-
-            return run
-
-        w_half = w * 0.5
-        recv, rw = jax.lax.switch(shift_idx, [branch(s) for s in shifts],
-                                  (packed, w_half))
+        recv, w_half, rw = _ring_exchange(packed, w, shift_idx, M, ax,
+                                          shifts)
         new_w = w_half + rw
         mixed_groups = {}
         for name, mine in packed.items():
@@ -434,7 +568,8 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
                           overrides: Optional[Dict[str, Any]] = None,
                           preset: Optional[str] = None,
                           accum_steps: int = 1,
-                          constrain_grads: bool = False) -> ProdStep:
+                          constrain_grads: bool = False,
+                          use_pallas: bool = False) -> ProdStep:
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     # per-leaf model-axis specs (worker prefix stripped) — used to pin the
@@ -451,12 +586,14 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
     shifts = tuple(s % M for s in shifts if s % M != 0) or (1,)
 
     # layer-group partition shared with the sim backend's v2 hooks: gossip
-    # messages are layer groups, not loose leaves (DESIGN.md §1/§2)
-    part = LayerPartition(model.abstract_params())
+    # messages are layer groups, not loose leaves (DESIGN.md §1/§2). The
+    # FlatPartition layout makes each group ONE wire buffer in the params'
+    # dtype (DESIGN.md §11).
+    part = FlatPartition(model.abstract_params())
     fwd = forward_lane(model.loss_fn, accum_steps=accum_steps,
                        grad_specs=grad_specs if constrain_grads else None)
     upd = backward_update_lane(optimizer, schedule)
-    mix = gossip_lane(part, M, ax, shifts)
+    mix = gossip_lane(part, M, ax, shifts, use_pallas=use_pallas)
 
     def worker_fn(params_st, opt_st, w_st, batch, step_idx, shift_idx):
         params = jax.tree.map(lambda x: x[0], params_st)
@@ -536,7 +673,9 @@ def _opt_shardings_stacked(abstract_opt_single, abstract_params, p_sh, mesh, M):
 def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
                          mix: Callable, M: int, worker_axes, D: int,
                          squeeze_batch: bool = False,
-                         active_fn: Optional[Callable] = None):
+                         active_fn: Optional[Callable] = None,
+                         flat: bool = False,
+                         fused_mix: Optional[Callable] = None):
     """Per-worker decoupled step body (traced inside shard_map).
 
     Arguments arrive worker-stacked with a leading axis of 1 (the shard):
@@ -544,7 +683,15 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
     shift_idx)`` — the fifo args are present iff ``D > 0``. The three lanes
     compose: forward on the READ buffer, delayed update on the WRITE buffer,
     gossip on the updated write copy, then the per-layer-group buffer swap
-    (read adopts each mixed group; its clock is stamped ``t + phi_g``)."""
+    (read adopts each mixed group; its clock is stamped ``t + phi_g``).
+
+    ``flat=True`` (the default route, DESIGN.md §11): read/write/opt/fifo
+    are flat planes (``part`` is a :class:`FlatPartition`); the forward
+    consumes the unpacked slice/reshape view of the read plane, gradients
+    are packed ONCE right after AD, and everything downstream — FIFO,
+    optimizer, gossip — runs on the plane. ``fused_mix`` (the
+    ``use_pallas`` route) replaces apply-then-mix with the fused Alg. 1
+    single pass; ``upd`` must then have been built with ``apply=False``."""
     phi = jnp.asarray(send_fractions(part.num_groups))
     unstack = lambda t: jax.tree.map(lambda x: x[0], t)
     unstack_opt = lambda t: jax.tree.map(
@@ -568,15 +715,28 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
             batch = unstack(batch)
 
         # forward lane: consumes the read buffer (content = updates through
-        # step t − 1 − D; never sees the write buffer mid-mutation)
-        loss, grads = fwd(read, batch)
-        # backward/update lane: delayed gradient lands on the write buffer
+        # step t − 1 − D; never sees the write buffer mid-mutation). In
+        # flat mode the read plane is unpacked into the tree view here
+        # (static slices — XLA fuses them into the forward) and the
+        # gradients are packed once, right out of AD.
+        loss, grads = fwd(part.unpack(read) if flat else read, batch)
+        if flat:
+            grads = part.pack(grads)
         active = active_fn(step_idx) if active_fn is not None else None
-        write, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
-                                                fifo, step_idx,
-                                                active=active)
-        # gossip lane: per-layer-group push-sum ring mix of the write copy
-        write, w = mix(write, w, shift_idx)
+        if fused_mix is not None:
+            # fused route: the backward lane yields the update DELTAS and
+            # the gossip lane folds apply+mix into one pass per group
+            updates, opt_state, fifo, upd_stale = upd(write, opt_state,
+                                                      grads, fifo, step_idx,
+                                                      active=active)
+            write, w = fused_mix(write, updates, w, shift_idx)
+        else:
+            # backward/update lane: delayed gradient lands on the write
+            # buffer, then the per-layer-group push-sum ring mix
+            write, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
+                                                    fifo, step_idx,
+                                                    active=active)
+            write, w = mix(write, w, shift_idx)
         # buffer swap: the read copy adopts the mixed write copy and each
         # group clock is stamped with its generation time t + phi_g. In the
         # real async system this is a per-group pointer flip as each
@@ -600,17 +760,45 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
 
 
 def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
-                         part: Optional[LayerPartition] = None):
+                         part: Optional[LayerPartition] = None,
+                         flat: bool = True):
     """Initial step state for the decoupled lane.
 
     ``read`` and ``write`` start as identical copies. Both are fresh
     buffers (the step donates its state, so it must not alias the caller's
     ``params_stacked``, and read/write must not alias each other); the
-    gradient FIFO holds zeros with stamp −1 (warm-up no-ops)."""
+    gradient FIFO holds zeros with stamp −1 (warm-up no-ops).
+
+    With ``flat=True`` (the default — must match the step builder's flag)
+    this is THE pack: params are packed into the persistent per-group
+    plane here, once, and never repacked again — the step carries, mixes
+    and donates the plane itself; the optimizer state and the gradient
+    FIFO are allocated directly in plane layout (DESIGN.md §11)."""
     M = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     single = jax.tree.map(lambda x: x[0], params_stacked)
-    part = part or LayerPartition(single)
     D = int(update_delay)
+    if flat:
+        if part is None:
+            part = FlatPartition(single)
+        elif not isinstance(part, FlatPartition):
+            raise ValueError("flat=True needs a FlatPartition")
+        # one pack, two copies: read and write must not alias each other
+        # (the step donates both) nor the caller's buffers — jnp.copy
+        # also guards the single-leaf-group case where pack's reshape can
+        # be the identity
+        plane = part.pack(params_stacked)
+        read = jax.tree.map(jnp.copy, plane)
+        state = {
+            "read": read,
+            "write": jax.tree.map(jnp.copy, plane),
+            "opt": jax.vmap(optimizer.init)(read),
+            "w": jnp.full((M,), 1.0 / M, jnp.float32),
+            "versions": part.init_versions(M),
+        }
+        if D > 0:
+            state["fifo"] = fifo_init(part.pack(single), D, M)
+        return state
+    part = part or LayerPartition(single)
     state = {
         "read": jax.tree.map(jnp.copy, params_stacked),
         "write": jax.tree.map(jnp.copy, params_stacked),
@@ -665,7 +853,9 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                                     preset: Optional[str] = None,
                                     fb_ratio: int = 2,
                                     update_delay: int = 1,
-                                    constrain_grads: bool = False) -> ProdStep:
+                                    constrain_grads: bool = False,
+                                    flat: bool = True,
+                                    use_pallas: bool = False) -> ProdStep:
     """The paper's decoupled execution on the real mesh.
 
     Step signature: ``fn(state, batch, step_idx, shift_idx) -> (state,
@@ -674,7 +864,16 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
     push-sum weights + per-group version clocks + D-deep gradient FIFO) and
     ``metrics`` carries loss / update_staleness / layer_staleness /
     staleness_mean / weight_sum — the same accounting the sim trainer
-    reports, so sim-vs-prod parity is assertable key by key."""
+    reports, so sim-vs-prod parity is assertable key by key.
+
+    ``flat=True`` (default): the state's parameter buffers are the
+    persistent per-group flat plane (packed once in
+    :func:`make_decoupled_state`) — gossip ships the plane directly in
+    the params' dtype, no per-step ravel/unravel, and the plane is
+    replicated over the 'model' axis (per-leaf tensor-parallel param
+    sharding needs ``flat=False`` — DESIGN.md §11). ``use_pallas`` routes
+    mix+apply through the fused ``gossip_mix`` kernel
+    (:func:`gossip_fused_lane`; Alg. 1 ordering)."""
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
@@ -695,17 +894,34 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                                         tuple(sp.shape)),
             model.specs, is_leaf=is_spec)
 
-    part = LayerPartition(model.abstract_params())
+    if use_pallas and not flat:
+        raise ValueError("use_pallas requires the flat plane (flat=True)")
+    part = FlatPartition(model.abstract_params())
     fwd = forward_lane(model.loss_fn, fb_ratio=R, grad_specs=grad_specs)
-    upd = backward_update_lane(optimizer, schedule, update_delay=D)
-    mix = gossip_lane(part, M, ax, shifts)
-    worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes, D)
+    upd = backward_update_lane(optimizer, schedule, update_delay=D,
+                               apply=not use_pallas)
+    if use_pallas:
+        mix, fused = None, gossip_fused_lane(part, M, ax, shifts)
+    elif flat:
+        mix, fused = gossip_plane_lane(part, M, ax, shifts), None
+    else:
+        mix, fused = gossip_lane_legacy(part, M, ax, shifts), None
+    worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes, D,
+                                     flat=flat, fused_mix=fused)
 
     pw = P(ax)
     abstract_params = model.abstract_params()
     stack = lambda s: jax.ShapeDtypeStruct((M,) + tuple(s.shape), s.dtype)
-    stacked_params = jax.tree.map(stack, abstract_params)
-    abstract_opt_single = jax.eval_shape(optimizer.init, abstract_params)
+    abstract_opt_base = part.abstract_plane() if flat else abstract_params
+    if flat:
+        stacked_params = part.abstract_plane((M,))
+        fifo_g_abs = part.abstract_plane((M, D))
+    else:
+        stacked_params = jax.tree.map(stack, abstract_params)
+        fifo_g_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((M, D) + tuple(s.shape), s.dtype),
+            abstract_params)
+    abstract_opt_single = jax.eval_shape(optimizer.init, abstract_opt_base)
     stacked_opt = jax.tree.map(stack, abstract_opt_single)
     abstract_state = {
         "read": stacked_params,
@@ -716,9 +932,7 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
     }
     if D > 0:
         abstract_state["fifo"] = {
-            "g": jax.tree.map(
-                lambda s: jax.ShapeDtypeStruct((M, D) + tuple(s.shape),
-                                               s.dtype), abstract_params),
+            "g": fifo_g_abs,
             "stamp": jax.ShapeDtypeStruct((D,), jnp.float32),
         }
 
@@ -732,23 +946,31 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
         axis_names=set(worker_axes))
     step = _decoupled_step_caller(fn_sm, D)
 
-    # model-axis sharding flows in through jit in_shardings (auto axis)
-    p_sh = SH.param_shardings(model, mesh, stacked_workers=M,
-                              overrides=overrides, preset=preset)
-    opt_sh = _opt_shardings_stacked(abstract_opt_single, abstract_params,
-                                    p_sh, mesh, M)
     w_sh = NamedSharding(mesh, pw)
     scalar = NamedSharding(mesh, P())
+    if flat:
+        # the flat plane carries only the worker axis: buffers are
+        # replicated over 'model' (per-leaf TP sharding needs flat=False)
+        worker_only = lambda tree: jax.tree.map(
+            lambda _: w_sh, tree)
+        p_sh = worker_only(stacked_params)
+        opt_sh = worker_only(stacked_opt)
+        fifo_g_sh = worker_only(fifo_g_abs) if D > 0 else None
+    else:
+        # model-axis sharding flows in through jit in_shardings (auto axis)
+        p_sh = SH.param_shardings(model, mesh, stacked_workers=M,
+                                  overrides=overrides, preset=preset)
+        opt_sh = _opt_shardings_stacked(abstract_opt_single, abstract_params,
+                                        p_sh, mesh, M)
+        if D > 0:
+            # FIFO leaves insert the depth axis after the worker axis
+            fifo_g_sh = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P(s.spec[0], None, *tuple(s.spec)[1:])), p_sh)
     state_sh = {"read": p_sh, "write": p_sh, "opt": opt_sh, "w": w_sh,
                 "versions": w_sh}
     if D > 0:
-        # FIFO leaves insert the depth axis after the worker axis
-        state_sh["fifo"] = {
-            "g": jax.tree.map(
-                lambda s: NamedSharding(
-                    mesh, P(s.spec[0], None, *tuple(s.spec)[1:])), p_sh),
-            "stamp": scalar,
-        }
+        state_sh["fifo"] = {"g": fifo_g_sh, "stamp": scalar}
     metrics_sh = {"loss": scalar, "update_staleness": scalar,
                   "layer_staleness": scalar, "staleness_mean": scalar,
                   "weight_sum": scalar}
@@ -764,7 +986,8 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                 jax.ShapeDtypeStruct((), jnp.int32))
     return ProdStep(fn, abstract,
                     f"layup decoupled train (M={M}, R={R}, D={D}, "
-                    f"shifts={shifts})")
+                    f"shifts={shifts}, flat={flat}"
+                    f"{', pallas' if use_pallas else ''})")
 
 
 def straggler_active_fn(mesh, straggler_delays) -> Optional[Callable]:
@@ -794,7 +1017,9 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                    shifts: Sequence[int] = (1, 2, 4, 8),
                                    fb_ratio: int = 1, update_delay: int = 0,
                                    straggler_delays=None,
-                                   measure_drift: bool = False):
+                                   measure_drift: bool = False,
+                                   flat: bool = True,
+                                   use_pallas: bool = False):
     """Decoupled LayUp over a generic pytree + loss_fn (no Model/ShapeConfig)
     — the engine behind the ``"prod"`` TrainerBackend (core/backend.py).
 
@@ -806,10 +1031,12 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
     ``measure_drift`` adds the ``disagreement`` metric, computed inside the
     jitted step like the sim trainer does.
 
-    Returns ``(init_fn, step_fn, shifts)``: ``init_fn(rng, params_single)
-    -> state``, ``step_fn(state, batch, step_idx, shift_idx) -> (state,
-    metrics)``, and the effective (mod-M-filtered) gossip shift set the
-    caller draws ``shift_idx`` from."""
+    Returns ``(init_fn, step_fn, shifts, box)``: ``init_fn(rng,
+    params_single) -> state``, ``step_fn(state, batch, step_idx,
+    shift_idx) -> (state, metrics)``, the effective (mod-M-filtered)
+    gossip shift set the caller draws ``shift_idx`` from, and the build
+    box (``box["part"]`` holds the FlatPartition once ``init_fn`` has
+    seen the params — the unpack key for exporting the flat state)."""
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
     M = num_workers(mesh)
@@ -818,14 +1045,24 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
     active_fn = straggler_active_fn(mesh, straggler_delays)
     part_box = {}
 
+    if use_pallas and not flat:
+        raise ValueError("use_pallas requires the flat plane (flat=True)")
+
     def build(params_single):
-        part = LayerPartition(params_single)
+        part = FlatPartition(params_single)
         fwd = forward_lane(loss_fn, fb_ratio=R)
-        upd = backward_update_lane(optimizer, schedule, update_delay=D)
-        mix = gossip_lane(part, M, ax, shifts)
+        upd = backward_update_lane(optimizer, schedule, update_delay=D,
+                                   apply=not use_pallas)
+        if use_pallas:
+            mix, fused = None, gossip_fused_lane(part, M, ax, shifts)
+        elif flat:
+            mix, fused = gossip_plane_lane(part, M, ax, shifts), None
+        else:
+            mix, fused = gossip_lane_legacy(part, M, ax, shifts), None
         worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes,
                                          D, squeeze_batch=True,
-                                         active_fn=active_fn)
+                                         active_fn=active_fn, flat=flat,
+                                         fused_mix=fused)
         pw = P(ax)
         state_specs = _decoupled_state_specs(D, pw)
         fn_sm = shard_map(worker_fn, mesh=mesh,
@@ -852,7 +1089,7 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
         if "step" not in part_box:
             part_box["step"], part_box["part"] = build(params_single)
         return make_decoupled_state(stacked, optimizer, update_delay=D,
-                                    part=part_box["part"])
+                                    part=part_box["part"], flat=flat)
 
     def step_fn(state, batch, step_idx, shift_idx):
         if "step" not in part_box:
@@ -861,7 +1098,7 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                 jnp.asarray(step_idx, jnp.int32),
                                 jnp.asarray(shift_idx, jnp.int32))
 
-    return init_fn, step_fn, shifts
+    return init_fn, step_fn, shifts, part_box
 
 
 def make_prefill_step(model: Model, mesh, shape: ShapeConfig,
@@ -926,13 +1163,22 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
               constrain_grads: bool = False,
               fb_ratio: int = 1,
               update_delay: int = 0,
-              overlap: bool = False) -> ProdStep:
+              overlap: bool = False,
+              flat: bool = True,
+              use_pallas: bool = False) -> ProdStep:
     """``overlap=True`` selects the stage-graph pipeline engine
     (repro.launch.pipeline): the decoupled lane compiled into separately
     jitted fwd-slice / bwd+update / gossip stages dispatched asynchronously
     from the host, instead of one monolithic jitted step. Numerics are
     identical (the monolithic path stays as the oracle — DESIGN.md §10);
-    only the dispatch schedule and the per-stage timestamps differ."""
+    only the dispatch schedule and the per-stage timestamps differ.
+
+    ``flat`` (decoupled lanes, default True) keeps the parameters as the
+    persistent per-group flat plane — param-dtype gossip wire, zero
+    per-step repack (DESIGN.md §11); ``flat=False`` restores the legacy
+    tree state + per-step f32 ravel (and per-leaf TP param sharding).
+    ``use_pallas`` routes the gossip mix through the fused Pallas
+    ``gossip_mix`` kernel (interpret mode off-TPU)."""
     from repro.optim import momentum, constant
     optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
     schedule = schedule or constant(0.1)
@@ -955,13 +1201,15 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
                     model, mesh, optimizer, schedule, shape, shifts=shifts,
                     overrides=overrides, preset=preset, fb_ratio=fb_ratio,
                     update_delay=update_delay,
-                    constrain_grads=constrain_grads)
+                    constrain_grads=constrain_grads, flat=flat,
+                    use_pallas=use_pallas)
             return make_layup_decoupled_train_step(
                 model, mesh, optimizer, schedule, shape, shifts, overrides,
-                preset, fb_ratio, update_delay, constrain_grads)
+                preset, fb_ratio, update_delay, constrain_grads, flat,
+                use_pallas)
         return make_layup_train_step(model, mesh, optimizer, schedule, shape,
                                      shifts, overrides, preset, accum_steps,
-                                     constrain_grads)
+                                     constrain_grads, use_pallas)
     if shape.kind == "prefill":
         return make_prefill_step(model, mesh, shape, overrides, preset)
     return make_decode_step(model, mesh, shape, overrides, preset)

@@ -1,0 +1,441 @@
+"""Flat layer-group parameter plane (DESIGN.md §11): pack-once layout,
+zero-repack gossip, param-dtype wire, fused Pallas mix.
+
+The parity class is the tentpole acceptance: with the flat plane enabled
+(the default), the monolithic decoupled step AND the pipeline engine must
+reproduce the legacy (tree-state, f32-ravel-wire) oracle's loss/staleness/
+params EXACTLY for f32 params at (R, D) ∈ {(1,0), (1,1), (2,1)} — the flat
+path only changes the memory layout and the wire dtype, never the math
+order. bf16 params additionally halve the bytes-on-wire while holding loss
+parity (the mix arithmetic stays f32 on exact bf16-representable values).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _fixtures import mlp_batch as _batch, mlp_problem as _mlp_problem
+from _subproc import run_sub as _run
+from repro.core import FlatPartition, make_backend
+from repro.optim import constant, momentum
+
+
+class TestFlatPartition:
+    def _tree(self, dtype=jnp.float32):
+        return {"blocks": [{"w": jnp.arange(12, dtype=dtype).reshape(3, 4),
+                            "b": jnp.ones((4,), dtype)},
+                           {"w": jnp.arange(12, dtype=dtype).reshape(3, 4)
+                            * 2, "b": jnp.zeros((4,), dtype)}],
+                "embed": jnp.arange(6, dtype=dtype).reshape(2, 3),
+                "scale": jnp.asarray(3.0, dtype)}
+
+    def test_roundtrip_exact(self):
+        tree = self._tree()
+        part = FlatPartition(tree)
+        plane = part.pack(tree)
+        assert set(plane) == set(part.names)
+        for n in part.names:
+            assert plane[n].shape == (part.group_sizes[n],)
+        back = part.unpack(plane)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("lead", [(2,), (2, 3)])
+    def test_roundtrip_with_leading_axes(self, lead):
+        """Worker-stacked (M, ...) and FIFO-stacked (M, D, ...) trees pack
+        into (M, n) / (M, D, n) buffers and round-trip exactly."""
+        tree = self._tree()
+        part = FlatPartition(tree)
+        st = jax.tree.map(lambda x: jnp.broadcast_to(x, lead + x.shape) + 0,
+                          tree)
+        plane = part.pack(st)
+        for n in part.names:
+            assert plane[n].shape == lead + (part.group_sizes[n],)
+        back = part.unpack(plane)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mixed_dtype_group_splits_per_dtype(self):
+        """A group mixing bf16 and f32 leaves packs into one buffer PER
+        dtype — every leaf is stored at its own dtype (no silent f32
+        master copies; the persistent plane stays numerically identical
+        to the per-leaf tree state) and round-trips exactly."""
+        tree = {"g": {"a": jnp.arange(4, dtype=jnp.bfloat16),
+                      "b": jnp.arange(4, dtype=jnp.float32) * 0.5},
+                "h": jnp.ones((3,), jnp.bfloat16)}
+        part = FlatPartition(tree)
+        plane = part.pack(tree)
+        assert set(plane) == {"g:bfloat16", "g:float32", "h"}
+        assert plane["g:bfloat16"].dtype == jnp.bfloat16
+        assert plane["g:float32"].dtype == jnp.float32
+        assert part.plane_nbytes() == 4 * 2 + 4 * 4 + 3 * 2
+        # version clocks stay per GROUP, not per dtype bucket
+        assert part.names == ("g", "h")
+        back = part.unpack(plane)
+        assert back["g"]["a"].dtype == jnp.bfloat16
+        assert back["g"]["b"].dtype == jnp.float32
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    def test_pack_rejects_wrong_structure(self):
+        tree = self._tree()
+        part = FlatPartition(tree)
+        with pytest.raises(ValueError, match="leaves"):
+            part.pack({"blocks": tree["blocks"]})
+
+    def test_plane_nbytes_halves_for_bf16(self):
+        """Satellite regression: wire dtype follows param dtype, so a bf16
+        model's plane — the bytes one gossip collective ships per peer —
+        is exactly half the f32 plane."""
+        b32 = FlatPartition(self._tree(jnp.float32)).plane_nbytes()
+        b16 = FlatPartition(self._tree(jnp.bfloat16)).plane_nbytes()
+        assert b16 * 2 == b32
+
+    def test_partition_is_layerpartition(self):
+        """FlatPartition is a drop-in LayerPartition: split/join/versions
+        keep working (the v2 hooks and version clocks are unchanged)."""
+        tree = self._tree()
+        part = FlatPartition(tree)
+        joined = part.join(part.split(tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(joined)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert part.init_versions(3).shape == (3, part.num_groups)
+
+
+class TestFlatLaneParity:
+    """Tentpole acceptance: flat plane == legacy oracle, exactly (f32)."""
+
+    @pytest.mark.parametrize("R,D", [(1, 0), (1, 1), (2, 1)])
+    @pytest.mark.parametrize("overlap", [False, True])
+    def test_exact_vs_legacy_oracle(self, R, D, overlap):
+        loss_fn, params = _mlp_problem()
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=R, update_delay=D)
+        legacy = make_backend("prod", "layup", flat=False, **kw)
+        flat = make_backend("prod", "layup", flat=True, overlap=overlap,
+                            **kw)
+        ls = legacy.init(jax.random.PRNGKey(0), params)
+        fs = flat.init(jax.random.PRNGKey(0), params)
+        part = FlatPartition(params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(6):
+            b = _batch(t)
+            rng, r = jax.random.split(rng)
+            ls, lm = legacy.step(ls, b, r)
+            fs, fm = flat.step(fs, b, r)
+            assert float(lm["loss"]) == float(fm["loss"]), (R, D, overlap, t)
+            np.testing.assert_array_equal(
+                np.asarray(lm["layer_staleness"]),
+                np.asarray(fm["layer_staleness"]))
+            assert float(lm["update_staleness"]) == float(
+                fm["update_staleness"])
+        # params: the unpacked flat plane is bit-identical to the legacy
+        # tree state
+        unpacked = part.unpack(fs["read"])
+        for a, b in zip(jax.tree.leaves(unpacked),
+                        jax.tree.leaves(ls["read"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_state_is_flat_plane(self):
+        """The packed representation is the PERSISTENT one: state buffers
+        are per-group planes, not parameter trees, including the FIFO."""
+        loss_fn, params = _mlp_problem()
+        part = FlatPartition(params)
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          fb_ratio=2, update_delay=2)
+        st = be.init(jax.random.PRNGKey(0), params)
+        for key in ("read", "write"):
+            assert set(st[key]) == set(part.names)
+            for n in part.names:
+                assert st[key][n].shape == (1, part.group_sizes[n])
+        for n in part.names:
+            assert st["fifo"]["g"][n].shape == (1, 2, part.group_sizes[n])
+        st, _ = be.step(st, _batch(0), jax.random.PRNGKey(1))
+        for n in part.names:  # a step preserves the plane layout + dtype
+            assert st["read"][n].shape == (1, part.group_sizes[n])
+            assert st["read"][n].dtype == part.group_dtypes[n]
+
+    def test_bf16_wire_halves_with_loss_parity(self):
+        """Satellite: bf16 params move HALF the bytes per collective on
+        the flat wire (the state plane's nbytes are the wire payload) and
+        the loss trajectory matches the legacy f32-wire path to bf16
+        tolerance — the mix still runs in f32, on values that are exactly
+        bf16-representable on both wires."""
+        loss_fn, params = _mlp_problem()
+        p16 = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=1, update_delay=1)
+        legacy = make_backend("prod", "layup", flat=False, **kw)
+        flat = make_backend("prod", "layup", flat=True, **kw)
+        ls = legacy.init(jax.random.PRNGKey(0), p16)
+        fs = flat.init(jax.random.PRNGKey(0), p16)
+        # bytes-on-wire regression: the packed bf16 buffers are half the
+        # f32 plane the legacy path would have shipped
+        wire16 = sum(int(np.asarray(v).nbytes) for v in fs["read"].values())
+        wire32 = sum(int(np.prod(l.shape)) * 4
+                     for l in jax.tree.leaves(p16))
+        assert wire16 * 2 == wire32
+        assert FlatPartition(p16).plane_nbytes() * 2 \
+            == FlatPartition(params).plane_nbytes()
+        rng = jax.random.PRNGKey(3)
+        for t in range(5):
+            b = _batch(t)
+            rng, r = jax.random.split(rng)
+            ls, lm = legacy.step(ls, b, r)
+            fs, fm = flat.step(fs, b, r)
+            assert abs(float(lm["loss"]) - float(fm["loss"])) < 2e-2, t
+
+    def test_mixed_dtype_params_match_legacy_oracle(self):
+        """bf16 weights + f32 biases in the SAME layer group (the common
+        mixed-precision layout): the per-dtype plane buckets keep every
+        leaf at its own dtype, so the trajectory still matches the legacy
+        tree-state oracle — bf16 rounding happens at the same points."""
+        def loss_fn(p, b):
+            h = jnp.tanh(b["x"] @ p["layer"]["w"].astype(jnp.float32)
+                         + p["layer"]["b"])
+            logits = h @ p["head"]["w"]
+            ce = -jnp.mean(jax.nn.log_softmax(logits)[
+                jnp.arange(logits.shape[0]), b["labels"]])
+            return ce, {}
+
+        k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+        # "layer" is ONE group holding a bf16 weight and an f32 bias
+        pmix = {"layer": {"w": (jax.random.normal(k1, (16, 32)) * 0.2
+                               ).astype(jnp.bfloat16),
+                          "b": jnp.zeros((32,), jnp.float32)},
+                "head": {"w": jax.random.normal(k2, (32, 10)) * 0.2}}
+        assert FlatPartition(pmix).names == ("head", "layer")
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=1, update_delay=1)
+        legacy = make_backend("prod", "layup", flat=False, **kw)
+        flat = make_backend("prod", "layup", **kw)
+        ls = legacy.init(jax.random.PRNGKey(0), pmix)
+        fs = flat.init(jax.random.PRNGKey(0), pmix)
+        rng = jax.random.PRNGKey(3)
+        for t in range(5):
+            b = _batch(t)
+            rng, r = jax.random.split(rng)
+            ls, lm = legacy.step(ls, b, r)
+            fs, fm = flat.step(fs, b, r)
+            assert float(lm["loss"]) == float(fm["loss"]), t
+        unpacked = flat.export_params(fs)
+        for a, b in zip(jax.tree.leaves(unpacked),
+                        jax.tree.leaves(ls["read"])):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    def test_checkpoint_roundtrip_through_unpacked_view(self, tmp_path):
+        """Satellite: checkpoint export goes through the unpacked view —
+        save the tree view of a trained flat state, restore, repack, and
+        land bit-identical to the live plane (and to a legacy-state
+        checkpoint of the same run)."""
+        from repro.checkpoint import restore_checkpoint, save_checkpoint
+        loss_fn, params = _mlp_problem()
+        part = FlatPartition(params)
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          fb_ratio=2, update_delay=1)
+        st = be.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(3):
+            rng, r = jax.random.split(rng)
+            st, _ = be.step(st, _batch(t), r)
+        export = part.unpack(st["read"])  # (M, ...) tree view
+        save_checkpoint(str(tmp_path), 3, export)
+        restored = restore_checkpoint(str(tmp_path), 3, like=export)
+        replane = part.pack(restored)
+        for n in part.names:
+            np.testing.assert_array_equal(np.asarray(replane[n]),
+                                          np.asarray(st["read"][n]))
+
+
+class TestExportParams:
+    def test_export_matches_legacy_tree(self):
+        """``ProdTrainerBackend.export_params`` unpacks the live plane to
+        the stacked tree — bit-identical to the legacy backend's read
+        state after the same trajectory."""
+        loss_fn, params = _mlp_problem()
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=2, update_delay=1)
+        legacy = make_backend("prod", "layup", flat=False, **kw)
+        flat = make_backend("prod", "layup", **kw)
+        ls = legacy.init(jax.random.PRNGKey(0), params)
+        fs = flat.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(3):
+            rng, r = jax.random.split(rng)
+            ls, _ = legacy.step(ls, _batch(t), r)
+            fs, _ = flat.step(fs, _batch(t), r)
+        exported = flat.export_params(fs)
+        assert legacy.export_params(ls) is ls["read"]  # identity on trees
+        for a, b in zip(jax.tree.leaves(exported),
+                        jax.tree.leaves(ls["read"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_algo_runner_prod_eval_unpacks_flat_plane(self):
+        """Regression: run_algorithm(backend="prod") evaluates a consensus
+        snapshot of the read buffer — with the flat plane it must go
+        through export_params, or eval_fn receives 1-D group buffers."""
+        from benchmarks.algo_runner import run_algorithm
+        from repro.core.simulator import HardwareModel
+        loss_fn, params = _mlp_problem()
+
+        class DS:
+            def sample(self, rng, b):
+                return {"x": rng.standard_normal((b, 16)).astype(np.float32),
+                        "labels": rng.integers(0, 10, b)}
+
+        hold = DS().sample(np.random.default_rng(123), 16)
+        hold = jax.tree.map(jnp.asarray, hold)
+        r = run_algorithm(
+            "layup", ds=DS(), init_params_fn=lambda k: params,
+            loss_fn=loss_fn, eval_fn=lambda p: loss_fn(p, hold)[0],
+            M=1, steps=4, batch_per_worker=8, lr=0.05, hw=HardwareModel(),
+            eval_every=2, warmup=2, backend="prod")
+        assert r.eval_metric.size >= 2 and np.isfinite(r.eval_metric).all()
+
+
+class TestPallasGossipPath:
+    """Satellite: the fused gossip_mix kernel wired into the gossip path
+    (interpret mode on CPU)."""
+
+    def test_fused_monolithic_matches_default_at_m1(self):
+        """At M=1 the fused lane degenerates to a kernel-applied
+        ``x + upd`` — bitwise-equal to the default apply for f32, so the
+        whole trajectory must match exactly."""
+        loss_fn, params = _mlp_problem()
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=2, update_delay=1)
+        base = make_backend("prod", "layup", **kw)
+        pal = make_backend("prod", "layup", use_pallas=True, **kw)
+        bs = base.init(jax.random.PRNGKey(0), params)
+        zs = pal.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(4):
+            b = _batch(t)
+            rng, r = jax.random.split(rng)
+            bs, bm = base.step(bs, b, r)
+            zs, zm = pal.step(zs, b, r)
+            assert float(bm["loss"]) == float(zm["loss"]), t
+
+    def test_fused_pipeline_matches_fused_monolithic(self):
+        """The pipeline engine's fused gossip stage (which donates the
+        deltas, not the live plane) is exact vs the fused monolithic
+        step."""
+        loss_fn, params = _mlp_problem()
+        kw = dict(M=1, loss_fn=loss_fn, optimizer=momentum(0.9),
+                  schedule=constant(0.05), fb_ratio=2, update_delay=1,
+                  use_pallas=True)
+        mono = make_backend("prod", "layup", **kw)
+        pipe = make_backend("prod", "layup", overlap=True, **kw)
+        ms = mono.init(jax.random.PRNGKey(0), params)
+        ps = pipe.init(jax.random.PRNGKey(0), params)
+        rng = jax.random.PRNGKey(3)
+        for t in range(4):
+            b = _batch(t)
+            rng, r = jax.random.split(rng)
+            ms, mm = mono.step(ms, b, r)
+            ps, pm = pipe.step(ps, b, r)
+            assert float(mm["loss"]) == float(pm["loss"]), t
+            np.testing.assert_array_equal(
+                np.asarray(mm["layer_staleness"]),
+                np.asarray(pm["layer_staleness"]))
+
+    def test_use_pallas_requires_flat(self):
+        loss_fn, _ = _mlp_problem()
+        with pytest.raises(ValueError, match="flat"):
+            make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                         optimizer=momentum(0.9), schedule=constant(0.05),
+                         flat=False, use_pallas=True)
+
+
+def test_flat_and_pallas_lower_on_dryrun_mesh():
+    """Acceptance (both shard_map shim paths, via the CI matrix): the flat
+    monolithic step, the flat pipeline stages AND the fused-pallas variant
+    all lower on the host-device dry-run meshes — tier-1, lower-only."""
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_config, reduced, ShapeConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import make_step
+from repro.models import build_model
+from repro.optim import momentum, constant
+cfg = reduced(get_config("stablelm-1.6b"))
+m = build_model(cfg)
+shape = ShapeConfig("t", 16, 4, "train")
+for mesh_shape, axes in (((1, 1, 2), ("pod", "data", "model")),
+                         ((2, 2), ("data", "model"))):
+    mesh = make_test_mesh(mesh_shape, axes)
+    for kw in (dict(), dict(use_pallas=True), dict(overlap=True)):
+        step = make_step(m, mesh, shape, algo="layup",
+                         optimizer=momentum(0.9), schedule=constant(0.05),
+                         shifts=(1,), fb_ratio=2, update_delay=1, **kw)
+        step.lower()
+        print("LOWERED", step.describe)
+""", timeout=900)
+    assert out.count("LOWERED") == 6
+    assert out.count("flat=True") == 6
+    assert out.count("pallas") == 2
+
+
+@pytest.mark.slow
+def test_flat_m2_mesh_exact_vs_legacy_oracle():
+    """Acceptance (mesh form): with real ring gossip (M=2) on the dry-run
+    mesh, the flat monolithic step and the flat pipeline engine match the
+    LEGACY oracle's losses exactly — the param-dtype wire and the plane
+    layout change nothing for f32 params."""
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced, ShapeConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import (make_layup_decoupled_train_step,
+                                make_decoupled_state, make_step)
+from repro.models import build_model
+from repro.optim import momentum, constant
+from repro.data.synthetic import lm_batch_for
+
+cfg = reduced(get_config("stablelm-1.6b"))
+m = build_model(cfg)
+opt = momentum(0.9)
+mesh = make_test_mesh((2, 2), ("data", "model"))
+M, bsz, R, D = 2, 8, 2, 1
+shape = ShapeConfig("t", 16, bsz, "train")
+params = m.init(jax.random.PRNGKey(0))
+sp = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (M,) + p.shape) + 0,
+                  params)
+batch = lm_batch_for(cfg, bsz, 16)
+leg = make_layup_decoupled_train_step(
+    m, mesh, opt, constant(0.05), shape, shifts=(1,), fb_ratio=R,
+    update_delay=D, flat=False).lower().compile()
+fl = make_layup_decoupled_train_step(
+    m, mesh, opt, constant(0.05), shape, shifts=(1,), fb_ratio=R,
+    update_delay=D).lower().compile()
+pipe = make_step(m, mesh, shape, algo="layup", optimizer=opt,
+                 schedule=constant(0.05), shifts=(1,), fb_ratio=R,
+                 update_delay=D, overlap=True)
+ls = make_decoupled_state(sp, opt, update_delay=D, flat=False)
+fs = make_decoupled_state(sp, opt, update_delay=D)
+ps = pipe.init_state(jax.tree.map(jnp.copy, sp))
+for t in range(3):
+    ls, lm = leg(ls, batch, jnp.asarray(t, jnp.int32),
+                 jnp.zeros((), jnp.int32))
+    fs, fm = fl(fs, batch, jnp.asarray(t, jnp.int32),
+                jnp.zeros((), jnp.int32))
+    ps, pm = pipe.fn(ps, batch, t, 0)
+    assert float(lm["loss"]) == float(fm["loss"]), (t, "mono")
+    dl = abs(float(lm["loss"]) - float(pm["loss"]))
+    assert dl < 1e-6, (t, "pipe", dl)
+    ds = np.abs(np.asarray(lm["layer_staleness"])
+                - np.asarray(fm["layer_staleness"])).max()
+    assert ds == 0.0, (t, ds)
+print("FLAT MESH ORACLE OK")
+""")
+    assert "FLAT MESH ORACLE OK" in out

@@ -94,6 +94,53 @@ class TestGossipMixKernel:
         np.testing.assert_allclose(np.asarray(out), 0.75 * 2.0 - 0.25,
                                    rtol=1e-6)
 
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n", [1, 127, 129, 1023, 8 * 128 + 5])
+    def test_odd_sizes_exercise_padding(self, rng, dtype, n):
+        """Satellite: fused kernel vs the reference mix at sizes that are
+        NOT multiples of the (8, 128) tile — the pad/unpad path must be
+        exact (padding contributes zeros that are sliced away)."""
+        x = jax.random.normal(rng, (n,)).astype(dtype)
+        r = jax.random.normal(jax.random.fold_in(rng, 1), (n,)).astype(dtype)
+        u = (jax.random.normal(jax.random.fold_in(rng, 2), (n,)) * 0.01
+             ).astype(dtype)
+        out = ops.gossip_mix(x, r, u, 0.7, 0.3, interpret=True)
+        ref = KREF.gossip_mix_ref(x, r, u, 0.7, 0.3)
+        assert out.shape == (n,) and out.dtype == dtype
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n", [127, 1024])
+    def test_pure_mix_variant_matches_ref(self, rng, dtype, n):
+        """upd=None selects the 2-read pure-mix kernel (the lockstep
+        gossip path); it must equal the reference with a zero update."""
+        x = jax.random.normal(rng, (n,)).astype(dtype)
+        r = jax.random.normal(jax.random.fold_in(rng, 1), (n,)).astype(dtype)
+        out = ops.gossip_mix(x, r, None, 0.6, 0.4, interpret=True)
+        ref = KREF.gossip_mix_ref(x, r, jnp.zeros_like(x), 0.6, 0.4)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **_tol(dtype))
+
+    def test_traced_alpha_beta(self, rng):
+        """α/β arrive as traced scalars from the push-sum weights inside
+        the jitted gossip stage — the SMEM prefetch path must accept
+        them."""
+        x = jax.random.normal(rng, (300,))
+        r = jax.random.normal(jax.random.fold_in(rng, 1), (300,))
+
+        @jax.jit
+        def f(w, rw):
+            new_w = w + rw
+            return ops.gossip_mix(x, r, None, w / new_w, rw / new_w,
+                                  interpret=True)
+
+        out = f(jnp.float32(0.5), jnp.float32(0.25))
+        ref = KREF.gossip_mix_ref(x, r, jnp.zeros_like(x),
+                                  2.0 / 3.0, 1.0 / 3.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
 
 class TestRMSNormKernel:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
