@@ -1,0 +1,244 @@
+"""Serve-under-training benchmark: live inference against the trainer's
+read plane, both at full tilt on the SAME host devices.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.serve_under_training [--quick]
+
+Three phases on one process:
+
+1. **training baseline** — the decoupled pipeline trainer (M workers,
+   ``overlap=True``) runs alone; measures the no-serving step time.
+2. **concurrent** — the trainer runs again at full tilt in a background
+   thread with a :class:`repro.serving.PlanePublisher` attached, while an
+   open-loop synthetic request generator feeds an
+   :class:`repro.serving.AdmissionQueue` and the main thread drives the
+   :class:`repro.serving.LiveServer` (continuous batching + gated
+   checkpoint-free weight swaps). Mid-window the drift gate is forced
+   shut until it has rejected at least one plane, so the gated-rejection
+   path is exercised on every run.
+3. **report** — p50/p99 token and request latency, swap/rejection
+   accounting, and the training step-time delta vs the baseline, dumped
+   as ``BENCH_serve_latency.json`` for the nightly artifact trail.
+
+Token latency is the inter-token measure (wall time of one busy decode
+step); request latency is submit → final token. Training throughput in
+the concurrent window is measured exactly like the baseline: a timed run
+of K steps with metrics kept as futures (blocking per step would
+serialize the pipeline being measured).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import dump_json, emit, section
+
+
+def _pct(samples, q):
+    return float(np.percentile(np.asarray(samples, np.float64), q))
+
+
+def _build(M, quick):
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.core import make_backend
+    from repro.models import build_model
+    from repro.optim import constant, momentum
+    from repro.serving import PlanePublisher
+
+    cfg = ModelConfig(name="tiny-lm", family="dense", num_layers=2,
+                      d_model=64 if quick else 128, num_heads=4,
+                      num_kv_heads=2, d_ff=128 if quick else 256,
+                      vocab_size=128)
+    model = build_model(cfg)
+    pub = PlanePublisher()
+    be = make_backend("prod", "layup", M=M,
+                      loss_fn=lambda p, b: model.loss_fn(p, b, block_k=32),
+                      optimizer=momentum(0.9), schedule=constant(0.02),
+                      fb_ratio=2, update_delay=1, overlap=True,
+                      measure_drift=True, publisher=pub)
+    params = model.init(jax.random.PRNGKey(0))
+    state = be.init(jax.random.PRNGKey(1), params)
+    return cfg, model, pub, be, params, state
+
+
+def _batches(cfg, be, M, n=4, B=4, T=32):
+    import jax
+    from repro.data.synthetic import SyntheticLM, make_worker_batches
+
+    ds = SyntheticLM(vocab=cfg.vocab_size, seq_len=T, temperature=1.2)
+    out = [make_worker_batches(ds, M, B, t) for t in range(n)]
+    if M > 1:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import data_axes
+        bsh = NamedSharding(be.mesh, P(data_axes(be.mesh)))
+        out = [jax.device_put(b, bsh) for b in out]
+    else:
+        import jax.numpy as jnp
+        out = [jax.tree.map(jnp.asarray, b) for b in out]
+    jax.block_until_ready(out)
+    return out
+
+
+def _timed_steps(be, state, batches, steps):
+    """Run ``steps`` trainer steps without materializing metrics, block at
+    the end; returns (state, wall_seconds)."""
+    import jax
+
+    t0 = time.monotonic()
+    for t in range(steps):
+        state, _ = be.step(state, batches[t % len(batches)], None)
+    jax.block_until_ready(jax.tree.leaves(state["read"]))
+    return state, time.monotonic() - t0
+
+
+def main(quick=False):
+    import jax
+
+    from repro.launch.serve import Request, ServeLoop
+    from repro.serving import AdmissionQueue, LiveServer, SwapPolicy
+
+    n_dev = len(jax.devices())
+    M = 4 if n_dev >= 4 else n_dev
+    warmup, base_steps = 2, (6 if quick else 12)
+    conc_steps = 12 if quick else 30
+    prompt_len, max_new = 4, 8
+    gen_interval_s = 0.02 if quick else 0.05
+
+    section(f"Serve-under-training — M={M} workers, pipeline trainer + "
+            f"live serving on the same {n_dev} host devices")
+    cfg, model, pub, be, params, state = _build(M, quick)
+    batches = _batches(cfg, be, M)
+
+    # ---- phase 1: training alone (the no-serving step-time baseline) ------
+    state, _ = _timed_steps(be, state, batches, warmup)
+    state, base_wall = _timed_steps(be, state, batches, base_steps)
+    base_step_s = base_wall / base_steps
+    emit("serve.train_step.baseline", base_step_s * 1e6,
+         f"steps={base_steps};M={M}")
+    pub_before = pub.stats.published
+
+    # ---- phase 2: trainer at full tilt + live serving concurrently --------
+    loop = ServeLoop(model, params, num_slots=4,
+                     max_len=prompt_len + max_new)
+    adm = AdmissionQueue(max_depth=16)
+    # M=1 never stamps version clocks → leave the staleness gate off there
+    policy = SwapPolicy(max_staleness=None if M == 1 else float(base_steps
+                                                                + conc_steps))
+    srv = LiveServer(loop, be.part, pub, policy=policy, admission=adm)
+
+    trainer_done = threading.Event()
+    conc_wall_box = {}
+
+    def trainer():
+        nonlocal state
+        state, wall = _timed_steps(be, state, batches, conc_steps)
+        conc_wall_box["wall"] = wall
+        trainer_done.set()
+
+    submit_t = {}
+    gen_stats = {"submitted": 0, "rejected": 0}
+
+    def generator():
+        uid = 0
+        rs = np.random.default_rng(3)
+        while not trainer_done.is_set():
+            req = Request(uid=uid,
+                          prompt=rs.integers(0, cfg.vocab_size, prompt_len,
+                                             dtype=np.int32),
+                          max_new_tokens=max_new)
+            now = time.monotonic()
+            ticket = adm.submit(req, deadline_s=now + 2.0, now=now)
+            gen_stats["submitted"] += 1
+            if ticket.accepted:
+                submit_t[uid] = (now, req)
+            else:
+                gen_stats["rejected"] += 1
+            uid += 1
+            time.sleep(gen_interval_s)  # open loop: fixed arrival rate
+
+    threads = [threading.Thread(target=trainer),
+               threading.Thread(target=generator)]
+    for th in threads:
+        th.start()
+
+    step_lat, req_lat = [], []
+    done_uids = set()
+    gate_forced = False
+    while (not trainer_done.is_set() or adm.depth
+           or any(s.req is not None for s in loop.slots)):
+        t0 = time.monotonic()
+        busy = srv.step()
+        if busy:
+            step_lat.append(time.monotonic() - t0)
+        else:
+            time.sleep(0.002)
+        for uid, (t_sub, req) in submit_t.items():
+            if req.done and uid not in done_uids:
+                done_uids.add(uid)
+                req_lat.append(time.monotonic() - t_sub)
+        # force the drift gate shut once swapping works, until it has
+        # rejected a plane — exercises the gated-rejection path every run
+        if srv.swap_count >= 1 and not gate_forced:
+            policy.max_drift = -1.0
+            gate_forced = True
+        if gate_forced and policy.gated_rejections >= 1:
+            policy.max_drift = None
+    for th in threads:
+        th.join()
+    srv.poll()  # pick up the final publish
+
+    # ---- phase 3: report ---------------------------------------------------
+    s = srv.stats()
+    conc_step_s = conc_wall_box["wall"] / conc_steps
+    tokens = s["tokens_emitted"]
+    trainer_pub = pub.stats.published - pub_before
+    emit("serve.train_step.concurrent", conc_step_s * 1e6,
+         f"steps={conc_steps};delta_pct="
+         f"{100 * (conc_step_s - base_step_s) / base_step_s:.1f}")
+    if step_lat:
+        emit("serve.token_latency", _pct(step_lat, 50) * 1e6,
+             f"p50_us={_pct(step_lat, 50) * 1e6:.0f};"
+             f"p99_us={_pct(step_lat, 99) * 1e6:.0f};n={len(step_lat)}")
+    if req_lat:
+        emit("serve.request_latency", _pct(req_lat, 50) * 1e6,
+             f"p50_us={_pct(req_lat, 50) * 1e6:.0f};"
+             f"p99_us={_pct(req_lat, 99) * 1e6:.0f};n={len(req_lat)}")
+    emit("serve.tokens", 0.0,
+         f"tokens={tokens};requests_done={s['requests_completed']};"
+         f"slot_occupancy={s['slot_occupancy']:.3f}")
+    emit("serve.swaps", 0.0,
+         f"swaps={s['swaps']};publishes={trainer_pub};"
+         f"rejected_gated={s['swap_rejected_gated']};"
+         f"reasons={s['swap_reasons']}")
+    emit("serve.admission", 0.0,
+         f"submitted={gen_stats['submitted']};"
+         f"rejected={s['admission']['rejected']};"
+         f"deadline_dropped={s['admission']['deadline_dropped']}")
+    path = dump_json("serve_latency", prefix="serve.")
+
+    # acceptance: tokens actually served while the trainer made progress
+    # in the same window, via checkpoint-free gated swaps
+    assert tokens > 0, "no tokens served during the training window"
+    assert trainer_pub >= conc_steps, "trainer under-published"
+    assert s["swaps"] >= 1, "no live swap happened"
+    assert s["swap_rejected_gated"] >= 1, "drift gate never exercised"
+    print(f"# OK: {tokens} tokens served across {s['swaps']} live swaps "
+          f"while the trainer ran {conc_steps} steps "
+          f"({100 * (conc_step_s - base_step_s) / base_step_s:+.1f}% "
+          f"step time); {path}", flush=True)
+    return s
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--devices", type=int, default=4)
+    args = ap.parse_args()
+    from benchmarks.common import ensure_host_devices
+    ensure_host_devices(args.devices)
+    main(quick=args.quick)

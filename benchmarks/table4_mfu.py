@@ -80,23 +80,61 @@ def measured_overlap(steps=None, quick=False):
 
     The model is sized so the gossip stage's execution comfortably exceeds
     the host's dispatch turnaround (gossip packs/mixes the whole parameter
-    tree, so its cost scales with the ~4M params here) — otherwise the
-    device retires each stage before the host can run ahead and there is
-    nothing to measure. The workload is an MLP, not the event-sim's GPT
-    configs: the claim under test is the ENGINE's dispatch schedule, which
-    is model-agnostic."""
+    tree, so its cost scales with the ~4M params at the base width) —
+    otherwise the device retires each stage before the host can run ahead
+    and there is nothing to measure. That threshold is runner-dependent: a
+    fast machine can retire the W=2048 gossip inside its dispatch
+    turnaround and measure zero overlap even though the schedule is
+    correct. So the probe auto-scales: if M > 1 and no overlap shows, the
+    width is doubled (up to 8192) and the probe rerun before the overlap
+    assert fires. Only the final probe's numbers are emitted. The
+    workload is an MLP, not the event-sim's GPT configs: the claim under
+    test is the ENGINE's dispatch schedule, which is model-agnostic."""
+    import jax
+
+    section("Measured stage overlap — pipeline engine (DESIGN.md §10)")
+    n_dev = len(jax.devices())
+    M = 4 if n_dev >= 4 else n_dev
+    steps = steps or (10 if quick else 16)
+    for W in (2048, 4096, 8192):
+        s, be = _overlap_probe(W, M, steps)
+        if M == 1 or s["fwd_gossip_overlap_s"] > 0:
+            break
+        print(f"# no overlap measured at W={W} (fast runner retires "
+              f"gossip within dispatch turnaround); doubling probe width",
+              flush=True)
+    tl = be.timeline.summary()
+    for stage, total in sorted(tl["stage_s"].items()):
+        emit(f"table4.overlap.stage.{stage}", total / steps * 1e6,
+             f"inflight_s={total:.3f}")
+    emit("table4.overlap.fwd_gossip",
+         s["fwd_gossip_overlap_s"] / steps * 1e6,
+         f"overlap_s={s['fwd_gossip_overlap_s']:.3f};"
+         f"events={int(s['overlap_events'])};"
+         f"wall_s={s['pipeline_wall_s']:.3f};M={M};W={W}")
+    out_dir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out_dir, exist_ok=True)
+    path = be.timeline.dump(os.path.join(out_dir,
+                                         "BENCH_overlap_stages.json"))
+    print(f"# wrote {path} ({len(be.timeline.events)} stage events)",
+          flush=True)
+    # acceptance: with real gossip (M > 1) the engine must exhibit
+    # measured forward/gossip overlap — the monolithic step cannot
+    if M > 1:
+        assert s["fwd_gossip_overlap_s"] > 0, (
+            "pipeline engine showed no fwd/gossip overlap up to W=8192")
+        assert s["overlap_events"] > 0
+    return s
+
+
+def _overlap_probe(W, M, steps):
+    """One probe run at MLP width ``W``; returns (summary, backend)."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.core import make_backend
     from repro.optim import constant, momentum
-
-    section("Measured stage overlap — pipeline engine (DESIGN.md §10)")
-    n_dev = len(jax.devices())
-    M = 4 if n_dev >= 4 else n_dev
-    steps = steps or (10 if quick else 16)
-    W = 2048
 
     def loss_fn(p, b):
         h = jnp.tanh(b["x"] @ p["l1"])
@@ -127,29 +165,7 @@ def measured_overlap(steps=None, quick=False):
     # measured (metrics stay futures; summary() converts at the end)
     for t in range(steps):
         st, _ = be.step(st, batches[t % 4], None)
-    s = be.summary()
-    tl = be.timeline.summary()
-    for stage, total in sorted(tl["stage_s"].items()):
-        emit(f"table4.overlap.stage.{stage}", total / steps * 1e6,
-             f"inflight_s={total:.3f}")
-    emit("table4.overlap.fwd_gossip",
-         s["fwd_gossip_overlap_s"] / steps * 1e6,
-         f"overlap_s={s['fwd_gossip_overlap_s']:.3f};"
-         f"events={int(s['overlap_events'])};"
-         f"wall_s={s['pipeline_wall_s']:.3f};M={M}")
-    out_dir = os.path.join(os.path.dirname(__file__), "results")
-    os.makedirs(out_dir, exist_ok=True)
-    path = be.timeline.dump(os.path.join(out_dir,
-                                         "BENCH_overlap_stages.json"))
-    print(f"# wrote {path} ({len(be.timeline.events)} stage events)",
-          flush=True)
-    # acceptance: with real gossip (M > 1) the engine must exhibit
-    # measured forward/gossip overlap — the monolithic step cannot
-    if M > 1:
-        assert s["fwd_gossip_overlap_s"] > 0, (
-            "pipeline engine showed no fwd/gossip overlap")
-        assert s["overlap_events"] > 0
-    return s
+    return be.summary(), be
 
 
 if __name__ == "__main__":

@@ -177,7 +177,14 @@ class ProdTrainerBackend:
     into separately jitted fwd-slice / bwd+update / gossip stages that the
     host dispatches asynchronously, recording per-stage dispatch/complete
     timestamps on ``self.timeline``. Numerics are identical (the monolithic
-    path is the oracle); ``summary()`` gains the measured overlap fields."""
+    path is the oracle); ``summary()`` gains the measured overlap fields.
+
+    ``publisher`` (a :class:`repro.serving.PlanePublisher`) turns the
+    backend into the training side of the train-and-serve subsystem
+    (DESIGN.md §12): every step's read plane + version clocks + drift are
+    published for live serving consumers — zero-copy on the overlap
+    engine (its read plane is never donated), stabilized by async device
+    copies on the monolithic step (which donates its state)."""
 
     kind = "prod"
 
@@ -186,7 +193,7 @@ class ProdTrainerBackend:
                  fb_ratio: int = 1, update_delay: int = 0,
                  straggler_delays=None, measure_drift: bool = True,
                  overlap: bool = False, flat: bool = True,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, publisher=None):
         import jax
         from repro.launch.mesh import num_workers
         from repro.launch.train import make_decoupled_backend_trainer
@@ -214,6 +221,7 @@ class ProdTrainerBackend:
         self.mesh = mesh
         self.overlap = bool(overlap)
         self.flat = bool(flat)
+        self.publisher = publisher
         if overlap:
             from repro.launch.pipeline import (StageTimeline,
                                                make_pipeline_backend_trainer)
@@ -224,7 +232,7 @@ class ProdTrainerBackend:
                     fb_ratio=fb_ratio, update_delay=update_delay,
                     straggler_delays=straggler_delays,
                     measure_drift=measure_drift, timeline=self.timeline,
-                    flat=flat, use_pallas=use_pallas)
+                    flat=flat, use_pallas=use_pallas, publisher=publisher)
         else:
             self.timeline = None
             self._init_fn, self._step_fn, self._shifts, self._engine_box = \
@@ -233,7 +241,7 @@ class ProdTrainerBackend:
                     fb_ratio=fb_ratio, update_delay=update_delay,
                     straggler_delays=straggler_delays,
                     measure_drift=measure_drift, flat=flat,
-                    use_pallas=use_pallas)
+                    use_pallas=use_pallas, publisher=publisher)
         self._steps = 0
         self._last: Dict[str, Any] = {}
         # host-side gossip-shift schedule: deterministic per backend, no
@@ -245,6 +253,12 @@ class ProdTrainerBackend:
     def engine(self):
         """The PipelineEngine (overlap=True, after init); else None."""
         return self._engine_box.get("engine")
+
+    @property
+    def part(self):
+        """The FlatPartition fixing the state's plane layout (after init)
+        — the unpack key serving consumers need (``repro.serving``)."""
+        return self._engine_box.get("part")
 
     def export_params(self, state):
         """Stacked ``(M, ...)`` parameter TREE view of the state's read
@@ -306,7 +320,9 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
     takes mesh, shifts, overlap (the stage-graph pipeline engine), flat
     (default True — the persistent flat parameter plane with param-dtype
     gossip wire; False restores the legacy tree state + per-step f32
-    ravel) and use_pallas (fused gossip_mix kernel).
+    ravel), use_pallas (fused gossip_mix kernel) and publisher (a
+    repro.serving.PlanePublisher receiving the read plane each gossip
+    round — the train-and-serve feed, DESIGN.md §12).
     """
     if kind == "sim":
         if loss_fn is None or optimizer is None or schedule is None:

@@ -714,10 +714,21 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                   measure_drift: bool = False,
                                   timeline: Optional[StageTimeline] = None,
                                   flat: bool = True,
-                                  use_pallas: bool = False):
+                                  use_pallas: bool = False,
+                                  publisher=None):
     """Pipeline-engine counterpart of ``make_decoupled_backend_trainer``:
     same generic pytree + loss_fn contract, same sim-layout batches, but
     the step is the stage-graph engine instead of one jitted program.
+
+    ``publisher`` (a :class:`repro.serving.PlanePublisher`) receives the
+    engine's read plane + version clocks + drift once per gossip round.
+    This is the ZERO-COPY publish path: the engine never donates the read
+    plane (all R forward slices of a step share it — see the donation
+    rules above), so the published handles stay valid for the snapshot's
+    lifetime and the publish is ``stable=True``. The (tiny) version/weight
+    arrays ARE donated by the next step's gossip stage, so the publisher
+    copies those; nothing in the publish blocks the host or disturbs the
+    engine's dispatch run-ahead (DESIGN.md §12). Requires ``flat=True``.
 
     Returns ``(init_fn, step_fn, shifts, box)`` — ``box["engine"]`` holds
     the :class:`PipelineEngine` once ``init_fn`` has seen the params."""
@@ -732,6 +743,10 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
 
     if use_pallas and not flat:
         raise ValueError("use_pallas requires the flat plane (flat=True)")
+    if publisher is not None and not flat:
+        raise ValueError("publisher needs the flat plane (flat=True): the "
+                         "legacy tree state has no per-group plane to "
+                         "publish")
 
     def build(params_single):
         part = FlatPartition(params_single)
@@ -777,6 +792,15 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                             shift_idx)
         if measure_drift:
             metrics["disagreement"] = box["drift"](state["read"], state["w"])
+        if publisher is not None:
+            # stable=True: the engine never donates the read plane, so the
+            # snapshot pins the live handles — zero-copy. Everything here
+            # is an async dispatch or a reference swap; the host keeps its
+            # run-ahead over the in-flight stages.
+            publisher.publish(state["read"], state["versions"], state["w"],
+                              int(step_idx),
+                              drift=metrics.get("disagreement"),
+                              stable=True)
         return state, metrics
 
     return init_fn, step_fn, shifts, box

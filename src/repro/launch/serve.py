@@ -11,11 +11,17 @@ loop drives ``make_decode_step`` on the production mesh.
 Prompts are consumed through the decode path one token at a time
 ("prefill-by-decode"), which works uniformly for every architecture family
 (attention caches, SSM states, hybrids).
+
+The loop is live-swappable: ``set_params`` atomically rebinds the whole
+parameter tree between decode steps (``step_once`` is the step
+granularity), which is how ``repro.serving.LiveServer`` hot-swaps weights
+published from the training read plane (DESIGN.md §12). ``stats()``
+summarizes throughput and occupancy for the serve benchmarks.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +56,10 @@ class ServeLoop:
         self.slots = [_Slot() for _ in range(num_slots)]
         self.queue: List[Request] = []
         self.steps_run = 0
+        self.tokens_emitted = 0
+        self.requests_completed = 0
+        self.params_version = None   # provenance tag set by set_params
+        self._busy_slot_steps = 0    # Σ over steps of occupied slots
         self.cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype),
             model.cache_specs(num_slots, max_len))
@@ -57,6 +67,16 @@ class ServeLoop:
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def set_params(self, params, version=None):
+        """Atomically rebind the serving parameters. Called between decode
+        steps only (``step_once`` reads ``self.params`` exactly once per
+        step), so a decode step sees either the whole old tree or the
+        whole new one — never a mix. The decode executable is shape-stable
+        across swaps, so no retrace. ``version`` is an opaque provenance
+        tag (the live path passes ``(snapshot.seq, training_step)``)."""
+        self.params = params
+        self.params_version = version
 
     # -- internals -------------------------------------------------------------
     def _reset_slot(self, i: int):
@@ -98,27 +118,58 @@ class ServeLoop:
             if not in_prompt or s.cursor == len(r.prompt):
                 s.last_tok = int(greedy[i])
                 r.output.append(s.last_tok)
+                self.tokens_emitted += 1
             s.pos += 1
             if (len(r.output) >= r.max_new_tokens
                     or (r.eos_id is not None and r.output
                         and r.output[-1] == r.eos_id)
                     or s.pos >= self.max_len):
                 r.done = True
+                self.requests_completed += 1
                 s.req = None  # free the slot (cache slots position-masked)
 
     # -- public API --------------------------------------------------------------
+    def step_once(self) -> bool:
+        """Admit from the queue, run ONE decode step over the slots, and
+        retire finished sequences. Returns False (and runs no device work)
+        when every slot is empty after admission — the loop is idle.
+
+        This is the swap granularity: callers that rebind ``params``
+        (``set_params``) between ``step_once`` calls get atomic weight
+        swaps for free, since the decode step reads ``self.params`` once."""
+        self._admit()
+        if all(s.req is None for s in self.slots):
+            return False
+        self._busy_slot_steps += sum(s.req is not None for s in self.slots)
+        toks = self._feed_tokens()
+        positions = jnp.asarray([s.pos for s in self.slots], jnp.int32)
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(toks)[:, None],
+            positions)
+        self._advance(logits)
+        self.steps_run += 1
+        return True
+
     def run(self, max_steps: int = 10_000):
         for _ in range(max_steps):
-            self._admit()
-            if all(s.req is None for s in self.slots) and not self.queue:
+            if not self.step_once():
                 break
-            toks = self._feed_tokens()
-            positions = jnp.asarray([s.pos for s in self.slots], jnp.int32)
-            logits, self.cache = self._step(
-                self.params, self.cache, jnp.asarray(toks)[:, None],
-                positions)
-            self._advance(logits)
-            self.steps_run += 1
+
+    def stats(self) -> Dict[str, Any]:
+        """Run summary: steps, throughput and occupancy — the accounting
+        the serve benchmarks and the live example report."""
+        steps = self.steps_run
+        return {
+            "steps_run": steps,
+            "tokens_emitted": self.tokens_emitted,
+            "requests_completed": self.requests_completed,
+            "queue_depth": len(self.queue),
+            "slots_busy": sum(s.req is not None for s in self.slots),
+            "num_slots": self.num_slots,
+            "slot_occupancy": (self._busy_slot_steps
+                               / (steps * self.num_slots) if steps else 0.0),
+            "params_version": self.params_version,
+        }
 
     def serve(self, requests: List[Request],
               max_steps: int = 10_000) -> Dict[int, List[int]]:

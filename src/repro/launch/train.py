@@ -1019,7 +1019,8 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                    straggler_delays=None,
                                    measure_drift: bool = False,
                                    flat: bool = True,
-                                   use_pallas: bool = False):
+                                   use_pallas: bool = False,
+                                   publisher=None):
     """Decoupled LayUp over a generic pytree + loss_fn (no Model/ShapeConfig)
     — the engine behind the ``"prod"`` TrainerBackend (core/backend.py).
 
@@ -1030,6 +1031,15 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
     — the numeric analogue of the sim backend's straggler mask.
     ``measure_drift`` adds the ``disagreement`` metric, computed inside the
     jitted step like the sim trainer does.
+
+    ``publisher`` (a :class:`repro.serving.PlanePublisher`) receives the
+    read plane + version clocks + drift once per gossip round (= per
+    step), the training side of the train-and-serve path (DESIGN.md §12).
+    This step is jitted with ``donate_argnums=(0,)`` — the state the
+    publisher sees IS donated on the next call — so the publish is marked
+    ``stable=False`` and the publisher stabilizes the plane with async
+    device copies (still no checkpoint round-trip; the pipeline engine's
+    publish path is the zero-copy one). Requires ``flat=True``.
 
     Returns ``(init_fn, step_fn, shifts, box)``: ``init_fn(rng,
     params_single) -> state``, ``step_fn(state, batch, step_idx,
@@ -1047,6 +1057,10 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
 
     if use_pallas and not flat:
         raise ValueError("use_pallas requires the flat plane (flat=True)")
+    if publisher is not None and not flat:
+        raise ValueError("publisher needs the flat plane (flat=True): the "
+                         "legacy tree state has no per-group plane to "
+                         "publish")
 
     def build(params_single):
         part = FlatPartition(params_single)
@@ -1094,9 +1108,19 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
     def step_fn(state, batch, step_idx, shift_idx):
         if "step" not in part_box:
             raise RuntimeError("call init_fn before step_fn")
-        return part_box["step"](state, batch,
-                                jnp.asarray(step_idx, jnp.int32),
-                                jnp.asarray(shift_idx, jnp.int32))
+        new_state, metrics = part_box["step"](
+            state, batch, jnp.asarray(step_idx, jnp.int32),
+            jnp.asarray(shift_idx, jnp.int32))
+        if publisher is not None:
+            # stable=False: this jitted step donates its input state, so
+            # the read plane the publisher pins here is consumed on the
+            # NEXT step_fn call — the publisher copies it (async, on
+            # device) before handing it to serving consumers
+            publisher.publish(new_state["read"], new_state["versions"],
+                              new_state["w"], int(step_idx),
+                              drift=metrics.get("disagreement"),
+                              stable=False)
+        return new_state, metrics
 
     return init_fn, step_fn, shifts, part_box
 

@@ -1,0 +1,27 @@
+"""Train-and-serve subsystem: live inference from the training read plane.
+
+The decoupled lane's double-buffered flat parameter plane (DESIGN.md
+§9/§11) always holds one consistent, fully-materialized buffer that
+training is not writing — exactly what a live serving path needs. This
+package turns it into a weight feed (DESIGN.md §12):
+
+* :class:`PlanePublisher` / :class:`PlaneSnapshot` — once per gossip
+  round the trainer publishes an atomic handle to the read plane plus its
+  version clocks and drift metric (zero-copy on the pipeline engine);
+* :class:`SwapPolicy` / :class:`SwapDecision` — staleness/drift-gated
+  acceptance with min/max swap cadence;
+* :class:`AdmissionQueue` / :class:`Ticket` — bounded-depth admission
+  control with reject-with-retry-after and per-request deadline drop;
+* :class:`LiveServer` — gates snapshots, unpacks accepted planes through
+  the training ``FlatPartition`` into a ``ServeLoop`` between decode
+  steps, and drives admission → decode → swap-poll.
+"""
+from repro.serving.live import LiveServer, SwapRecord
+from repro.serving.policy import SwapDecision, SwapPolicy
+from repro.serving.publisher import PlanePublisher, PlaneSnapshot
+from repro.serving.queue import AdmissionQueue, Ticket
+
+__all__ = [
+    "AdmissionQueue", "LiveServer", "PlanePublisher", "PlaneSnapshot",
+    "SwapDecision", "SwapPolicy", "SwapRecord", "Ticket",
+]

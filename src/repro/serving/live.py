@@ -1,0 +1,158 @@
+"""LiveServer — continuous deployment of a continuously-training model.
+
+Composes the subsystem: a :class:`~repro.serving.publisher.PlanePublisher`
+feeds read-plane snapshots from the trainer, a
+:class:`~repro.serving.policy.SwapPolicy` gates them, and accepted planes
+are unpacked through the training ``FlatPartition`` straight into the
+:class:`~repro.launch.serve.ServeLoop`'s params — no checkpoint
+save/load anywhere on the path. An optional
+:class:`~repro.serving.queue.AdmissionQueue` fronts the loop's own slot
+queue with overload control.
+
+**Swap atomicity.** The unpack is one jitted call over the whole
+snapshot (slice worker ``w`` out of every ``(M, size)`` group buffer,
+then ``FlatPartition.unpack`` — static slice/reshape views, DESIGN.md
+§11), so the produced parameter tree is derived from exactly one plane
+version. The swap itself is a single reference assignment performed
+between decode steps (``poll`` runs at step boundaries): a decode step
+either sees the whole old tree or the whole new one — groups from two
+plane versions can never mix, and the snapshot's version clocks advance
+together with the params they describe.
+
+**Zero-copy path.** Nothing on the swap path serializes or round-trips
+through the filesystem: publish pins device handles, the gate reads two
+tiny arrays, and the unpack is a device-side reshuffle dispatched once
+per accepted swap. Rejected snapshots cost two small host transfers
+(versions + drift) and nothing else — serving simply continues on the
+previous params.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.serving.policy import SwapDecision, SwapPolicy
+from repro.serving.publisher import PlanePublisher
+from repro.serving.queue import AdmissionQueue
+
+
+@dataclass(frozen=True)
+class SwapRecord:
+    """Provenance of one accepted swap: which snapshot, when, and the
+    host-side copy of its version clocks (all groups from one publish —
+    the atomicity invariant tests assert on)."""
+
+    seq: int
+    step: int
+    reason: str
+    at_serve_step: int
+    versions: Any  # (M, G) numpy copy at swap time
+
+
+class LiveServer:
+    """Drive a :class:`ServeLoop` on live, staleness-gated weights.
+
+    ``worker`` selects which of the trainer's M per-worker replicas
+    serves (the replicas converge through gossip; worker 0 by default).
+    ``poll`` checks the publisher once and swaps if the policy accepts;
+    ``step`` = admit → one decode step → poll, the serving inner loop.
+    """
+
+    def __init__(self, loop, part, publisher: PlanePublisher,
+                 policy: Optional[SwapPolicy] = None,
+                 admission: Optional[AdmissionQueue] = None,
+                 worker: int = 0):
+        import jax
+
+        self.loop = loop
+        self.part = part
+        self.publisher = publisher
+        self.policy = policy if policy is not None else SwapPolicy()
+        self.admission = admission
+        self.worker = int(worker)
+        self.swaps: List[SwapRecord] = []
+        self.decisions: List[SwapDecision] = []
+        self._last_seq = -1
+        self._last_swap_step: Optional[int] = None
+
+        w = self.worker
+
+        def unpack_worker(plane):
+            return part.unpack({g: b[w] for g, b in plane.items()})
+
+        self._unpack = jax.jit(unpack_worker)
+
+    # -- swap path -----------------------------------------------------------
+    def poll(self) -> Optional[SwapDecision]:
+        """Evaluate the newest unseen snapshot; swap if accepted. Returns
+        the decision, or None when nothing new was published. Called
+        between decode steps only — the loop's params rebind atomically."""
+        snap = self.publisher.latest(after_seq=self._last_seq)
+        if snap is None:
+            return None
+        self._last_seq = snap.seq
+        decision = self.policy.evaluate(snap,
+                                        last_swap_step=self._last_swap_step)
+        self.decisions.append(decision)
+        if decision.accepted:
+            import numpy as np
+
+            params = self._unpack(snap.plane)
+            self.loop.set_params(params, version=(snap.seq, snap.step))
+            self._last_swap_step = snap.step
+            self.swaps.append(SwapRecord(
+                seq=snap.seq, step=snap.step, reason=decision.reason,
+                at_serve_step=self.loop.steps_run,
+                versions=np.asarray(snap.versions, np.float32)))
+        return decision
+
+    # -- serve loop ----------------------------------------------------------
+    def _admit_from_queue(self) -> None:
+        if self.admission is None:
+            return
+        free = sum(1 for s in self.loop.slots if s.req is None)
+        room = free + max(0, 2 * self.loop.num_slots - len(self.loop.queue))
+        for req in self.admission.take(room):
+            self.loop.submit(req)
+
+    def step(self) -> bool:
+        """One serving iteration: drain admissions, run one decode step,
+        then consider a swap at the step boundary. Returns False when
+        there was nothing to decode (idle)."""
+        self._admit_from_queue()
+        progressed = self.loop.step_once()
+        self.poll()
+        return progressed
+
+    def run_for(self, duration_s: float, *,
+                idle_sleep_s: float = 0.002) -> None:
+        """Serve for a wall-clock window (the benchmark's inner loop)."""
+        t_end = time.monotonic() + duration_s
+        while time.monotonic() < t_end:
+            if not self.step():
+                time.sleep(idle_sleep_s)
+
+    def run_until_idle(self, max_steps: int = 10_000) -> None:
+        """Serve until both queues drain (the example's inner loop)."""
+        for _ in range(max_steps):
+            if not self.step() and (self.admission is None
+                                    or self.admission.depth == 0):
+                break
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def swap_count(self) -> int:
+        return len(self.swaps)
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self.loop.stats())
+        out.update(swaps=self.swap_count,
+                   publishes_seen=len(self.decisions),
+                   swap_rejected=self.policy.rejected,
+                   swap_rejected_gated=self.policy.gated_rejections,
+                   swap_reasons=dict(self.policy.counts),
+                   last_swap_step=self._last_swap_step)
+        if self.admission is not None:
+            out["admission"] = self.admission.stats()
+        return out

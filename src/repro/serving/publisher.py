@@ -1,0 +1,144 @@
+"""PlanePublisher — the training→serving handoff of the flat read plane.
+
+The decoupled lane's double-buffered parameters (DESIGN.md §9/§11) mean
+there is, at every step boundary, a fully-materialized flat parameter
+plane that training is *not* writing: the read buffer. The publisher turns
+that property into a serving feed: once per gossip round the training side
+calls :meth:`PlanePublisher.publish` with the current read-plane handles,
+the per-group version clocks, the push-sum weights and (optionally) the
+figA1 disagreement metric, and any number of serving consumers can pick up
+the latest :class:`PlaneSnapshot` without ever touching a checkpoint.
+
+**Zero-copy and donation safety.** A snapshot stores device-buffer
+*handles*, not copies — publishing is O(1) on the host. But a handle into
+a buffer that a later training step will DONATE dies with that step, so
+what gets pinned depends on the producing lane:
+
+* the pipeline engine (``overlap=True``) never donates the read plane
+  (all R forward slices share it, so the engine keeps it un-donated by
+  construction — DESIGN.md §10), so the plane handles are published as-is
+  and stay valid for as long as the snapshot lives: true zero-copy;
+* the monolithic decoupled step donates its whole input state, so a
+  publisher fed from that lane is told ``stable=False`` and stabilizes
+  the plane with one device-side ``jnp.copy`` per group — an async device
+  op, never a host sync and never a checkpoint round-trip;
+* the version clocks and push-sum weights are donated by the NEXT step on
+  both lanes, so those (tiny) arrays are always defensively copied.
+
+Publishing never blocks the host: the copies are async dispatches and the
+snapshot swap is a lock-protected reference assignment. Consumers that
+need host values (the :class:`~repro.serving.policy.SwapPolicy` gate)
+block on *their* thread, which is the point — the training loop keeps its
+run-ahead (the pipeline engine's dispatch schedule is unaffected).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+
+@dataclass(frozen=True)
+class PlaneSnapshot:
+    """One published read plane: handles + provenance, immutable.
+
+    ``plane`` maps plane-buffer name → stacked ``(M, group_size)`` device
+    buffer (the FlatPartition layout); ``versions`` is the ``(M, G)``
+    per-group version clock and ``step`` the training step that produced
+    the plane — together they define every group's staleness at serve
+    time. ``drift`` is the figA1 disagreement metric when the producing
+    backend measures it (``measure_drift=True``), else None. All array
+    fields may still be in-flight futures; conversion blocks the caller,
+    never the trainer."""
+
+    seq: int                      # monotone publish counter
+    step: int                     # training step index at publish
+    plane: Dict[str, Any]         # {group: (M, size) device buffer}
+    versions: Any                 # (M, G) float32 version clocks (copy)
+    w: Any                        # (M,) push-sum weights (copy)
+    drift: Optional[Any] = None   # figA1 disagreement, if measured
+    published_at: float = 0.0     # host monotonic time of publish
+
+
+@dataclass
+class PublisherStats:
+    published: int = 0
+    skipped: int = 0              # publish calls below the `every` cadence
+    copied_planes: int = 0        # stabilizing copies (monolithic lane)
+
+
+class PlanePublisher:
+    """Single-producer, multi-consumer atomic handoff of the read plane.
+
+    ``every`` subsamples the publish cadence: the trainer calls
+    :meth:`publish` once per gossip round and the publisher keeps every
+    ``every``-th call (1 = every round). Consumers poll :meth:`latest`
+    (non-blocking) or :meth:`wait_for` (blocking with timeout)."""
+
+    def __init__(self, every: int = 1):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.every = int(every)
+        self.stats = PublisherStats()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._latest: Optional[PlaneSnapshot] = None
+        self._seq = 0
+        self._calls = 0
+
+    def publish(self, plane: Dict[str, Any], versions, w, step: int, *,
+                drift=None, stable: bool = True) -> Optional[PlaneSnapshot]:
+        """Publish the current read plane; returns the snapshot, or None
+        when skipped by the ``every`` cadence.
+
+        ``stable=True`` promises the plane buffers are never donated by a
+        later training step (the pipeline engine's read plane); with
+        ``stable=False`` (monolithic lane — the step donates its state)
+        each group buffer is stabilized with an async device copy first.
+        ``versions``/``w`` are always copied (both lanes donate them on
+        the next step). Never blocks on device work."""
+        self._calls += 1
+        if (self._calls - 1) % self.every != 0:
+            self.stats.skipped += 1
+            return None
+        import jax.numpy as jnp
+        if not stable:
+            plane = {g: jnp.copy(b) for g, b in plane.items()}
+            self.stats.copied_planes += 1
+        snap_versions = jnp.copy(versions)
+        snap_w = jnp.copy(w)
+        with self._cond:
+            self._seq += 1
+            snap = PlaneSnapshot(seq=self._seq, step=int(step), plane=plane,
+                                 versions=snap_versions, w=snap_w,
+                                 drift=drift,
+                                 published_at=time.monotonic())
+            self._latest = snap
+            self.stats.published += 1
+            self._cond.notify_all()
+        return snap
+
+    def latest(self, after_seq: int = -1) -> Optional[PlaneSnapshot]:
+        """The most recent snapshot, or None if none newer than
+        ``after_seq`` has been published. Non-blocking."""
+        with self._lock:
+            s = self._latest
+        if s is None or s.seq <= after_seq:
+            return None
+        return s
+
+    def wait_for(self, after_seq: int = -1,
+                 timeout: Optional[float] = None) -> Optional[PlaneSnapshot]:
+        """Block until a snapshot newer than ``after_seq`` arrives (or
+        timeout); returns it, or None on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while (self._latest is None
+                   or self._latest.seq <= after_seq):
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._cond.wait(remaining)
+            return self._latest

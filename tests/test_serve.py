@@ -68,3 +68,88 @@ def test_eos_frees_slot_early(rng):
                      max_new_tokens=50, eos_id=eos)
         out = loop2.serve([r2])
         assert len(out[0]) == 1  # stopped at EOS immediately
+
+
+def test_max_tokens_frees_slot_and_queued_request_fills_it(rng):
+    """A slot freed by max-tokens is reused by the next queued request on
+    the immediately following step — no idle decode step in between."""
+    cfg = reduced(get_config("granite-8b"))
+    m = build_model(cfg)
+    params = m.init(rng)
+    loop = ServeLoop(m, params, num_slots=1, max_len=32)
+    r1 = Request(uid=0, prompt=np.asarray([1, 2], np.int32), max_new_tokens=2)
+    r2 = Request(uid=1, prompt=np.asarray([3], np.int32), max_new_tokens=2)
+    loop.submit(r1)
+    loop.submit(r2)
+    # r1 needs len(prompt) + max_new - 1 = 3 steps (the last prompt feed
+    # already emits a token)
+    for _ in range(3):
+        assert loop.step_once()
+    assert r1.done and len(r1.output) == 2
+    assert loop.slots[0].req is None          # slot freed the step it finished
+    assert loop.step_once()                   # very next step decodes r2
+    assert loop.slots[0].req is r2            # admitted into the freed slot
+    loop.run()
+    assert r2.done and len(r2.output) == 2
+    assert loop.steps_run == 5                # 3 (r1) + 2 (r2), zero idle steps
+
+
+def test_eos_frees_slot_and_queued_request_fills_it(rng):
+    """Same same-step handoff when the slot frees via EOS instead of the
+    max-tokens bound."""
+    cfg = reduced(get_config("granite-8b"))
+    m = build_model(cfg)
+    params = m.init(rng)
+    probe = ServeLoop(m, params, num_slots=1, max_len=32)
+    rp = Request(uid=0, prompt=np.asarray([1], np.int32), max_new_tokens=1)
+    probe.serve([rp])
+    eos = rp.output[0]
+
+    loop = ServeLoop(m, params, num_slots=1, max_len=32)
+    r1 = Request(uid=0, prompt=np.asarray([1], np.int32),
+                 max_new_tokens=50, eos_id=eos)
+    r2 = Request(uid=1, prompt=np.asarray([2], np.int32), max_new_tokens=1)
+    loop.submit(r1)
+    loop.submit(r2)
+    assert loop.step_once()                   # r1 hits EOS on its first token
+    assert r1.done and len(r1.output) == 1
+    assert loop.slots[0].req is None
+    assert loop.step_once()                   # next step serves r2, no idle gap
+    assert r2.done and len(r2.output) == 1    # admitted AND served that step
+    assert loop.steps_run == 2
+
+
+def test_prefill_by_decode_matches_one_shot_prefill(rng):
+    """Feeding the prompt token-by-token through the decode step yields
+    the same next-token distribution as the one-shot prefill pass."""
+    cfg = reduced(get_config("granite-8b"))
+    m = build_model(cfg)
+    params = m.init(rng)
+    prompt = np.asarray([5, 17, 3, 8], np.int32)
+
+    loop = ServeLoop(m, params, num_slots=1, max_len=16)
+    out = loop.serve([Request(uid=0, prompt=prompt, max_new_tokens=1)])[0]
+
+    cache, logits = m.prefill_fn(params, {"tokens": jnp.asarray([prompt])},
+                                 block_k=8)
+    assert out[0] == int(jnp.argmax(logits[0, -1]))
+
+
+def test_serve_stats_accounting(rng):
+    cfg = reduced(get_config("granite-8b"))
+    m = build_model(cfg)
+    params = m.init(rng)
+    loop = ServeLoop(m, params, num_slots=2, max_len=32)
+    assert loop.stats()["slot_occupancy"] == 0.0  # no steps yet
+    reqs = [Request(uid=i, prompt=np.asarray([i + 1], np.int32),
+                    max_new_tokens=3) for i in range(3)]
+    loop.serve(reqs)
+    s = loop.stats()
+    assert s["requests_completed"] == 3
+    assert s["tokens_emitted"] == sum(len(r.output) for r in reqs) == 9
+    assert s["queue_depth"] == 0 and s["slots_busy"] == 0
+    assert s["steps_run"] == loop.steps_run > 0
+    # 3 single-token prompts × 3 tokens = 9 busy slot-steps over the run
+    assert 0.0 < s["slot_occupancy"] <= 1.0
+    assert s["slot_occupancy"] == 9 / (s["steps_run"] * 2)
+    assert s["params_version"] is None        # static params, never swapped

@@ -1,0 +1,350 @@
+"""repro.serving tests: publisher handoff, swap gating, admission control,
+and live (checkpoint-free) weight swaps into the serve loop.
+
+The unit tests drive the subsystem with hand-built planes and a minimal
+fake loop so the swap invariants (atomicity, gating) are asserted exactly;
+the integration test runs the real trainer-with-publisher → LiveServer
+path end to end on one CPU device.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layerview import FlatPartition
+from repro.serving import (AdmissionQueue, LiveServer, PlanePublisher,
+                           PlaneSnapshot, SwapPolicy)
+
+
+# ---------------------------------------------------------------------------
+# publisher
+# ---------------------------------------------------------------------------
+
+def _tiny_tree(fill):
+    return {"blocks": {"w": jnp.full((2, 3, 4), fill, jnp.float32)},
+            "embed": {"table": jnp.full((8, 4), fill, jnp.float32)}}
+
+
+def _publish(pub, part, fill, step, *, drift=None, M=1):
+    """Pack a constant-filled tree and publish it as an (M, size) plane."""
+    flat = part.pack(_tiny_tree(fill))
+    plane = {g: jnp.stack([b] * M) for g, b in flat.items()}
+    versions = jnp.full((M, part.num_groups), float(step + 1), jnp.float32)
+    return pub.publish(plane, versions, jnp.ones(M), step, drift=drift)
+
+
+def test_publisher_cadence_seq_and_latest():
+    part = FlatPartition(_tiny_tree(0.0))
+    pub = PlanePublisher(every=2)
+    snaps = [_publish(pub, part, float(i), i) for i in range(5)]
+    # calls 1, 3, 5 kept; calls 2, 4 skipped
+    assert [s is not None for s in snaps] == [True, False, True, False, True]
+    assert pub.stats.published == 3 and pub.stats.skipped == 2
+    assert [s.seq for s in snaps if s] == [1, 2, 3]  # seq counts publishes
+    latest = pub.latest()
+    assert latest.seq == 3 and latest.step == 4
+    assert pub.latest(after_seq=3) is None           # nothing newer
+    assert pub.latest(after_seq=2).seq == 3
+    assert pub.wait_for(after_seq=2, timeout=0.01).seq == 3
+    assert pub.wait_for(after_seq=3, timeout=0.01) is None  # times out
+
+
+def test_publisher_stable_flag_controls_copy():
+    part = FlatPartition(_tiny_tree(0.0))
+    pub = PlanePublisher()
+    flat = part.pack(_tiny_tree(1.0))
+    plane = {g: b[None] for g, b in flat.items()}
+    v, w = jnp.ones((1, part.num_groups)), jnp.ones(1)
+    s1 = pub.publish(plane, v, w, 0, stable=True)
+    for g in plane:
+        assert s1.plane[g] is plane[g]               # zero-copy handles
+    s2 = pub.publish(plane, v, w, 1, stable=False)
+    for g in plane:
+        assert s2.plane[g] is not plane[g]           # stabilized copies
+        np.testing.assert_array_equal(np.asarray(s2.plane[g]),
+                                      np.asarray(plane[g]))
+    assert pub.stats.copied_planes == 1
+    # version clocks are defensively copied on BOTH paths
+    assert s1.versions is not v and s2.versions is not v
+
+
+def test_publisher_rejects_bad_cadence():
+    with pytest.raises(ValueError):
+        PlanePublisher(every=0)
+
+
+# ---------------------------------------------------------------------------
+# swap policy
+# ---------------------------------------------------------------------------
+
+def _snap(seq, step, *, versions=None, drift=None, G=3):
+    if versions is None:
+        versions = np.full((1, G), float(step + 1), np.float32)  # staleness 0
+    return PlaneSnapshot(seq=seq, step=step, plane={},
+                         versions=np.asarray(versions, np.float32),
+                         w=np.ones(1), drift=drift)
+
+
+def test_policy_staleness_gate():
+    pol = SwapPolicy(max_staleness=2.0)
+    # versions = step+1 - stale → per-group staleness == stale
+    ok = pol.evaluate(_snap(1, 10, versions=np.full((1, 3), 9.0)))   # 2.0
+    assert ok.accepted and ok.reason == "fresh" and ok.staleness_max == 2.0
+    bad = pol.evaluate(_snap(2, 10, versions=np.full((1, 3), 8.0)))  # 3.0
+    assert not bad.accepted and bad.reason == "staleness"
+    # the max over groups gates, not the mean
+    mixed = np.asarray([[11.0, 11.0, 7.0]])                          # max 4.0
+    assert not pol.evaluate(_snap(3, 10, versions=mixed)).accepted
+    assert pol.gated_rejections == 2 and pol.accepted == 1
+
+
+def test_policy_drift_gate():
+    pol = SwapPolicy(max_drift=0.5)
+    assert pol.evaluate(_snap(1, 0, drift=0.4)).accepted
+    d = pol.evaluate(_snap(2, 0, drift=0.9))
+    assert not d.accepted and d.reason == "drift" and d.drift == 0.9
+    # unmeasured drift (None) passes the gate rather than rejecting
+    assert pol.evaluate(_snap(3, 0, drift=None)).accepted
+    assert pol.gated_rejections == 1
+
+
+def test_policy_swap_cadence():
+    pol = SwapPolicy(min_interval_steps=5, max_interval_steps=20,
+                     max_staleness=0.0)
+    first = pol.evaluate(_snap(1, 10), last_swap_step=None)
+    assert first.accepted                       # no prior swap: no interval
+    too_soon = pol.evaluate(_snap(2, 12), last_swap_step=10)
+    assert not too_soon.accepted and too_soon.reason == "min-interval"
+    # past max_interval, freshness wins even over a failing staleness gate
+    stale = np.zeros((1, 3), np.float32)        # staleness = step+1, huge
+    forced = pol.evaluate(_snap(3, 31, versions=stale), last_swap_step=10)
+    assert forced.accepted and forced.reason == "forced-max-interval"
+    # inside the window the staleness gate still applies
+    gated = pol.evaluate(_snap(4, 25, versions=stale), last_swap_step=10)
+    assert not gated.accepted and gated.reason == "staleness"
+    assert pol.rejected == 2 and pol.gated_rejections == 1
+    assert pol.counts == {"fresh": 1, "min-interval": 1,
+                          "forced-max-interval": 1, "staleness": 1}
+
+
+# ---------------------------------------------------------------------------
+# admission queue
+# ---------------------------------------------------------------------------
+
+def test_admission_bounded_depth_rejects_with_retry_hint():
+    q = AdmissionQueue(max_depth=2)
+    assert q.submit("a").accepted and q.submit("b").accepted
+    t = q.submit("c")
+    assert not t.accepted and t.reason == "queue-full"
+    assert t.retry_after_s > 0.0
+    assert q.depth == 2 and q.stats()["rejected"] == 1
+    assert q.take(10) == ["a", "b"]             # FIFO order
+    assert q.submit("c").accepted               # space freed
+
+
+def test_admission_deadline_drop():
+    q = AdmissionQueue(max_depth=8)
+    now = time.monotonic()
+    q.submit("late", deadline_s=now - 1.0, now=now)     # already expired
+    q.submit("ok", deadline_s=now + 60.0, now=now)
+    q.submit("nolimit", now=now)
+    got = q.take(10, now=now)
+    assert got == ["ok", "nolimit"]
+    s = q.stats()
+    assert s["deadline_dropped"] == 1
+    assert s["admitted"] == 2 and s["submitted"] == 3 and s["depth"] == 0
+
+
+def test_admission_drain_ema_updates():
+    q = AdmissionQueue(max_depth=8)
+    now = time.monotonic()
+    for i in range(4):
+        q.submit(i, now=now)
+    q.take(2, now=now)
+    before = q.stats()["drain_ema_s"]
+    q.take(2, now=now + 1.0)                    # 0.5 s/request measured
+    assert q.stats()["drain_ema_s"] > before
+
+
+# ---------------------------------------------------------------------------
+# live swaps (fake loop: exact invariants)
+# ---------------------------------------------------------------------------
+
+class _FakeLoop:
+    """Just enough ServeLoop surface for LiveServer.poll()."""
+
+    def __init__(self):
+        self.params = None
+        self.params_version = None
+        self.steps_run = 0
+
+    def set_params(self, params, version=None):
+        self.params = params
+        self.params_version = version
+
+
+def test_swap_is_atomic_across_groups():
+    """Served params always come from exactly ONE published plane: after
+    any sequence of swaps, every group decodes to the same plane version
+    (constant-fill probe), and the version clocks travel with the plane
+    they describe."""
+    part = FlatPartition(_tiny_tree(0.0))
+    assert part.num_groups >= 2                 # multi-group or no test
+    pub = PlanePublisher()
+    loop = _FakeLoop()
+    srv = LiveServer(loop, part, pub)
+    for step, fill in [(0, 1.0), (1, 2.0), (5, 7.0)]:
+        _publish(pub, part, fill, step)
+        d = srv.poll()
+        assert d.accepted
+        leaves = jax.tree.leaves(loop.params)
+        assert len(leaves) == len(jax.tree.leaves(_tiny_tree(0.0)))
+        for leaf in leaves:                     # every group, one version
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.full(leaf.shape, fill))
+        assert loop.params_version == (d.seq, step)
+        # version clocks advance together with the plane: the swap records
+        # the clocks of the SAME snapshot that produced the params
+        np.testing.assert_array_equal(
+            srv.swaps[-1].versions, np.full((1, part.num_groups), step + 1.0))
+    assert srv.swap_count == 3
+    # two publishes between polls: only the newest is evaluated — a decode
+    # can never observe the intermediate plane, let alone a mix
+    _publish(pub, part, 8.0, 6)
+    _publish(pub, part, 9.0, 7)
+    srv.poll()
+    for leaf in jax.tree.leaves(loop.params):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.full(leaf.shape, 9.0))
+    assert srv.poll() is None                   # nothing unseen left
+
+
+def test_rejected_plane_skipped_serving_continues():
+    part = FlatPartition(_tiny_tree(0.0))
+    pub = PlanePublisher()
+    loop = _FakeLoop()
+    srv = LiveServer(loop, part, pub, policy=SwapPolicy(max_drift=0.5))
+    _publish(pub, part, 1.0, 0, drift=0.0)
+    assert srv.poll().accepted
+    good = loop.params
+    _publish(pub, part, 2.0, 1, drift=9.0)      # diverging: must be gated
+    d = srv.poll()
+    assert not d.accepted and d.reason == "drift"
+    assert loop.params is good                  # still serving the old tree
+    assert loop.params_version == (1, 0)
+    _publish(pub, part, 3.0, 2, drift=0.1)      # recovered: swaps again
+    assert srv.poll().accepted
+    assert loop.params_version == (3, 2)
+    assert srv.swap_count == 2
+    assert srv.policy.gated_rejections == 1
+
+
+def test_live_server_serves_selected_worker():
+    part = FlatPartition(_tiny_tree(0.0))
+    pub = PlanePublisher()
+    flat1, flat2 = part.pack(_tiny_tree(1.0)), part.pack(_tiny_tree(2.0))
+    plane = {g: jnp.stack([flat1[g], flat2[g]]) for g in flat1}  # M=2
+    versions = jnp.ones((2, part.num_groups))
+    loop = _FakeLoop()
+    srv = LiveServer(loop, part, pub, worker=1)
+    pub.publish(plane, versions, jnp.ones(2), 0)
+    assert srv.poll().accepted
+    for leaf in jax.tree.leaves(loop.params):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.full(leaf.shape, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: trainer publishes, LiveServer swaps, no checkpoint anywhere
+# ---------------------------------------------------------------------------
+
+def _tiny_backend(pub, **kw):
+    from repro.configs.base import ModelConfig
+    from repro.core import make_backend
+    from repro.models import build_model
+    from repro.optim import constant, momentum
+
+    cfg = ModelConfig(name="tiny-lm", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=64)
+    model = build_model(cfg)
+    be = make_backend("prod", "layup", M=1,
+                      loss_fn=lambda p, b: model.loss_fn(p, b, block_k=32),
+                      optimizer=momentum(0.9), schedule=constant(0.05),
+                      fb_ratio=2, update_delay=1, measure_drift=True,
+                      publisher=pub, **kw)
+    return cfg, model, be
+
+
+def test_live_swap_end_to_end_monolithic(rng, tmp_path, monkeypatch):
+    """Full path on one CPU device: decoupled trainer publishes each
+    gossip round, the LiveServer swaps the read plane into a real
+    ServeLoop mid-serving — and nothing ever touches the filesystem."""
+    from repro.data.synthetic import SyntheticLM, make_worker_batches
+    from repro.launch.serve import Request, ServeLoop
+
+    monkeypatch.chdir(tmp_path)                 # catch any stray file I/O
+    pub = PlanePublisher()
+    cfg, model, be = _tiny_backend(pub)
+    params = model.init(rng)
+    st = be.init(jax.random.PRNGKey(0), params)
+    ds = SyntheticLM(vocab=cfg.vocab_size, seq_len=16, temperature=1.2)
+    for t in range(2):
+        st, _ = be.step(st, jax.tree.map(jnp.asarray,
+                                         make_worker_batches(ds, 1, 4, t)), None)
+    assert pub.stats.published == 2
+    assert pub.stats.copied_planes == 2         # monolithic lane stabilizes
+
+    loop = ServeLoop(model, params, num_slots=2, max_len=16)
+    adm = AdmissionQueue(max_depth=8)
+    # M=1 never stamps version clocks, so leave the staleness gate off here
+    srv = LiveServer(loop, be.part, pub, policy=SwapPolicy(),
+                     admission=adm)
+    assert adm.submit(Request(uid=0, prompt=np.asarray([1, 2], np.int32),
+                              max_new_tokens=3)).accepted
+    srv.run_until_idle()
+    st, _ = be.step(st, jax.tree.map(jnp.asarray,
+                                     make_worker_batches(ds, 1, 4, 2)), None)
+    assert adm.submit(Request(uid=1, prompt=np.asarray([3], np.int32),
+                              max_new_tokens=2)).accepted
+    srv.run_until_idle()
+
+    s = srv.stats()
+    assert s["tokens_emitted"] == 5 and s["requests_completed"] == 2
+    assert s["swaps"] >= 2                      # swapped mid-serving, twice
+    assert s["params_version"] is not None      # serving published weights
+    assert s["admission"]["admitted"] == 2
+    # swapped params == the trainer's read plane, unpacked — no checkpoint
+    expect = srv._unpack(pub.latest().plane)
+    for a, b in zip(jax.tree.leaves(loop.params), jax.tree.leaves(expect)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert list(tmp_path.iterdir()) == []       # zero files written
+
+
+@pytest.mark.slow
+def test_live_swap_end_to_end_pipeline(rng):
+    """Same path through the overlapped stage-graph engine: publishes are
+    zero-copy (the engine never donates the read plane)."""
+    from repro.data.synthetic import SyntheticLM, make_worker_batches
+    from repro.launch.serve import Request, ServeLoop
+
+    pub = PlanePublisher()
+    cfg, model, be = _tiny_backend(pub, overlap=True)
+    params = model.init(rng)
+    st = be.init(jax.random.PRNGKey(0), params)
+    ds = SyntheticLM(vocab=cfg.vocab_size, seq_len=16, temperature=1.2)
+    for t in range(3):
+        st, _ = be.step(st, jax.tree.map(jnp.asarray,
+                                         make_worker_batches(ds, 1, 4, t)), None)
+    assert pub.stats.published == 3
+    assert pub.stats.copied_planes == 0         # true zero-copy handoff
+
+    loop = ServeLoop(model, params, num_slots=1, max_len=16)
+    srv = LiveServer(loop, be.part, pub)
+    loop.submit(Request(uid=0, prompt=np.asarray([1], np.int32),
+                        max_new_tokens=2))
+    srv.run_until_idle()
+    assert srv.swap_count == 1 and loop.tokens_emitted == 2
+    assert loop.params_version == (3, 2)
