@@ -3,7 +3,7 @@ LayUp keep converging at full speed while DDP's wall-clock blows up.
 
     PYTHONPATH=src python examples/straggler_demo.py [--delay 4]
     PYTHONPATH=src python examples/straggler_demo.py --backend prod \
-        [--fb-ratio 2] [--update-delay 1]
+        [--fb-ratio 2] [--update-delay 1] [--overlap [--streams 3]]
 
 All execution engines run behind the same ``TrainerBackend`` protocol: the
 numeric backend (``sim``: vmapped workers on one device; ``prod``: the
@@ -31,9 +31,23 @@ def main():
     ap.add_argument("--update-delay", type=int, default=1,
                     help="prod backend: gradient FIFO depth D")
     ap.add_argument("--overlap", action="store_true",
-                    help="prod backend: stage-graph pipeline engine with "
-                         "measured per-stage overlap (DESIGN.md §10)")
+                    help="prod backend: run the stage-graph pipeline engine "
+                         "instead of the monolithic jitted step — separately "
+                         "jitted fwd/update/gossip stages driven by an "
+                         "async-dispatch host loop, with the measured "
+                         "per-stage timeline (dispatch overlap, DESIGN.md "
+                         "§10) printed after the run")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="prod backend, needs --overlap: number of execution "
+                         "streams (host threads standing in for device "
+                         "streams). >1 runs forward slices, update and the "
+                         "per-group one-sided signal gossip concurrently and "
+                         "prints EXECUTION-level accounting (exec_overlap_s, "
+                         "per-stream busy, signal-wait — DESIGN.md §13); "
+                         "numerics stay bit-exact vs --streams 1")
     args = ap.parse_args()
+    if args.streams > 1 and not args.overlap:
+        ap.error("--streams > 1 requires --overlap (DESIGN.md §13)")
 
     if args.backend == "prod":
         # the prod lane needs one host device per worker; both env vars must
@@ -118,15 +132,19 @@ def run_prod(args, hw, ds, init, loss_fn, delays):
     from repro.optim import constant, momentum
 
     R, D = args.fb_ratio, args.update_delay
-    engine = "stage-graph pipeline engine" if args.overlap else \
-        "monolithic jitted step"
+    if args.streams > 1:
+        engine = f"stream engine, {args.streams} execution streams"
+    elif args.overlap:
+        engine = "stage-graph pipeline engine"
+    else:
+        engine = "monolithic jitted step"
     print(f"prod decoupled lane: R={R}, D={D} "
           f"(double-buffered params, {D}-deep gradient FIFO, {engine})\n")
     num = make_backend("prod", "layup", M=M, loss_fn=loss_fn,
                        optimizer=momentum(0.9), schedule=constant(0.05),
                        fb_ratio=R, update_delay=D,
                        straggler_delays=delays, shifts=(1, 2, 4),
-                       overlap=args.overlap)
+                       overlap=args.overlap, streams=args.streams)
     ev_slow = make_backend("event", "layup", M=M, hw=hw,
                            straggler_delays=delays, fb_ratio=R,
                            update_delay=D)
@@ -183,6 +201,15 @@ def run_prod(args, hw, ds, init, loss_fn, delays):
               f"{int(s['overlap_events'])}")
         print(f"  fwd(t+1) over gossip(t)  {s['fwd_gossip_overlap_s']:.3f}s "
               f"(measured — the overlap the monolithic step cannot exhibit)")
+        if args.streams > 1:
+            print("\nmeasured execution concurrency (stream engine, "
+                  "closed per-stream spans):")
+            for name, busy in sorted(tl["stream_busy_s"].items()):
+                print(f"  stream {name:8s} busy {busy:8.3f}s")
+            print(f"  exec_overlap_s           {s['exec_overlap_s']:.3f}s "
+                  f"(2+ streams executing simultaneously)")
+            print(f"  signal_wait_s            {s['signal_wait_s']:.3f}s "
+                  f"(one-sided signal predicates, DESIGN.md §13)")
 
 
 if __name__ == "__main__":

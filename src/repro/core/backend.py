@@ -193,7 +193,8 @@ class ProdTrainerBackend:
                  fb_ratio: int = 1, update_delay: int = 0,
                  straggler_delays=None, measure_drift: bool = True,
                  overlap: bool = False, flat: bool = True,
-                 use_pallas: bool = False, publisher=None):
+                 use_pallas: bool = False, publisher=None,
+                 streams: int = 1):
         import jax
         from repro.launch.mesh import num_workers
         from repro.launch.train import make_decoupled_backend_trainer
@@ -221,7 +222,11 @@ class ProdTrainerBackend:
         self.mesh = mesh
         self.overlap = bool(overlap)
         self.flat = bool(flat)
+        self.streams = int(streams)
         self.publisher = publisher
+        if streams > 1 and not overlap:
+            raise ValueError("streams > 1 is a property of the stage-graph "
+                             "pipeline; it requires overlap=True")
         if overlap:
             from repro.launch.pipeline import (StageTimeline,
                                                make_pipeline_backend_trainer)
@@ -232,7 +237,8 @@ class ProdTrainerBackend:
                     fb_ratio=fb_ratio, update_delay=update_delay,
                     straggler_delays=straggler_delays,
                     measure_drift=measure_drift, timeline=self.timeline,
-                    flat=flat, use_pallas=use_pallas, publisher=publisher)
+                    flat=flat, use_pallas=use_pallas, publisher=publisher,
+                    streams=streams)
         else:
             self.timeline = None
             self._init_fn, self._step_fn, self._shifts, self._engine_box = \
@@ -271,7 +277,11 @@ class ProdTrainerBackend:
         part = self._engine_box.get("part")
         if part is None:
             raise RuntimeError("call init() before export_params()")
-        return part.unpack(state["read"])
+        read = state["read"]
+        if self.streams > 1:
+            # stream-engine state leaves are TaskOutput futures
+            read = self.engine.materialize(read)
+        return part.unpack(read)
 
     def init(self, rng, params_single):
         self._steps = 0
@@ -297,12 +307,18 @@ class ProdTrainerBackend:
     def summary(self) -> Dict[str, float]:
         out = _numeric_summary(self._steps, self._last)
         if self.timeline is not None:
+            eng = self.engine
+            if eng is not None and hasattr(eng, "finalize"):
+                eng.finalize()  # stream engine: retire in-flight tasks
             self.timeline.finalize()
             t = self.timeline.summary()
             out.update(pipeline_wall_s=t["wall_s"],
                        overlap_events=float(t["overlap_events"]),
                        overlap_s=t["overlap_s"],
-                       fwd_gossip_overlap_s=t["fwd_gossip_overlap_s"])
+                       fwd_gossip_overlap_s=t["fwd_gossip_overlap_s"],
+                       streams=float(t["streams"]),
+                       exec_overlap_s=t["exec_overlap_s"],
+                       signal_wait_s=t["signal_wait_s"])
         return out
 
 
@@ -317,7 +333,10 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
                   (or an explicit mesh kwarg).
     Shared kwargs: straggler_delays, fb_ratio, update_delay; sim/prod also
     take measure_drift, event also takes sync_every and seed, prod also
-    takes mesh, shifts, overlap (the stage-graph pipeline engine), flat
+    takes mesh, shifts, overlap (the stage-graph pipeline engine), streams
+    (with overlap=True: >1 runs the stages on per-stage execution streams
+    with one-sided per-group signal gossip — measured exec_overlap_s,
+    identical numerics, DESIGN.md §13), flat
     (default True — the persistent flat parameter plane with param-dtype
     gossip wire; False restores the legacy tree state + per-step f32
     ravel), use_pallas (fused gossip_mix kernel) and publisher (a

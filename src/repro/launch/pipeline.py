@@ -59,6 +59,7 @@ provably ran ahead of, never an extrapolation.
 from __future__ import annotations
 
 import json
+import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -75,9 +76,10 @@ from repro.core.layerview import (
 from repro.launch.mesh import data_axes, num_workers
 from repro.launch.train import (
     _abstract_batch, _decoupled_metrics, _opt_shardings_stacked,
-    _worker_batch_pspec, backward_update_lane, forward_slice_lane,
-    gossip_fused_lane, gossip_lane_legacy, gossip_plane_lane,
-    make_decoupled_state, shard_map, straggler_active_fn,
+    _ring_exchange, _worker_batch_pspec, backward_update_lane,
+    forward_slice_lane, gossip_fused_lane, gossip_lane_legacy,
+    gossip_plane_lane, make_decoupled_state, shard_map,
+    straggler_active_fn,
 )
 from repro.launch import sharding as SH
 from repro.optim.optimizers import Optimizer
@@ -98,20 +100,34 @@ def _is_ready(x) -> bool:
 
 
 class StageTimeline:
-    """Host-side record of every stage dispatch.
+    """Host-side record of every stage dispatch and stage execution.
 
-    Each event: ``{stage, step, slice, dispatch, complete, concurrent}``.
-    ``dispatch`` is stamped when the host *initiates* the stage call
-    (``begin``), and ``concurrent`` lists the ``(stage, step, slice)``
-    triples whose fences were NOT ready at that moment — direct evidence
-    the host ran ahead of the device (the runtime may still synchronize
-    inside the call; the initiation order is what the engine controls).
-    ``complete`` is the first time the fence was observed ready (polled at
-    subsequent dispatches and at ``finalize()``), i.e. an upper bound on
-    the true completion."""
+    Two kinds of events share the list:
+
+    * **dispatch events** (single-stream :class:`PipelineEngine`, via
+      ``begin``/``commit``): ``{stage, step, slice, dispatch, complete,
+      concurrent}``. ``dispatch`` is stamped when the host *initiates*
+      the stage call, ``concurrent`` lists the ``(stage, step, slice)``
+      triples whose fences were NOT ready at that moment — direct
+      evidence the host ran ahead of the device — and ``complete`` is
+      the first time the fence was observed ready (polled at subsequent
+      dispatches and at ``finalize()``), i.e. an upper bound on the true
+      completion.
+    * **execution events** (:class:`~repro.launch.streams.StreamEngine`,
+      via ``record_exec``, called from the stream threads): the same
+      shape plus ``{stream, enqueue, exec_start, wait_s[, group]}``.
+      ``[exec_start, complete]`` is a TRUE execution span — the owning
+      stream thread launched the stage and blocked until its outputs
+      were ready — so spans from different streams interleave exactly
+      when the device executed two stages concurrently. ``dispatch`` is
+      set to ``exec_start`` and ``concurrent`` to ``[]`` so the
+      dispatch-level aggregations stay meaningful, and ``wait_s`` is the
+      time the task spent blocked on its input signals/futures before
+      launching (the signal-wait cost of the one-sided protocol)."""
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self._clock = clock
+        self._lock = threading.Lock()
         self.events: List[Dict[str, Any]] = []
         self._pending: List[Tuple[Dict[str, Any], Any]] = []
 
@@ -131,6 +147,25 @@ class StageTimeline:
         """Attach the dispatched stage's fence output to its event."""
         self._pending.append((ev, fence))
         self.poll()
+
+    def record_exec(self, stage: str, step: int, *, stream: str,
+                    enqueue: Optional[float], exec_start: float,
+                    complete: float, wait_s: float = 0.0,
+                    slice_idx=None, group: Optional[str] = None) -> None:
+        """Record one finished stage execution from a stream thread.
+
+        Called by :class:`~repro.launch.streams.Stream` AFTER it blocked
+        on the stage's outputs, so ``[exec_start, complete]`` is a closed
+        execution span (no pending fence to poll). Thread-safe — stream
+        threads record concurrently with the host reading ``summary``."""
+        ev = {"stage": stage, "step": int(step), "slice": slice_idx,
+              "dispatch": exec_start, "complete": complete,
+              "concurrent": [], "stream": stream, "enqueue": enqueue,
+              "exec_start": exec_start, "wait_s": float(wait_s)}
+        if group is not None:
+            ev["group"] = group
+        with self._lock:
+            self.events.append(ev)
 
     def poll(self, now: Optional[float] = None) -> None:
         if not self._pending:
@@ -161,11 +196,43 @@ class StageTimeline:
         self.events = []
 
     def summary(self) -> Dict[str, Any]:
-        evs = [e for e in self.events if e["complete"] is not None]
+        """Aggregate the recorded events. Returned fields:
+
+        * ``events`` — total events recorded (incl. still-pending ones);
+          ``steps`` — ``max(step) + 1`` over closed events; ``wall_s`` —
+          first dispatch to last completion.
+        * ``stage_s`` — summed ``complete − dispatch`` per stage name
+          (per-stage device occupancy upper bound; stages overlap, so
+          the values can sum past ``wall_s``).
+        * ``overlap_events`` / ``overlap_s`` — dispatch-level run-ahead:
+          events whose initiation found ANY stage still in flight, and
+          the summed window each provably overlapped (how far the host
+          ran ahead — NOT proof of concurrent execution).
+        * ``fwd_gossip_overlap_s`` — the paper's overlap: step ``t``
+          forwards dispatched while step ``t−1`` gossip was in flight,
+          counted once per adjacent step pair.
+        * ``streams`` — distinct execution streams that recorded events
+          (1 for the single-stream engine: everything shares the one
+          dispatch lane).
+        * ``exec_overlap_s`` — MEASURED execution concurrency: with each
+          stream's ``[exec_start, complete]`` spans merged into busy
+          intervals, the integral of ``(busy_streams − 1)`` over time.
+          Zero unless two streams were executing at the same instant;
+          same-stream pipelining never counts. This is the number the
+          nightly M>1 gate asserts is positive (DESIGN.md §13).
+        * ``stream_busy_s`` — per-stream merged busy time.
+        * ``signal_wait_s`` — summed time stream tasks spent blocked on
+          input signals/futures before launching (the wait side of the
+          one-sided protocol; high values mean a starved stream)."""
+        with self._lock:
+            events = list(self.events)
+        evs = [e for e in events if e["complete"] is not None]
         out: Dict[str, Any] = {
-            "events": len(self.events), "steps": 0, "wall_s": 0.0,
+            "events": len(events), "steps": 0, "wall_s": 0.0,
             "overlap_events": 0, "overlap_s": 0.0,
             "fwd_gossip_overlap_s": 0.0, "stage_s": {},
+            "streams": 1, "exec_overlap_s": 0.0, "stream_busy_s": {},
+            "signal_wait_s": 0.0,
         }
         if not evs:
             return out
@@ -208,19 +275,52 @@ class StageTimeline:
         out["overlap_events"] = overlap_events
         out["overlap_s"] = overlap
         out["fwd_gossip_overlap_s"] = fwd_gossip
+
+        # per-stream execution accounting (stream events only): merge each
+        # stream's closed [exec_start, complete] spans into busy intervals,
+        # then sweep the interval endpoints counting how many DISTINCT
+        # streams are busy — exec_overlap_s integrates (busy − 1) over
+        # time, so same-stream pipelining contributes nothing and the
+        # value is > 0 iff two streams truly executed concurrently.
+        sevs = [e for e in evs if e.get("stream")]
+        if sevs:
+            busy: Dict[str, List[List[float]]] = {}
+            for e in sorted(sevs, key=lambda e: e["exec_start"]):
+                iv = busy.setdefault(e["stream"], [])
+                if iv and e["exec_start"] <= iv[-1][1]:
+                    iv[-1][1] = max(iv[-1][1], e["complete"])
+                else:
+                    iv.append([e["exec_start"], e["complete"]])
+            out["streams"] = len(busy)
+            out["stream_busy_s"] = {
+                n: sum(c - s for s, c in iv) for n, iv in busy.items()}
+            out["signal_wait_s"] = sum(e.get("wait_s", 0.0) for e in sevs)
+            edges = sorted((t, d) for iv in busy.values()
+                           for s, c in iv for t, d in ((s, 1), (c, -1)))
+            k, last, exec_overlap = 0, 0.0, 0.0
+            for t, d in edges:
+                if k > 1:
+                    exec_overlap += (t - last) * (k - 1)
+                k, last = k + d, t
+            out["exec_overlap_s"] = exec_overlap
         return out
 
     def dump(self, path: str) -> str:
         """Write events (dispatch/complete relative to the first dispatch)
         plus the summary as JSON — the nightly per-stage timing artifact."""
         s = self.summary()
-        t0 = min((e["dispatch"] for e in self.events), default=0.0)
+        with self._lock:
+            snap = list(self.events)
+        t0 = min((e["dispatch"] for e in snap), default=0.0)
+        rel = lambda v: None if v is None else v - t0
         events = [{**e,
                    "dispatch": e["dispatch"] - t0,
-                   "complete": (None if e["complete"] is None
-                                else e["complete"] - t0),
-                   "concurrent": [list(c) for c in e["concurrent"]]}
-                  for e in self.events]
+                   "complete": rel(e["complete"]),
+                   "concurrent": [list(c) for c in e["concurrent"]],
+                   **({"enqueue": rel(e.get("enqueue")),
+                       "exec_start": e["exec_start"] - t0}
+                      if "stream" in e else {})}
+                  for e in snap]
         with open(path, "w") as f:
             json.dump({"summary": s, "events": events}, f, indent=1)
         return path
@@ -400,6 +500,100 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
     return {"fwd": fwd, "update": update, "gossip": gossip}
 
 
+def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
+                      mix: Callable, metrics_fn: Callable,
+                      shifts: Sequence[int], *, fused: bool = False,
+                      shardings: Optional[Dict[str, Any]] = None,
+                      R: int = 1):
+    """The gossip stage split at the layer-group boundary, for the stream
+    engine (``streams > 1``): one jitted mix executable PER PLANE BUFFER
+    plus one clock/metrics executable.
+
+    Each mix calls the very same gossip lane closure on a single-buffer
+    sub-dict ``{name: buf}`` — the lanes iterate ``plane.items()``, so the
+    per-element f32 math is bitwise-identical to the full-plane stage; the
+    push-sum weight exchange is recomputed per group (a scalar ppermute —
+    cheap and deterministic, so every group derives the identical
+    ``w_half``/``rw``) and the mixed weight is discarded. The clock stage
+    recomputes the exchange ONCE more to produce the canonical new weight,
+    stamps the version clocks (M > 1), and folds the metric reduction —
+    together the group stages compute exactly what ``_jit_stages``' fused
+    gossip stage computes, split so each group's mix can launch as soon as
+    its own signal lands (one-sided gossip, DESIGN.md §13).
+
+    Donation: the non-fused mix donates its fresh-plane input (the update
+    stage's per-group output — sole live reference); the fused mix
+    donates the update DELTAS and leaves the live plane alone (the
+    forward slices of the same step still read it). Neither donates the
+    push-sum weights: the clock donates those (and the clocks), which is
+    safe only because the stream engine runs every mix of a step before
+    its clock on the same FIFO stream."""
+    pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
+    ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    phi = jnp.asarray(send_fractions(part.num_groups))
+
+    def sm(f, in_specs, out_specs):
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, axis_names=set(worker_axes))
+
+    def make_mix_body(name):
+        if fused:
+            def mix_body(buf_st, upd_st, w_st, shift_idx):
+                mixed, _ = mix({name: buf_st[0]}, {name: upd_st[0]},
+                               w_st[0], shift_idx)
+                return mixed[name][None]
+        else:
+            def mix_body(buf_st, w_st, shift_idx):
+                mixed, _ = mix({name: buf_st[0]}, w_st[0], shift_idx)
+                return mixed[name][None]
+        return mix_body
+
+    def clock_body(w_st, versions, step_idx, shift_idx):
+        w = w_st[0]
+        if M > 1:
+            # the same scalar push-sum hop the full-plane gossip stage
+            # performs, on an empty plane — only the weight ships
+            _, w_half, rw = _ring_exchange({}, w, shift_idx, M, ax, shifts)
+            w = w_half + rw
+            versions = stamp_groups(versions,
+                                    step_idx.astype(jnp.float32) + phi)
+        return w[None], versions
+
+    mix_in = (pw, pw, pw, P()) if fused else (pw, pw, P())
+    mix_sms = {name: sm(make_mix_body(name), mix_in, pw)
+               for name in part.group_sizes}
+    clock_sm = sm(clock_body, (pw, pw, P(), P()), (pw, pw))
+
+    def clock_step(w_st, versions, losses, upd_stale, step_idx, shift_idx):
+        w, versions = clock_sm(w_st, versions, step_idx, shift_idx)
+        metrics = metrics_fn(losses, w, versions, upd_stale, step_idx)
+        return w, versions, metrics
+
+    donate_mix = (1,) if fused else (0,)
+    if shardings is None:
+        mixes = {name: jax.jit(f, donate_argnums=donate_mix)
+                 for name, f in mix_sms.items()}
+        clock = jax.jit(clock_step, donate_argnums=(0, 1))
+    else:
+        s = shardings
+        buf = lambda name: s["p"][name]
+        mixes = {}
+        for name, f in mix_sms.items():
+            mix_sh = ((buf(name), s["upd"][name]) if fused
+                      else (buf(name),)) + (s["w"], s["scalar"])
+            mixes[name] = jax.jit(f, in_shardings=mix_sh,
+                                  out_shardings=buf(name),
+                                  donate_argnums=donate_mix)
+        R_loss = tuple([s["lossvec"]] * R)
+        clock = jax.jit(
+            clock_step,
+            in_shardings=(s["w"], s["w"], R_loss, s["scalar"], s["scalar"],
+                          s["scalar"]),
+            out_shardings=(s["w"], s["w"], s["metrics"]),
+            donate_argnums=(0, 1))
+    return {"mix": mixes, "clock": clock}
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -440,6 +634,23 @@ class PipelineEngine:
         self._graveyard: List[Tuple[Any, Any]] = []
 
     def step(self, state, batch, step_idx, shift_idx):
+        """Dispatch one decoupled update iteration; never blocks on math.
+
+        ``state`` is the decoupled state dict (``read``/``write``/``opt``/
+        ``w``/``versions``[/``fifo``] — from ``make_decoupled_state``, or
+        a previous ``step``'s return, whose leaves may be un-awaited
+        futures). ``batch`` is one step's input; ``step_idx``/``shift_idx``
+        should be python ints or numpy scalars — a ``jnp`` scalar is an
+        eager device-0 computation whose reshard queues behind every
+        in-flight stage and serializes the pipeline.
+
+        Dispatches the R forward slices, the backward/update and the
+        gossip(+metrics) stage as separate async jit calls and returns
+        ``(new_state, metrics)`` immediately: every value is a future, the
+        runtime chains the data dependencies, and the host may call
+        ``step`` again for ``t+1`` while ``t`` still executes (bounded by
+        ``max_inflight_steps`` backpressure). Converting any metric (e.g.
+        ``float(metrics["loss"])``) blocks on that value only."""
         tl = self.timeline
         t = int(step_idx)
         # release buffers whose step has fully retired (never blocks), then
@@ -580,13 +791,17 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                   constrain_grads: bool = False,
                                   timeline: Optional[StageTimeline] = None,
                                   flat: bool = True,
-                                  use_pallas: bool = False) -> PipelineStep:
+                                  use_pallas: bool = False,
+                                  streams: int = 1) -> PipelineStep:
     """The decoupled LayUp lane as a stage-graph pipeline on the real mesh —
     same sharding/abstract setup as ``make_layup_decoupled_train_step``,
     split into separately jitted stages. ``flat=True`` (default): the
     engine's double buffers ARE the persistent flat plane and the gossip
     stage donates it; ``use_pallas`` swaps in the fused-kernel gossip
-    stage (DESIGN.md §11)."""
+    stage (DESIGN.md §11). ``streams > 1`` runs the stages on per-stage
+    execution streams with one-sided per-group signal gossip
+    (:class:`repro.launch.streams.StreamEngine`, DESIGN.md §13) — same
+    numerics, measured *execution* overlap; requires ``flat=True``."""
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
@@ -609,6 +824,9 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
 
     if use_pallas and not flat:
         raise ValueError("use_pallas requires the flat plane (flat=True)")
+    if streams > 1 and not flat:
+        raise ValueError("streams > 1 ships the flat group plane across "
+                         "the stream boundary; it requires flat=True")
     part = FlatPartition(model.abstract_params())
     fwd_slices = [forward_slice_lane(model.loss_fn, fb_ratio=R, slice_idx=r,
                                      grad_specs=grad_specs)
@@ -692,12 +910,35 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                       tuple([lossvec_abs] * R),
                                       f32, i32, i32),
     }
-    engine = PipelineEngine(
-        R=R, D=D, M=M, stages=stages, timeline=timeline, fused=use_pallas,
-        describe=(f"layup decoupled pipeline (M={M}, R={R}, D={D}, "
-                  f"shifts={shifts}, stages={R + 2}, flat={flat}"
-                  f"{', pallas' if use_pallas else ''})"),
-        abstract_args=abstract_args)
+    if streams > 1:
+        from repro.launch.streams import StreamEngine
+        group_stages = _jit_group_stages(part, mesh, worker_axes, M, mix,
+                                         bodies[3], shifts,
+                                         fused=use_pallas,
+                                         shardings=shardings, R=R)
+        clock_abs = (w_abs, v_abs, tuple([lossvec_abs] * R), f32, i32, i32)
+        for name in part.group_sizes:
+            buf_abs = ((stacked_params[name], upd_abs[name]) if use_pallas
+                       else (stacked_params[name],))
+            abstract_args[f"mix:{name}"] = buf_abs + (w_abs, i32)
+        abstract_args["clock"] = clock_abs
+        engine = StreamEngine(
+            R=R, D=D, M=M, group_names=list(part.group_sizes),
+            stages=stages, group_stages=group_stages, timeline=timeline,
+            n_streams=streams, fused=use_pallas,
+            describe=(f"layup decoupled stream pipeline (M={M}, R={R}, "
+                      f"D={D}, shifts={shifts}, streams={streams}, "
+                      f"groups={len(part.group_sizes)}"
+                      f"{', pallas' if use_pallas else ''})"),
+            abstract_args=abstract_args)
+    else:
+        engine = PipelineEngine(
+            R=R, D=D, M=M, stages=stages, timeline=timeline,
+            fused=use_pallas,
+            describe=(f"layup decoupled pipeline (M={M}, R={R}, D={D}, "
+                      f"shifts={shifts}, stages={R + 2}, flat={flat}"
+                      f"{', pallas' if use_pallas else ''})"),
+            abstract_args=abstract_args)
 
     def init_state(params_stacked):
         return make_decoupled_state(params_stacked, optimizer,
@@ -715,10 +956,20 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                   timeline: Optional[StageTimeline] = None,
                                   flat: bool = True,
                                   use_pallas: bool = False,
-                                  publisher=None):
+                                  publisher=None,
+                                  streams: int = 1):
     """Pipeline-engine counterpart of ``make_decoupled_backend_trainer``:
     same generic pytree + loss_fn contract, same sim-layout batches, but
     the step is the stage-graph engine instead of one jitted program.
+
+    ``streams > 1`` swaps in the :class:`repro.launch.streams.
+    StreamEngine`: the same fwd/update stage executables plus the gossip
+    stage split per layer group, run on dedicated execution streams
+    coordinated by one-sided signals (DESIGN.md §13). Numerics stay
+    loss/staleness-exact vs ``streams=1``; the timeline gains measured
+    ``exec_overlap_s``. Requires ``flat=True``; ``publisher`` is not
+    supported with ``streams > 1`` yet (the publisher contract expects
+    concrete read-plane handles at publish time, not stream futures).
 
     ``publisher`` (a :class:`repro.serving.PlanePublisher`) receives the
     engine's read plane + version clocks + drift once per gossip round.
@@ -747,6 +998,14 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
         raise ValueError("publisher needs the flat plane (flat=True): the "
                          "legacy tree state has no per-group plane to "
                          "publish")
+    if streams > 1 and not flat:
+        raise ValueError("streams > 1 ships the flat group plane across "
+                         "the stream boundary; it requires flat=True")
+    if streams > 1 and publisher is not None:
+        raise ValueError("publisher is not supported with streams > 1: "
+                         "the stream engine's read plane is a future, not "
+                         "a stable handle to publish (serve from a "
+                         "streams=1 engine, or materialize snapshots)")
 
     def build(params_single):
         part = FlatPartition(params_single)
@@ -765,11 +1024,26 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                flat=flat, fused=use_pallas)
         stages = _jit_stages(bodies, mesh, worker_axes, R, D, batch_specs=pw,
                              fused=use_pallas)
-        engine = PipelineEngine(
-            R=R, D=D, M=M, stages=stages, timeline=timeline,
-            fused=use_pallas,
-            describe=(f"pipeline backend (M={M}, R={R}, D={D}, flat={flat}"
-                      f"{', pallas' if use_pallas else ''})"))
+        if streams > 1:
+            from repro.launch.streams import StreamEngine
+            group_stages = _jit_group_stages(part, mesh, worker_axes, M,
+                                             mix, bodies[3], shifts,
+                                             fused=use_pallas, R=R)
+            engine = StreamEngine(
+                R=R, D=D, M=M, group_names=list(part.group_sizes),
+                stages=stages, group_stages=group_stages,
+                timeline=timeline, n_streams=streams, fused=use_pallas,
+                describe=(f"stream pipeline backend (M={M}, R={R}, D={D}, "
+                          f"streams={streams}, "
+                          f"groups={len(part.group_sizes)}"
+                          f"{', pallas' if use_pallas else ''})"))
+        else:
+            engine = PipelineEngine(
+                R=R, D=D, M=M, stages=stages, timeline=timeline,
+                fused=use_pallas,
+                describe=(f"pipeline backend (M={M}, R={R}, D={D}, "
+                          f"flat={flat}"
+                          f"{', pallas' if use_pallas else ''})"))
         return engine, part
 
     def init_fn(rng, params_single):
@@ -791,7 +1065,17 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
         state, metrics = box["engine"].step(state, batch, step_idx,
                                             shift_idx)
         if measure_drift:
-            metrics["disagreement"] = box["drift"](state["read"], state["w"])
+            if streams > 1:
+                # state leaves are stream futures: run the drift jit on
+                # the gossip stream after the step's clock (FIFO — the
+                # inputs are concrete by then, and w is read before the
+                # next clock donates it)
+                metrics["disagreement"] = box["engine"].submit_aux(
+                    "drift", box["drift"], (state["read"], state["w"]),
+                    int(step_idx))
+            else:
+                metrics["disagreement"] = box["drift"](state["read"],
+                                                       state["w"])
         if publisher is not None:
             # stable=True: the engine never donates the read plane, so the
             # snapshot pins the live handles — zero-copy. Everything here

@@ -1189,13 +1189,19 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
               update_delay: int = 0,
               overlap: bool = False,
               flat: bool = True,
-              use_pallas: bool = False) -> ProdStep:
+              use_pallas: bool = False,
+              streams: int = 1) -> ProdStep:
     """``overlap=True`` selects the stage-graph pipeline engine
     (repro.launch.pipeline): the decoupled lane compiled into separately
     jitted fwd-slice / bwd+update / gossip stages dispatched asynchronously
     from the host, instead of one monolithic jitted step. Numerics are
     identical (the monolithic path stays as the oracle — DESIGN.md §10);
     only the dispatch schedule and the per-stage timestamps differ.
+
+    ``streams`` (with ``overlap=True``): > 1 runs those stages on
+    per-stage execution streams with the gossip stage split per layer
+    group behind one-sided signals (repro.launch.streams, DESIGN.md §13)
+    — measured execution overlap in the timeline, same numerics.
 
     ``flat`` (decoupled lanes, default True) keeps the parameters as the
     persistent per-group flat plane — param-dtype gossip wire, zero
@@ -1207,6 +1213,9 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
     optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
     schedule = schedule or constant(0.1)
     decoupled = fb_ratio > 1 or update_delay > 0 or overlap
+    if streams > 1 and not overlap:
+        raise ValueError("streams > 1 is a property of the stage-graph "
+                         "pipeline; it requires overlap=True")
     if decoupled and (shape.kind != "train" or algo == "ddp"):
         raise ValueError(
             "fb_ratio/update_delay/overlap define the decoupled LayUp lane; "
@@ -1226,7 +1235,7 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
                     overrides=overrides, preset=preset, fb_ratio=fb_ratio,
                     update_delay=update_delay,
                     constrain_grads=constrain_grads, flat=flat,
-                    use_pallas=use_pallas)
+                    use_pallas=use_pallas, streams=streams)
             return make_layup_decoupled_train_step(
                 model, mesh, optimizer, schedule, shape, shifts, overrides,
                 preset, fb_ratio, update_delay, constrain_grads, flat,
