@@ -1,14 +1,19 @@
-"""Gossip/update-path benchmark: legacy per-step repack vs flat plane.
+"""Gossip/update-path benchmark: legacy per-step repack vs flat plane,
+plus the quantized (int8) gossip wire.
 
 The legacy decoupled lane re-packed every layer group with ``ravel_pytree``
 on EVERY step and shipped a blanket-f32 wire; the flat-plane lane
 (DESIGN.md §11) packs once at init and gossips the persistent per-group
-buffers directly, in the params' dtype. This benchmark times full decoupled
-steps of the SAME workload through both lanes at several parameter sizes
-(small batch, parameter-heavy MLP — the step cost is dominated by the
-gossip/update path being compared), and records the bytes-on-wire of one
-plane for f32 vs bf16 params (the wire-dtype fix: bf16 must be exactly
-half).
+buffers directly, in the params' dtype. ``wire="int8"`` (DESIGN.md §14)
+further compresses the wire to int8 values + per-128-lane-row f32 scales
+with error-feedback residuals. This benchmark times full decoupled steps
+of the SAME workload through the lanes at several parameter sizes (small
+batch, parameter-heavy MLP — the step cost is dominated by the
+gossip/update path being compared), records the bytes-on-wire of one
+plane for f32 vs bf16 vs int8 (bf16 must be exactly half of f32; int8
+must be ≤ 0.55× bf16 at the largest size), and checks the quantized
+wire's loss stays within tolerance of the exact param wire on the same
+workload.
 
 Emits ``gossip_path.*`` rows and dumps ``BENCH_gossip_path.json`` via
 ``common.dump_json`` — the nightly job runs ``--quick`` and uploads the
@@ -97,12 +102,13 @@ def main(steps=None, quick=False):
     def measure(width, depth, steps):
         loss_fn, params = _problem(width, depth, jnp.float32)
         res = {}
-        for flavor, flat in (("legacy", False), ("flat", True)):
+        for flavor, kw in (("legacy", dict(flat=False)),
+                           ("flat", dict(flat=True)),
+                           ("int8", dict(flat=True, wire="int8"))):
             be = make_backend("prod", "layup", M=M, loss_fn=loss_fn,
                               optimizer=momentum(0.9),
                               schedule=constant(0.05), fb_ratio=1,
-                              update_delay=1, measure_drift=False,
-                              flat=flat)
+                              update_delay=1, measure_drift=False, **kw)
             res[flavor] = _time_steps(be, params, width, M, steps)
         return res, params
 
@@ -111,7 +117,7 @@ def main(steps=None, quick=False):
         res, params = measure(width, depth, steps)
         nparams = sum(int(np.prod(l.shape))
                       for l in jax.tree.leaves(params))
-        for flavor in ("legacy", "flat"):
+        for flavor in ("legacy", "flat", "int8"):
             med, best = res[flavor]
             emit(f"gossip_path.W{width}xL{depth}.{flavor}", med * 1e6,
                  f"min_us={best * 1e6:.1f};params={nparams};M={M};"
@@ -121,16 +127,53 @@ def main(steps=None, quick=False):
              f"x{res['legacy'][0] / res['flat'][0]:.3f}")
         per_size[(width, depth)] = res
 
-    section("Wire bytes — param-dtype wire (bf16 = half the f32 plane)")
+    section("Wire bytes — param-dtype wire (bf16 = half the f32 plane); "
+            "int8 wire = values + per-row f32 scales")
     for width, depth in sizes:
         _, p32 = _problem(width, depth, jnp.float32)
         _, p16 = _problem(width, depth, jnp.bfloat16)
         b32 = FlatPartition(p32).plane_nbytes()
         b16 = FlatPartition(p16).plane_nbytes()
+        b8 = FlatPartition(p16).plane_nbytes(wire="int8")
         emit(f"gossip_path.W{width}xL{depth}.wire_bytes_f32", b32, "")
         emit(f"gossip_path.W{width}xL{depth}.wire_bytes_bf16", b16,
              f"ratio={b16 / b32:.3f}")
+        emit(f"gossip_path.W{width}xL{depth}.wire_bytes_int8", b8,
+             f"ratio_vs_bf16={b8 / b16:.3f}")
         assert b16 * 2 == b32, (width, depth, b16, b32)
+    # acceptance: the int8 wire is at most 0.55× the bf16 wire at the
+    # largest size (the per-row scale overhead amortizes with size)
+    width, depth = sizes[-1]
+    _, p16 = _problem(width, depth, jnp.bfloat16)
+    b16 = FlatPartition(p16).plane_nbytes()
+    b8 = FlatPartition(p16).plane_nbytes(wire="int8")
+    assert b8 <= 0.55 * b16, (
+        f"int8 wire {b8}B > 0.55 x bf16 wire {b16}B at W{width}xL{depth}")
+
+    section("Quantized-wire loss parity — wire=int8 vs wire=param")
+    width, depth = sizes[0]
+    loss_fn, params = _problem(width, depth, jnp.float32)
+    parity_steps = max(steps, 12)
+    finals = {}
+    for flavor, kw in (("param", dict()), ("int8", dict(wire="int8"))):
+        be = make_backend("prod", "layup", M=M, loss_fn=loss_fn,
+                          optimizer=momentum(0.9), schedule=constant(0.05),
+                          fb_ratio=1, update_delay=1, measure_drift=False,
+                          flat=True, **kw)
+        st = be.init(jax.random.PRNGKey(0), params)
+        losses = []
+        for t in range(parity_steps):
+            st, m = be.step(st, _batch(M, 4, width, t % 4), None)
+            losses.append(float(m["loss"]))
+        finals[flavor] = float(np.mean(losses[-4:]))
+    rel = abs(finals["int8"] - finals["param"]) / max(
+        abs(finals["param"]), 1e-9)
+    emit(f"gossip_path.W{width}xL{depth}.int8_loss_parity", 0.0,
+         f"param={finals['param']:.5f};int8={finals['int8']:.5f};"
+         f"rel={rel:.4f}")
+    assert rel < 0.1, (
+        f"quantized-wire loss diverged: param={finals['param']:.5f} "
+        f"int8={finals['int8']:.5f} (rel {rel:.4f})")
 
     dump_json("gossip_path", prefix="gossip_path.")
 

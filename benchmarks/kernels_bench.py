@@ -69,6 +69,21 @@ def main(quick=False):
     emit("kernel.gossip_mix_fused_jnp.4M", us,
          f"GBps={(4 * nelem * 4) / us / 1e3:.1f}")
 
+    # quantized gossip wire: EF int8 quantize + dequant-mix (DESIGN.md §14)
+    from repro.kernels.quantize import quant_layout
+    res0 = jnp.zeros_like(xx)
+    qfn = jax.jit(lambda x, r: ref.quantize_plane_ref(x, r))
+    us = _bench(qfn, xx, res0)
+    emit("kernel.quantize_plane_jnp.4M", us,
+         f"GBps={(nelem * 4) / us / 1e3:.1f}")
+    qq, ss, _ = qfn(xx, res0)
+    dq = jax.jit(lambda x, q, s, u: ref.dequant_mix_ref(x, q, s, u,
+                                                        0.6, 0.4))
+    us = _bench(dq, xx, qq, ss, uu)
+    rows, _, _ = quant_layout(nelem)
+    emit("kernel.dequant_mix_jnp.4M", us,
+         f"GBps={(nelem * 4) / us / 1e3:.1f};wire_rows={rows}")
+
     if not quick:
         # interpret-mode pallas on tiny shapes (correctness path)
         q2 = jax.random.normal(rng, (1, 2, 128, 32))
@@ -76,6 +91,29 @@ def main(quick=False):
         us = _bench(lambda a, b: ops.flash_attention(
             a, b, b, block_q=64, block_k=64, interpret=True), q2, k2, iters=2)
         emit("kernel.flash_pallas_interpret.s128", us, "not-TPU-representative")
+
+        # gossip_mix + quantize/dequant pallas kernels, interpret mode
+        nsmall = 8 * 128
+        xs = jax.random.normal(rng, (nsmall,), jnp.float32)
+        rs = jax.random.normal(jax.random.fold_in(rng, 9), (nsmall,))
+        us_small = jax.random.normal(jax.random.fold_in(rng, 10),
+                                     (nsmall,)) * 0.01
+        us = _bench(lambda a, b, c: ops.gossip_mix(a, b, c, 0.6, 0.4,
+                                                   interpret=True),
+                    xs, rs, us_small, iters=2)
+        emit("kernel.gossip_mix_pallas_interpret.1k", us,
+             "not-TPU-representative")
+        res_s = jnp.zeros_like(xs)
+        us = _bench(lambda a, b: ops.quantize_plane(a, b, interpret=True),
+                    xs, res_s, iters=2)
+        emit("kernel.quantize_pallas_interpret.1k", us,
+             "not-TPU-representative")
+        qs, sc, _ = ops.quantize_plane(xs, res_s, interpret=True)
+        us = _bench(lambda a, q, s, u: ops.dequant_mix(a, q, s, u, 0.6, 0.4,
+                                                       interpret=True),
+                    xs, qs, sc, us_small, iters=2)
+        emit("kernel.dequant_mix_pallas_interpret.1k", us,
+             "not-TPU-representative")
 
 
 if __name__ == "__main__":

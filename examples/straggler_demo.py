@@ -3,7 +3,8 @@ LayUp keep converging at full speed while DDP's wall-clock blows up.
 
     PYTHONPATH=src python examples/straggler_demo.py [--delay 4]
     PYTHONPATH=src python examples/straggler_demo.py --backend prod \
-        [--fb-ratio 2] [--update-delay 1] [--overlap [--streams 3]]
+        [--fb-ratio 2] [--update-delay 1] [--overlap [--streams 3]] \
+        [--wire int8] [--compensate 0.5]
 
 All execution engines run behind the same ``TrainerBackend`` protocol: the
 numeric backend (``sim``: vmapped workers on one device; ``prod``: the
@@ -45,9 +46,23 @@ def main():
                          "prints EXECUTION-level accounting (exec_overlap_s, "
                          "per-stream busy, signal-wait — DESIGN.md §13); "
                          "numerics stay bit-exact vs --streams 1")
+    ap.add_argument("--wire", choices=["param", "int8"], default="param",
+                    help="prod backend: gossip wire dtype. int8 ships "
+                         "error-feedback quantized planes (values + "
+                         "per-128-lane-row f32 scales — about half the "
+                         "bf16 wire bytes, DESIGN.md §14); param is the "
+                         "exact params-dtype wire")
+    ap.add_argument("--compensate", type=float, default=0.0,
+                    help="prod backend: strength λ of the staleness-aware "
+                         "delay compensation g + λ·g⊙g⊙(θ_now − θ_stale) "
+                         "applied to the popped stale gradient (0 = off, "
+                         "DESIGN.md §14)")
     args = ap.parse_args()
     if args.streams > 1 and not args.overlap:
         ap.error("--streams > 1 requires --overlap (DESIGN.md §13)")
+    if (args.wire != "param" or args.compensate) and args.backend != "prod":
+        ap.error("--wire / --compensate apply to the prod lane only "
+                 "(use --backend prod)")
 
     if args.backend == "prod":
         # the prod lane needs one host device per worker; both env vars must
@@ -138,13 +153,20 @@ def run_prod(args, hw, ds, init, loss_fn, delays):
         engine = "stage-graph pipeline engine"
     else:
         engine = "monolithic jitted step"
+    extras = ""
+    if args.wire != "param":
+        extras += f", {args.wire} wire"
+    if args.compensate:
+        extras += f", delay compensation λ={args.compensate:g}"
     print(f"prod decoupled lane: R={R}, D={D} "
-          f"(double-buffered params, {D}-deep gradient FIFO, {engine})\n")
+          f"(double-buffered params, {D}-deep gradient FIFO, "
+          f"{engine}{extras})\n")
     num = make_backend("prod", "layup", M=M, loss_fn=loss_fn,
                        optimizer=momentum(0.9), schedule=constant(0.05),
                        fb_ratio=R, update_delay=D,
                        straggler_delays=delays, shifts=(1, 2, 4),
-                       overlap=args.overlap, streams=args.streams)
+                       overlap=args.overlap, streams=args.streams,
+                       wire=args.wire, compensate=args.compensate)
     ev_slow = make_backend("event", "layup", M=M, hw=hw,
                            straggler_delays=delays, fb_ratio=R,
                            update_delay=D)
@@ -185,8 +207,18 @@ def run_prod(args, hw, ds, init, loss_fn, delays):
     print(f"  mean measured            {float(m['staleness_mean']):.3f}")
     print(f"  update staleness (FIFO)  {float(m['update_staleness']):.3f} "
           f"(== D after warm-up)")
+    print(f"  staleness delta vs D     "
+          f"{float(m['update_staleness']) - D:+.3f} "
+          f"(measured − nominal FIFO depth)")
     print(f"  event-sim grad staleness {predicted_iters:.3f} iterations "
           f"({r_slow.mean_grad_staleness * 1e3:.1f} ms)")
+    wire_b = num.part.plane_nbytes(wire=args.wire)
+    print(f"\ngossip wire                {args.wire} "
+          f"({wire_b / 1e3:.1f} KB/round per worker, one full plane "
+          f"across all layer groups)")
+    if args.compensate:
+        print(f"delay compensation         λ={args.compensate:g} "
+              f"(g + λ·g⊙g⊙(θ_now − θ_stale) on the popped gradient)")
 
     if args.overlap:
         s = num.summary()

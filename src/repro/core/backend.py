@@ -184,7 +184,14 @@ class ProdTrainerBackend:
     (DESIGN.md §12): every step's read plane + version clocks + drift are
     published for live serving consumers — zero-copy on the overlap
     engine (its read plane is never donated), stabilized by async device
-    copies on the monolithic step (which donates its state)."""
+    copies on the monolithic step (which donates its state).
+
+    ``wire="int8"`` ships the gossip plane as int8 + per-row f32 scales
+    with error-feedback residuals (about half the bf16 wire bytes);
+    ``compensate=λ > 0`` applies the staleness-aware delay correction
+    ``g + λ·g⊙g⊙(θ_now − θ_stale)`` in the update lane (DESIGN.md §14).
+    Both require ``flat=True``; ``summary()`` reports ``wire_dtype`` and
+    ``wire_bytes_per_round``."""
 
     kind = "prod"
 
@@ -194,7 +201,8 @@ class ProdTrainerBackend:
                  straggler_delays=None, measure_drift: bool = True,
                  overlap: bool = False, flat: bool = True,
                  use_pallas: bool = False, publisher=None,
-                 streams: int = 1):
+                 streams: int = 1, wire: str = "param",
+                 compensate: float = 0.0):
         import jax
         from repro.launch.mesh import num_workers
         from repro.launch.train import make_decoupled_backend_trainer
@@ -224,6 +232,8 @@ class ProdTrainerBackend:
         self.flat = bool(flat)
         self.streams = int(streams)
         self.publisher = publisher
+        self.wire = str(wire)
+        self.compensate = float(compensate)
         if streams > 1 and not overlap:
             raise ValueError("streams > 1 is a property of the stage-graph "
                              "pipeline; it requires overlap=True")
@@ -238,7 +248,7 @@ class ProdTrainerBackend:
                     straggler_delays=straggler_delays,
                     measure_drift=measure_drift, timeline=self.timeline,
                     flat=flat, use_pallas=use_pallas, publisher=publisher,
-                    streams=streams)
+                    streams=streams, wire=wire, compensate=compensate)
         else:
             self.timeline = None
             self._init_fn, self._step_fn, self._shifts, self._engine_box = \
@@ -247,7 +257,8 @@ class ProdTrainerBackend:
                     fb_ratio=fb_ratio, update_delay=update_delay,
                     straggler_delays=straggler_delays,
                     measure_drift=measure_drift, flat=flat,
-                    use_pallas=use_pallas, publisher=publisher)
+                    use_pallas=use_pallas, publisher=publisher,
+                    wire=wire, compensate=compensate)
         self._steps = 0
         self._last: Dict[str, Any] = {}
         # host-side gossip-shift schedule: deterministic per backend, no
@@ -306,6 +317,12 @@ class ProdTrainerBackend:
 
     def summary(self) -> Dict[str, float]:
         out = _numeric_summary(self._steps, self._last)
+        out["wire_dtype"] = self.wire
+        part = self._engine_box.get("part")
+        if part is not None:
+            # one full plane crosses the ring per gossip round per worker
+            out["wire_bytes_per_round"] = float(
+                part.plane_nbytes(wire=self.wire))
         if self.timeline is not None:
             eng = self.engine
             if eng is not None and hasattr(eng, "finalize"):
@@ -339,9 +356,12 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
     identical numerics, DESIGN.md §13), flat
     (default True — the persistent flat parameter plane with param-dtype
     gossip wire; False restores the legacy tree state + per-step f32
-    ravel), use_pallas (fused gossip_mix kernel) and publisher (a
+    ravel), use_pallas (fused gossip_mix kernel), publisher (a
     repro.serving.PlanePublisher receiving the read plane each gossip
-    round — the train-and-serve feed, DESIGN.md §12).
+    round — the train-and-serve feed, DESIGN.md §12), wire ("param" —
+    bit-exact plane exchange — or "int8": quantized gossip wire with
+    error-feedback residuals, DESIGN.md §14) and compensate (λ > 0 turns
+    on the staleness-aware delay correction in the update lane).
     """
     if kind == "sim":
         if loss_fn is None or optimizer is None or schedule is None:

@@ -199,13 +199,24 @@ class FlatPartition(LayerPartition):
             sizes[key] = sizes.get(key, 0) + size
         self.group_sizes: Dict[str, int] = sizes
 
-    def plane_nbytes(self) -> int:
+    def plane_nbytes(self, wire: str = "param") -> int:
         """Bytes of ONE flat plane (single worker) — the per-step gossip
         wire cost per peer, and the regression hook for the
         wire-dtype-follows-params guarantee (bf16 plane = half the f32
-        plane)."""
-        return sum(size * jnp.dtype(self.group_dtypes[n]).itemsize
-                   for n, size in self.group_sizes.items())
+        plane).
+
+        ``wire="param"`` prices each group buffer at its param dtype (the
+        PR-4 wire); ``wire="int8"`` prices the quantized wire — one int8
+        byte per element plus one f32 scale per 128-lane row of each
+        group's padded quant layout (DESIGN.md §14)."""
+        if wire == "param":
+            return sum(size * jnp.dtype(self.group_dtypes[n]).itemsize
+                       for n, size in self.group_sizes.items())
+        if wire == "int8":
+            from repro.kernels.quantize import quant_wire_nbytes
+            return sum(quant_wire_nbytes(size)
+                       for size in self.group_sizes.values())
+        raise ValueError(f"unknown wire dtype {wire!r}")
 
     def abstract_plane(self, lead: Tuple[int, ...] = ()) -> Dict[str, Any]:
         """ShapeDtypeStructs of the plane with the given leading axes."""

@@ -1,3 +1,5 @@
-from repro.kernels.ops import flash_attention, gossip_mix, rmsnorm, ssd_scan
+from repro.kernels.ops import (dequant_mix, flash_attention, gossip_mix,
+                               quantize_plane, rmsnorm, ssd_scan)
 
-__all__ = ["flash_attention", "gossip_mix", "rmsnorm", "ssd_scan"]
+__all__ = ["dequant_mix", "flash_attention", "gossip_mix", "quantize_plane",
+           "rmsnorm", "ssd_scan"]

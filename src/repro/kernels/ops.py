@@ -14,6 +14,8 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gossip_mix import gossip_mix as _gossip, gossip_mix_tree
+from repro.kernels.quantize import dequant_mix as _dequant_mix
+from repro.kernels.quantize import quantize_plane as _quantize_plane
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
@@ -50,5 +52,20 @@ def rmsnorm(x, gamma, *, eps=1e-5, tile_rows=256, interpret=None):
                     interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def quantize_plane(x, residual=None, *, tile_rows=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _quantize_plane(x, residual, tile_rows=tile_rows,
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def dequant_mix(x, q, scales, upd, alpha, beta, *, tile_rows=256,
+                interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dequant_mix(x, q, scales, upd, alpha, beta, tile_rows=tile_rows,
+                        interpret=interpret)
+
+
 __all__ = ["flash_attention", "ssd_scan", "gossip_mix", "gossip_mix_tree",
-           "rmsnorm"]
+           "rmsnorm", "quantize_plane", "dequant_mix"]

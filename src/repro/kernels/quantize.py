@@ -1,0 +1,167 @@
+"""Pallas TPU kernels for the int8 quantized gossip wire (DESIGN.md §14).
+
+The PR-4 flat plane ships each layer group as ONE contiguous buffer in the
+params' dtype; these kernels halve that wire again. ``quantize_plane``
+compresses a plane buffer to int8 with one f32 scale per 128-lane row
+(the (rows, 128) tiled view of the flattened buffer), carrying the
+quantization error forward as an **error-feedback residual**:
+
+    v      = x + residual                 (f32)
+    scale  = absmax_row(v) / 127          (1.0 where a row is all zeros)
+    q      = clip(round(v / scale), -127, 127)      int8
+    resid' = v - q * scale                (stored in x's dtype)
+
+Because ``absmax`` is computed on ``v`` the clip never truncates beyond
+rounding, so ``|resid'| <= scale/2 = absmax_row(v)/254`` elementwise — the
+residual is bounded and does NOT drift across rounds (the EF invariant
+``x + resid == dequant(q, s) + resid'`` holds exactly in f32).
+
+``dequant_mix`` is the receive side fused with the push-sum mix (and,
+optionally, the local update — the Alg. 1 fused path):
+
+    out = alpha * x_local + beta * (q_recv * s_recv) [+ upd]
+
+one read pass per operand, one write — the same memory-bound shape as
+``gossip_mix``, with the peer operand read at 1/2 (bf16) or 1/4 (f32) the
+bytes. Wire cost per buffer: ``n`` int8 bytes + ``4 * quant_rows(n)`` scale
+bytes ≈ 1.03 bytes/element (~0.52x the bf16 wire).
+
+Layout: rows are padded to the int8 sublane multiple (32 — the int8 TPU
+tile is (32, 128); f32/bf16 operands' (8, 128)/(16, 128) tiles divide it)
+and then to a whole number of ``tile_rows`` grid tiles. Padding rows are
+zeros → scale 1.0, q 0, dequant 0; the unpad slice discards them. The
+per-row scale output is a narrow (tile, 1) block — same shape class as the
+flash kernel's LSE output; interpret mode (CPU CI) is exact, on real TPU
+the narrow write is padded into a lane by Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+SUBLANE_I8 = 32  # int8 min tile is (32, 128); 32 also covers f32/bf16 tiles
+
+
+def quant_layout(n: int, tile_rows: int = 256):
+    """(rows, tile, ntiles) of the padded (rows, 128) view of an
+    ``n``-element buffer — ``rows`` is also the number of f32 scales on
+    the wire (``plane_nbytes(wire="int8")`` accounting)."""
+    rows_total = -(-n // LANE)
+    rows_total = -(-rows_total // SUBLANE_I8) * SUBLANE_I8
+    tile = min(int(tile_rows), rows_total)
+    ntiles = -(-rows_total // tile)
+    return ntiles * tile, tile, ntiles
+
+
+def quant_wire_nbytes(n: int, tile_rows: int = 256) -> int:
+    """Bytes on the wire for one quantized ``n``-element buffer:
+    int8 payload + f32 per-row scales."""
+    rows, _, _ = quant_layout(n, tile_rows)
+    return n + 4 * rows
+
+
+def _quant_kernel(x_ref, r_ref, q_ref, s_ref, res_ref):
+    v = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(v), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(v / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+    res_ref[...] = (v - q * scale).astype(res_ref.dtype)
+
+
+def quantize_plane(x, residual=None, *, tile_rows: int = 256,
+                   interpret: bool = False):
+    """Quantize one plane buffer (any shape) with EF residual carry.
+
+    Returns ``(q, scales, new_residual)``: ``q`` int8 in ``x``'s shape,
+    ``scales`` a ``(quant_rows,)`` f32 vector (one per 128-lane row of the
+    padded layout), ``new_residual`` in ``x``'s dtype/shape.
+    ``residual=None`` starts from a zero residual."""
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    rows, tile, ntiles = quant_layout(n, tile_rows)
+    padded = rows * LANE
+
+    def flat(a):
+        a = a.reshape(-1)
+        return jnp.pad(a, (0, padded - n)).reshape(rows, LANE)
+
+    if residual is None:
+        residual = jnp.zeros(shape, dtype)
+    q, s, res = pl.pallas_call(
+        _quant_kernel,
+        grid=(ntiles,),
+        in_specs=[pl.BlockSpec((tile, LANE), lambda i: (i, 0))] * 2,
+        out_specs=[pl.BlockSpec((tile, LANE), lambda i: (i, 0)),
+                   pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((tile, LANE), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, LANE), jnp.int8),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, LANE), dtype)],
+        interpret=interpret,
+    )(flat(x), flat(residual))
+    unpad = lambda a: a.reshape(-1)[:n].reshape(shape)
+    return unpad(q), s.reshape(-1), unpad(res)
+
+
+def _dequant_mix_kernel(ab_ref, x_ref, q_ref, s_ref, u_ref, o_ref):
+    a = ab_ref[0]
+    b = ab_ref[1]
+    x = x_ref[...].astype(jnp.float32)
+    r = q_ref[...].astype(jnp.float32) * s_ref[...]
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (a * x + b * r + u).astype(o_ref.dtype)
+
+
+def _dequant_mix_kernel_pure(ab_ref, x_ref, q_ref, s_ref, o_ref):
+    a = ab_ref[0]
+    b = ab_ref[1]
+    x = x_ref[...].astype(jnp.float32)
+    r = q_ref[...].astype(jnp.float32) * s_ref[...]
+    o_ref[...] = (a * x + b * r).astype(o_ref.dtype)
+
+
+def dequant_mix(x, q, scales, upd, alpha, beta, *, tile_rows: int = 256,
+                interpret: bool = False):
+    """Fused dequantize + push-sum mix (+ optional local update):
+    ``alpha * x + beta * dequant(q, scales) [+ upd]`` in one pass.
+
+    ``q``/``scales`` must come from :func:`quantize_plane` with the same
+    ``tile_rows`` (the row layout is shared). ``upd=None`` drops the
+    update operand (the non-fused gossip path)."""
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    rows, tile, ntiles = quant_layout(n, tile_rows)
+    if scales.shape != (rows,):
+        raise ValueError(
+            f"scales shape {scales.shape} does not match quant layout "
+            f"({rows},) for n={n}, tile_rows={tile_rows}")
+    padded = rows * LANE
+
+    def flat(a):
+        a = a.reshape(-1)
+        return jnp.pad(a, (0, padded - n)).reshape(rows, LANE)
+
+    ab = jnp.stack([jnp.asarray(alpha, jnp.float32),
+                    jnp.asarray(beta, jnp.float32)])
+    operands = [ab, flat(x), flat(q), scales.reshape(rows, 1)]
+    if upd is not None:
+        operands.append(flat(upd))
+    data_specs = [pl.BlockSpec((tile, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((tile, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((tile, 1), lambda i: (i, 0))]
+    if upd is not None:
+        data_specs.append(pl.BlockSpec((tile, LANE), lambda i: (i, 0)))
+    out = pl.pallas_call(
+        _dequant_mix_kernel if upd is not None else _dequant_mix_kernel_pure,
+        grid=(ntiles,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] + data_specs,
+        out_specs=pl.BlockSpec((tile, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), dtype),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -50,6 +50,42 @@ def gossip_mix_ref(x, x_recv, upd, alpha, beta):
             + upd.astype(jnp.float32)).astype(x.dtype)
 
 
+def _quant_padded(a, rows):
+    from repro.kernels.quantize import LANE
+    a = a.reshape(-1).astype(jnp.float32)
+    return jnp.pad(a, (0, rows * LANE - a.size)).reshape(rows, LANE)
+
+
+def quantize_plane_ref(x, residual=None, *, tile_rows=256):
+    """Same math as the quantize kernel, plain jnp (same padded layout)."""
+    from repro.kernels.quantize import quant_layout
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    rows, _, _ = quant_layout(n, tile_rows)
+    v = _quant_padded(x, rows)
+    if residual is not None:
+        v = v + _quant_padded(residual, rows)
+    absmax = jnp.max(jnp.abs(v), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(v / scale), -127.0, 127.0)
+    res = v - q * scale
+    unpad = lambda a, dt: a.reshape(-1)[:n].reshape(shape).astype(dt)
+    return unpad(q, jnp.int8), scale.reshape(-1), unpad(res, dtype)
+
+
+def dequant_mix_ref(x, q, scales, upd, alpha, beta, *, tile_rows=256):
+    """alpha * x + beta * dequant(q, scales) [+ upd], plain jnp."""
+    from repro.kernels.quantize import quant_layout
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    rows, _, _ = quant_layout(n, tile_rows)
+    r = _quant_padded(q, rows) * scales.reshape(rows, 1)
+    out = alpha * _quant_padded(x, rows) + beta * r
+    if upd is not None:
+        out = out + _quant_padded(upd, rows)
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
 def rmsnorm_ref(x, gamma, eps=1e-5):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

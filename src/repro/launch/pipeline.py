@@ -75,7 +75,7 @@ from repro.core.layerview import (
 )
 from repro.launch.mesh import data_axes, num_workers
 from repro.launch.train import (
-    _abstract_batch, _decoupled_metrics, _opt_shardings_stacked,
+    _abstract_batch, _check_wire, _decoupled_metrics, _opt_shardings_stacked,
     _ring_exchange, _worker_batch_pspec, backward_update_lane,
     forward_slice_lane, gossip_fused_lane, gossip_lane_legacy,
     gossip_plane_lane, make_decoupled_state, shard_map,
@@ -347,7 +347,8 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
                   fwd_slices: Sequence[Callable], upd: Callable,
                   mix: Callable, *, squeeze_batch: bool = False,
                   active_fn: Optional[Callable] = None, flat: bool = False,
-                  fused: bool = False):
+                  fused: bool = False, wire: str = "param",
+                  compensate: float = 0.0):
     """Per-worker stage bodies. They compose the SAME lane closures as
     ``_decoupled_worker_fn``, split at the stage boundaries, so each
     stage's math is identical to the corresponding span of the monolithic
@@ -363,8 +364,16 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
     ``fused`` (use_pallas): the update stage consumes the write plane
     READ-ONLY and returns the update deltas; the gossip stage takes
     (write, updates) and folds apply+mix into the fused kernel pass
-    (``mix`` is then a :func:`gossip_fused_lane` closure)."""
+    (``mix`` is then a :func:`gossip_fused_lane` closure).
+
+    ``wire="int8"``: the gossip stage gains the error-feedback residual
+    plane as an extra argument and returns its successor alongside the
+    mixed plane; ``compensate > 0``: the update stage gains the stale-θ
+    reference plane and returns this step's pre-update params as the
+    next θ_prev (DESIGN.md §14)."""
     phi = jnp.asarray(send_fractions(part.num_groups))
+    int8 = wire == "int8"
+    comp = float(compensate) > 0.0
 
     def make_fwd_body(r):
         lane = fwd_slices[r]
@@ -384,38 +393,64 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
 
     def update_body(*args):
         if D > 0:
-            write_st, opt_st, fifo_g_st, fifo_stamp, grads_st, step_idx = args
+            write_st, opt_st, fifo_g_st, fifo_stamp, grads_st = args[:5]
+            rest = args[5:]
             fifo = {"g": _unstack(fifo_g_st), "stamp": fifo_stamp}
         else:
-            write_st, opt_st, grads_st, step_idx = args
+            write_st, opt_st, grads_st = args[:3]
+            rest = args[3:]
             fifo = ()
+        theta = _unstack(rest[0]) if comp else None
+        step_idx = rest[-1]
         write = _unstack(write_st)
         opt_state = _unstack_opt(opt_st)
         grads = _unstack(grads_st)
         active = active_fn(step_idx) if active_fn is not None else None
-        out, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
-                                              fifo, step_idx, active=active)
+        upd_out = upd(write, opt_state, grads, fifo, step_idx,
+                      active=active, theta=theta) if comp else \
+            upd(write, opt_state, grads, fifo, step_idx, active=active)
+        out, opt_state, fifo, upd_stale = upd_out[:4]
         # fused: ``out`` is the update-delta plane (write untouched);
         # default: ``out`` is the updated write buffer
         outs = [_restack(out), _restack(opt_state)]
         if D > 0:
             outs += [_restack(fifo["g"]), fifo["stamp"]]
+        if comp:
+            # θ_prev for the next step: this step's pre-update params.
+            # The write input is NOT donated, so jit materializes this
+            # output as a fresh copy — donatable next step without
+            # aliasing the live read plane.
+            outs += [_restack(upd_out[4])]
         return tuple(outs) + (upd_stale,)
 
     def gossip_body(*args):
         if fused:
-            write_st, upd_st, w_st, versions, step_idx, shift_idx = args
+            write_st, upd_st = args[:2]
+            rest = args[2:]
         else:
-            write_st, w_st, versions, step_idx, shift_idx = args
+            write_st = args[0]
+            rest = args[1:]
+        resid_st = rest[0] if int8 else None
+        if int8:
+            rest = rest[1:]
+        w_st, versions, step_idx, shift_idx = rest
         write = _unstack(write_st)
         w = w_st[0]
-        if fused:
+        resid = None
+        if fused and int8:
+            write, resid, w = mix(write, _unstack(resid_st),
+                                  _unstack(upd_st), w, shift_idx)
+        elif fused:
             write, w = mix(write, _unstack(upd_st), w, shift_idx)
+        elif int8:
+            write, resid, w = mix(write, _unstack(resid_st), w, shift_idx)
         else:
             write, w = mix(write, w, shift_idx)
         if M > 1:
             versions = stamp_groups(versions,
                                     step_idx.astype(jnp.float32) + phi)
+        if int8:
+            return _restack(write), _restack(resid), w[None], versions
         return _restack(write), w[None], versions
 
     def metrics_fn(losses, w, versions, upd_stale, step_idx):
@@ -429,7 +464,8 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
 
 def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
                 shardings: Optional[Dict[str, Any]] = None,
-                fused: bool = False):
+                fused: bool = False, wire: str = "param",
+                compensate: float = 0.0):
     """shard_map + jit each stage body into its executable.
 
     ``shardings`` (Model path) pins jit-level in/out shardings so the model
@@ -441,9 +477,16 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
     donation set: opt/fifo/grads) and the gossip stage gains the deltas
     as a second argument. Gossip then donates the DELTAS instead of the
     plane: its plane input aliases the engine's read buffer, which the
-    in-flight forward slices of the same step still read."""
+    in-flight forward slices of the same step still read.
+
+    ``wire="int8"``: gossip threads the residual plane (donated — its
+    successor replaces it); ``compensate > 0``: update threads the θ_prev
+    plane (donated — the stage returns a fresh copy of this step's
+    pre-update params as the next θ_prev)."""
     pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
     fwd_bodies, update_body, gossip_body, metrics_fn = bodies
+    int8 = wire == "int8"
+    comp = float(compensate) > 0.0
 
     def sm(f, in_specs, out_specs):
         return shard_map(f, mesh=mesh, in_specs=in_specs,
@@ -452,10 +495,13 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
     fwd_sm = [sm(fwd_bodies[0], (pw, batch_specs), (pw, pw))]
     fwd_sm += [sm(b, (pw, batch_specs), pw) for b in fwd_bodies[1:]]
     fifo_in = (pw, P()) if D > 0 else ()
-    update_sm = sm(update_body, (pw, pw) + fifo_in + (pw, P()),
-                   (pw, pw) + fifo_in + (P(),))
-    gossip_in = ((pw, pw) if fused else (pw,)) + (pw, pw, P(), P())
-    gossip_sm = sm(gossip_body, gossip_in, (pw, pw, pw))
+    theta_in = (pw,) if comp else ()
+    update_sm = sm(update_body, (pw, pw) + fifo_in + (pw,) + theta_in + (P(),),
+                   (pw, pw) + fifo_in + theta_in + (P(),))
+    resid_in = (pw,) if int8 else ()
+    gossip_in = (((pw, pw) if fused else (pw,)) + resid_in
+                 + (pw, pw, P(), P()))
+    gossip_sm = sm(gossip_body, gossip_in, (pw,) + resid_in + (pw, pw))
 
     def gossip_step(*args):
         # gossip + the metric reduction in ONE executable: per-slice
@@ -465,13 +511,17 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
         # _decoupled_step_caller, one less dispatch per step
         *plane_args, w_st, versions, losses, upd_stale, step_idx, \
             shift_idx = args
-        mixed, w, versions = gossip_sm(*plane_args, w_st, versions,
-                                       step_idx, shift_idx)
-        metrics = metrics_fn(losses, w, versions, upd_stale, step_idx)
-        return mixed, w, versions, metrics
+        outs = gossip_sm(*plane_args, w_st, versions, step_idx, shift_idx)
+        versions = outs[-1]
+        metrics = metrics_fn(losses, outs[-2], versions, upd_stale, step_idx)
+        return outs[:-1] + (versions, metrics)
 
-    donate_upd = (1, 2, 3, 4) if D > 0 else (1, 2)
-    donate_gossip = (1, 2, 3) if fused else (0, 1, 2)
+    n_upd = (5 if D > 0 else 3) + (1 if comp else 0)  # donate all but write
+    donate_upd = tuple(range(1, n_upd))
+    n_plane = (2 if fused else 1) + (1 if int8 else 0)
+    # fused: skip the live plane (arg 0); non-fused: donate it too.
+    # Then the resid (int8), the weights and the clocks.
+    donate_gossip = tuple(range(1 if fused else 0, n_plane + 2))
     if shardings is None:
         fwd = [jax.jit(f) for f in fwd_sm]
         update = jax.jit(update_sm, donate_argnums=donate_upd)
@@ -483,19 +533,23 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
         fwd += [jax.jit(f, in_shardings=(s["p"], s["batch"]),
                         out_shardings=s["lossvec"]) for f in fwd_sm[1:]]
         fifo_sh = (s["fifo_g"], s["scalar"]) if D > 0 else ()
+        theta_sh = (s["p"],) if comp else ()
         update = jax.jit(
             update_sm,
             in_shardings=(s["p"], s["opt"]) + fifo_sh
-            + (s["grads"], s["scalar"]),
-            out_shardings=(s["upd"], s["opt"]) + fifo_sh + (s["scalar"],),
+            + (s["grads"],) + theta_sh + (s["scalar"],),
+            out_shardings=(s["upd"], s["opt"]) + fifo_sh + theta_sh
+            + (s["scalar"],),
             donate_argnums=donate_upd)
         R_loss = tuple([s["lossvec"]] * len(fwd_sm))
-        gossip_p = (s["p"], s["upd"]) if fused else (s["p"],)
+        resid_sh = (s["p"],) if int8 else ()
+        gossip_p = ((s["p"], s["upd"]) if fused else (s["p"],)) + resid_sh
         gossip = jax.jit(
             gossip_step,
             in_shardings=gossip_p + (s["w"], s["w"], R_loss, s["scalar"],
                                      s["scalar"], s["scalar"]),
-            out_shardings=(s["p"], s["w"], s["w"], s["metrics"]),
+            out_shardings=(s["p"],) + resid_sh
+            + (s["w"], s["w"], s["metrics"]),
             donate_argnums=donate_gossip)
     return {"fwd": fwd, "update": update, "gossip": gossip}
 
@@ -504,7 +558,7 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
                       mix: Callable, metrics_fn: Callable,
                       shifts: Sequence[int], *, fused: bool = False,
                       shardings: Optional[Dict[str, Any]] = None,
-                      R: int = 1):
+                      R: int = 1, wire: str = "param"):
     """The gossip stage split at the layer-group boundary, for the stream
     engine (``streams > 1``): one jitted mix executable PER PLANE BUFFER
     plus one clock/metrics executable.
@@ -527,21 +581,36 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
     forward slices of the same step still read it). Neither donates the
     push-sum weights: the clock donates those (and the clocks), which is
     safe only because the stream engine runs every mix of a step before
-    its clock on the same FIFO stream."""
+    its clock on the same FIFO stream.
+
+    ``wire="int8"``: each mix gains its group's residual buffer and
+    returns ``(mixed, resid)`` — the residual is donated alongside the
+    usual set (its successor replaces it)."""
     pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
     phi = jnp.asarray(send_fractions(part.num_groups))
+    int8 = wire == "int8"
 
     def sm(f, in_specs, out_specs):
         return shard_map(f, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, axis_names=set(worker_axes))
 
     def make_mix_body(name):
-        if fused:
+        if fused and int8:
+            def mix_body(buf_st, upd_st, resid_st, w_st, shift_idx):
+                mixed, resid, _ = mix({name: buf_st[0]}, {name: resid_st[0]},
+                                      {name: upd_st[0]}, w_st[0], shift_idx)
+                return mixed[name][None], resid[name][None]
+        elif fused:
             def mix_body(buf_st, upd_st, w_st, shift_idx):
                 mixed, _ = mix({name: buf_st[0]}, {name: upd_st[0]},
                                w_st[0], shift_idx)
                 return mixed[name][None]
+        elif int8:
+            def mix_body(buf_st, resid_st, w_st, shift_idx):
+                mixed, resid, _ = mix({name: buf_st[0]}, {name: resid_st[0]},
+                                      w_st[0], shift_idx)
+                return mixed[name][None], resid[name][None]
         else:
             def mix_body(buf_st, w_st, shift_idx):
                 mixed, _ = mix({name: buf_st[0]}, w_st[0], shift_idx)
@@ -559,8 +628,10 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
                                     step_idx.astype(jnp.float32) + phi)
         return w[None], versions
 
-    mix_in = (pw, pw, pw, P()) if fused else (pw, pw, P())
-    mix_sms = {name: sm(make_mix_body(name), mix_in, pw)
+    resid_in = (pw,) if int8 else ()
+    mix_in = ((pw, pw) if fused else (pw,)) + resid_in + (pw, P())
+    mix_out = (pw, pw) if int8 else pw
+    mix_sms = {name: sm(make_mix_body(name), mix_in, mix_out)
                for name in part.group_sizes}
     clock_sm = sm(clock_body, (pw, pw, P(), P()), (pw, pw))
 
@@ -569,7 +640,10 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
         metrics = metrics_fn(losses, w, versions, upd_stale, step_idx)
         return w, versions, metrics
 
-    donate_mix = (1,) if fused else (0,)
+    if fused:
+        donate_mix = (1, 2) if int8 else (1,)
+    else:
+        donate_mix = (0, 1) if int8 else (0,)
     if shardings is None:
         mixes = {name: jax.jit(f, donate_argnums=donate_mix)
                  for name, f in mix_sms.items()}
@@ -579,10 +653,12 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
         buf = lambda name: s["p"][name]
         mixes = {}
         for name, f in mix_sms.items():
-            mix_sh = ((buf(name), s["upd"][name]) if fused
-                      else (buf(name),)) + (s["w"], s["scalar"])
+            resid_sh = (buf(name),) if int8 else ()
+            mix_sh = (((buf(name), s["upd"][name]) if fused
+                       else (buf(name),)) + resid_sh + (s["w"], s["scalar"]))
+            mix_out_sh = (buf(name), buf(name)) if int8 else buf(name)
             mixes[name] = jax.jit(f, in_shardings=mix_sh,
-                                  out_shardings=buf(name),
+                                  out_shardings=mix_out_sh,
                                   donate_argnums=donate_mix)
         R_loss = tuple([s["lossvec"]] * R)
         clock = jax.jit(
@@ -613,9 +689,12 @@ class PipelineEngine:
     def __init__(self, *, R: int, D: int, M: int, stages: Dict[str, Any],
                  timeline: Optional[StageTimeline] = None, describe: str = "",
                  abstract_args: Optional[Dict[str, tuple]] = None,
-                 max_inflight_steps: int = 3, fused: bool = False):
+                 max_inflight_steps: int = 3, fused: bool = False,
+                 wire: str = "param", compensate: float = 0.0):
         self.R, self.D, self.M = int(R), int(D), int(M)
         self.fused = bool(fused)
+        self.wire = wire
+        self.compensate = float(compensate)
         self._stages = stages
         self.timeline = timeline if timeline is not None else StageTimeline()
         self.describe = describe
@@ -687,34 +766,49 @@ class PipelineEngine:
             tl.commit(ev, lr)
             losses.append(lr)
 
-        # backward/update lane: donates opt + fifo + grads, NOT the params
-        # (the write handle aliases the read buffer the fwd slices
-        # consume). In fused (use_pallas) mode the first output is the
-        # update-delta plane and the write buffer is consumed read-only.
+        # backward/update lane: donates opt + fifo + grads (+ the stale-θ
+        # plane when compensating), NOT the params (the write handle
+        # aliases the read buffer the fwd slices consume). In fused
+        # (use_pallas) mode the first output is the update-delta plane and
+        # the write buffer is consumed read-only.
+        comp = self.compensate > 0.0
+        int8 = self.wire == "int8"
         ev = tl.begin("update", t)
+        upd_args = (state["write"], state["opt"])
         if self.D > 0:
-            write, opt, fifo_g, fifo_stamp, upd_stale = self._stages[
-                "update"](state["write"], state["opt"], state["fifo"]["g"],
-                          state["fifo"]["stamp"], grads, si)
-        else:
-            write, opt, upd_stale = self._stages["update"](
-                state["write"], state["opt"], grads, si)
+            upd_args += (state["fifo"]["g"], state["fifo"]["stamp"])
+        upd_args += (grads,)
+        if comp:
+            upd_args += (state["theta"],)
+        upd_outs = self._stages["update"](*upd_args, si)
+        write, opt = upd_outs[0], upd_outs[1]
+        i = 2
+        if self.D > 0:
+            fifo_g, fifo_stamp = upd_outs[2], upd_outs[3]
+            i = 4
+        if comp:
+            theta = upd_outs[i]
+            i += 1
+        upd_stale = upd_outs[i]
         tl.commit(ev, upd_stale)
 
         # gossip lane (+ fused metric reduction): the mixed result becomes
         # both next-step buffer handles. Default: donates the update's
         # fresh output — the flat plane itself — + w + versions. Fused:
         # the plane argument aliases the live read buffer, so the deltas
-        # are donated instead of the plane.
+        # are donated instead of the plane. int8 wire: the EF residual
+        # plane rides along (donated; its successor replaces it).
         ev = tl.begin("gossip", t)
-        if self.fused:
-            mixed, w, versions, metrics = self._stages["gossip"](
-                state["write"], write, state["w"], state["versions"],
-                tuple(losses), upd_stale, si, sh)
+        plane_args = (state["write"], write) if self.fused else (write,)
+        if int8:
+            plane_args += (state["resid"],)
+        gossip_outs = self._stages["gossip"](
+            *plane_args, state["w"], state["versions"], tuple(losses),
+            upd_stale, si, sh)
+        if int8:
+            mixed, resid, w, versions, metrics = gossip_outs
         else:
-            mixed, w, versions, metrics = self._stages["gossip"](
-                write, state["w"], state["versions"], tuple(losses),
-                upd_stale, si, sh)
+            mixed, w, versions, metrics = gossip_outs
         tl.commit(ev, metrics["loss"])
 
         # hold EVERY handle this step touched until its last fence retires:
@@ -734,6 +828,10 @@ class PipelineEngine:
                      "versions": versions}
         if self.D > 0:
             new_state["fifo"] = {"g": fifo_g, "stamp": fifo_stamp}
+        if int8:
+            new_state["resid"] = resid
+        if comp:
+            new_state["theta"] = theta
         return new_state, metrics
 
     def reset(self) -> None:
@@ -792,7 +890,8 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                   timeline: Optional[StageTimeline] = None,
                                   flat: bool = True,
                                   use_pallas: bool = False,
-                                  streams: int = 1) -> PipelineStep:
+                                  streams: int = 1, wire: str = "param",
+                                  compensate: float = 0.0) -> PipelineStep:
     """The decoupled LayUp lane as a stage-graph pipeline on the real mesh —
     same sharding/abstract setup as ``make_layup_decoupled_train_step``,
     split into separately jitted stages. ``flat=True`` (default): the
@@ -801,7 +900,10 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
     stage (DESIGN.md §11). ``streams > 1`` runs the stages on per-stage
     execution streams with one-sided per-group signal gossip
     (:class:`repro.launch.streams.StreamEngine`, DESIGN.md §13) — same
-    numerics, measured *execution* overlap; requires ``flat=True``."""
+    numerics, measured *execution* overlap; requires ``flat=True``.
+    ``wire="int8"`` quantizes the gossip wire with error-feedback
+    residuals; ``compensate > 0`` enables the staleness-aware delay
+    correction in the update stage (DESIGN.md §14)."""
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
@@ -827,20 +929,24 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
     if streams > 1 and not flat:
         raise ValueError("streams > 1 ships the flat group plane across "
                          "the stream boundary; it requires flat=True")
+    _check_wire(wire, compensate, flat)
+    int8 = wire == "int8"
+    comp = float(compensate) > 0.0
     part = FlatPartition(model.abstract_params())
     fwd_slices = [forward_slice_lane(model.loss_fn, fb_ratio=R, slice_idx=r,
                                      grad_specs=grad_specs)
                   for r in range(R)]
     upd = backward_update_lane(optimizer, schedule, update_delay=D,
-                               apply=not use_pallas)
+                               apply=not use_pallas, compensate=compensate)
     if use_pallas:
-        mix = gossip_fused_lane(part, M, ax, shifts)
+        mix = gossip_fused_lane(part, M, ax, shifts, wire=wire)
     elif flat:
-        mix = gossip_plane_lane(part, M, ax, shifts)
+        mix = gossip_plane_lane(part, M, ax, shifts, wire=wire)
     else:
         mix = gossip_lane_legacy(part, M, ax, shifts)
     bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd, mix,
-                           flat=flat, fused=use_pallas)
+                           flat=flat, fused=use_pallas, wire=wire,
+                           compensate=compensate)
 
     pw = P(ax)
     abstract_params = model.abstract_params()
@@ -885,7 +991,7 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
     batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax), batch_abs)
     stages = _jit_stages(bodies, mesh, worker_axes, R, D,
                          batch_specs=batch_specs_sm, shardings=shardings,
-                         fused=use_pallas)
+                         fused=use_pallas, wire=wire, compensate=compensate)
 
     i32 = jax.ShapeDtypeStruct((), jnp.int32)
     f32 = jax.ShapeDtypeStruct((), jnp.float32)
@@ -900,49 +1006,58 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
         abstract_opt_base) if use_pallas else stacked_params)
     if use_pallas:
         upd_abs = jax.tree.map(stack, upd_abs)
-    gossip_plane_abs = ((stacked_params, upd_abs) if use_pallas
-                       else (stacked_params,))
+    resid_abs = (stacked_params,) if int8 else ()
+    theta_abs = (stacked_params,) if comp else ()
+    gossip_plane_abs = (((stacked_params, upd_abs) if use_pallas
+                        else (stacked_params,)) + resid_abs)
     abstract_args = {
         "fwd": (stacked_params, batch_abs),
         "update": (stacked_params, stacked_opt) + fifo_abs
-                  + (stacked_params, i32),
+                  + (stacked_params,) + theta_abs + (i32,),
         "gossip": gossip_plane_abs + (w_abs, v_abs,
                                       tuple([lossvec_abs] * R),
                                       f32, i32, i32),
     }
+    tags = (f"{', pallas' if use_pallas else ''}"
+            f"{', wire=int8' if int8 else ''}"
+            f"{f', comp={float(compensate):g}' if comp else ''}")
     if streams > 1:
         from repro.launch.streams import StreamEngine
         group_stages = _jit_group_stages(part, mesh, worker_axes, M, mix,
                                          bodies[3], shifts,
                                          fused=use_pallas,
-                                         shardings=shardings, R=R)
+                                         shardings=shardings, R=R,
+                                         wire=wire)
         clock_abs = (w_abs, v_abs, tuple([lossvec_abs] * R), f32, i32, i32)
         for name in part.group_sizes:
             buf_abs = ((stacked_params[name], upd_abs[name]) if use_pallas
                        else (stacked_params[name],))
+            if int8:
+                buf_abs = buf_abs + (stacked_params[name],)
             abstract_args[f"mix:{name}"] = buf_abs + (w_abs, i32)
         abstract_args["clock"] = clock_abs
         engine = StreamEngine(
             R=R, D=D, M=M, group_names=list(part.group_sizes),
             stages=stages, group_stages=group_stages, timeline=timeline,
-            n_streams=streams, fused=use_pallas,
+            n_streams=streams, fused=use_pallas, wire=wire,
+            compensate=compensate,
             describe=(f"layup decoupled stream pipeline (M={M}, R={R}, "
                       f"D={D}, shifts={shifts}, streams={streams}, "
-                      f"groups={len(part.group_sizes)}"
-                      f"{', pallas' if use_pallas else ''})"),
+                      f"groups={len(part.group_sizes)}{tags})"),
             abstract_args=abstract_args)
     else:
         engine = PipelineEngine(
             R=R, D=D, M=M, stages=stages, timeline=timeline,
-            fused=use_pallas,
+            fused=use_pallas, wire=wire, compensate=compensate,
             describe=(f"layup decoupled pipeline (M={M}, R={R}, D={D}, "
                       f"shifts={shifts}, stages={R + 2}, flat={flat}"
-                      f"{', pallas' if use_pallas else ''})"),
+                      f"{tags})"),
             abstract_args=abstract_args)
 
     def init_state(params_stacked):
         return make_decoupled_state(params_stacked, optimizer,
-                                    update_delay=D, part=part, flat=flat)
+                                    update_delay=D, part=part, flat=flat,
+                                    wire=wire, compensate=compensate)
 
     return PipelineStep(engine, init_state, engine.describe)
 
@@ -957,10 +1072,15 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                   flat: bool = True,
                                   use_pallas: bool = False,
                                   publisher=None,
-                                  streams: int = 1):
+                                  streams: int = 1, wire: str = "param",
+                                  compensate: float = 0.0):
     """Pipeline-engine counterpart of ``make_decoupled_backend_trainer``:
     same generic pytree + loss_fn contract, same sim-layout batches, but
     the step is the stage-graph engine instead of one jitted program.
+
+    ``wire="int8"`` quantizes the gossip wire (error-feedback residuals
+    ride the state as an extra plane); ``compensate > 0`` turns on the
+    staleness-aware delay correction in the update stage (DESIGN.md §14).
 
     ``streams > 1`` swaps in the :class:`repro.launch.streams.
     StreamEngine`: the same fwd/update stage executables plus the gossip
@@ -1006,44 +1126,51 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                          "the stream engine's read plane is a future, not "
                          "a stable handle to publish (serve from a "
                          "streams=1 engine, or materialize snapshots)")
+    _check_wire(wire, compensate, flat)
 
     def build(params_single):
         part = FlatPartition(params_single)
         fwd_slices = [forward_slice_lane(loss_fn, fb_ratio=R, slice_idx=r)
                       for r in range(R)]
         upd = backward_update_lane(optimizer, schedule, update_delay=D,
-                                   apply=not use_pallas)
+                                   apply=not use_pallas,
+                                   compensate=compensate)
         if use_pallas:
-            mix = gossip_fused_lane(part, M, ax, shifts)
+            mix = gossip_fused_lane(part, M, ax, shifts, wire=wire)
         elif flat:
-            mix = gossip_plane_lane(part, M, ax, shifts)
+            mix = gossip_plane_lane(part, M, ax, shifts, wire=wire)
         else:
             mix = gossip_lane_legacy(part, M, ax, shifts)
         bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd,
                                mix, squeeze_batch=True, active_fn=active_fn,
-                               flat=flat, fused=use_pallas)
+                               flat=flat, fused=use_pallas, wire=wire,
+                               compensate=compensate)
         stages = _jit_stages(bodies, mesh, worker_axes, R, D, batch_specs=pw,
-                             fused=use_pallas)
+                             fused=use_pallas, wire=wire,
+                             compensate=compensate)
+        tags = (f"{', pallas' if use_pallas else ''}"
+                f"{', wire=int8' if wire == 'int8' else ''}"
+                f"{f', comp={float(compensate):g}' if compensate else ''}")
         if streams > 1:
             from repro.launch.streams import StreamEngine
             group_stages = _jit_group_stages(part, mesh, worker_axes, M,
                                              mix, bodies[3], shifts,
-                                             fused=use_pallas, R=R)
+                                             fused=use_pallas, R=R,
+                                             wire=wire)
             engine = StreamEngine(
                 R=R, D=D, M=M, group_names=list(part.group_sizes),
                 stages=stages, group_stages=group_stages,
                 timeline=timeline, n_streams=streams, fused=use_pallas,
+                wire=wire, compensate=compensate,
                 describe=(f"stream pipeline backend (M={M}, R={R}, D={D}, "
                           f"streams={streams}, "
-                          f"groups={len(part.group_sizes)}"
-                          f"{', pallas' if use_pallas else ''})"))
+                          f"groups={len(part.group_sizes)}{tags})"))
         else:
             engine = PipelineEngine(
                 R=R, D=D, M=M, stages=stages, timeline=timeline,
-                fused=use_pallas,
+                fused=use_pallas, wire=wire, compensate=compensate,
                 describe=(f"pipeline backend (M={M}, R={R}, D={D}, "
-                          f"flat={flat}"
-                          f"{', pallas' if use_pallas else ''})"))
+                          f"flat={flat}{tags})"))
         return engine, part
 
     def init_fn(rng, params_single):
@@ -1057,7 +1184,8 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                 from repro.core.api import disagreement
                 box["drift"] = jax.jit(disagreement)
         return make_decoupled_state(stacked, optimizer, update_delay=D,
-                                    part=box["part"], flat=flat)
+                                    part=box["part"], flat=flat,
+                                    wire=wire, compensate=compensate)
 
     def step_fn(state, batch, step_idx, shift_idx):
         if "engine" not in box:

@@ -344,13 +344,16 @@ class StreamEngine:
                  stages: Dict[str, Any], group_stages: Dict[str, Any],
                  timeline=None, n_streams: int = 2, fused: bool = False,
                  describe: str = "", max_inflight_steps: int = 3,
-                 abstract_args: Optional[Dict[str, tuple]] = None):
+                 abstract_args: Optional[Dict[str, tuple]] = None,
+                 wire: str = "param", compensate: float = 0.0):
         if n_streams < 2:
             raise ValueError(f"StreamEngine needs >= 2 streams, got "
                              f"{n_streams} (streams=1 is the single-stream "
                              f"PipelineEngine)")
         self.R, self.D, self.M = int(R), int(D), int(M)
         self.fused = bool(fused)
+        self.wire = wire
+        self.compensate = float(compensate)
         self.group_names = list(group_names)
         self._stages = stages            # {"fwd": [R jits], "update": jit}
         self._group_stages = group_stages  # {"mix": {g: jit}, "clock": jit}
@@ -420,6 +423,8 @@ class StreamEngine:
         sh = (shift_idx if isinstance(shift_idx, jax.Array)
               else np.int32(shift_idx))
         gnames = self.group_names
+        int8 = self.wire == "int8"
+        comp = self.compensate > 0.0
         self._prune()
         self._seed_plane(state["read"], t)
 
@@ -447,15 +452,21 @@ class StreamEngine:
         # (post-update plane, or the update-delta plane when fused) with
         # signal value t — the one-sided put the mixes wait on
         opt_ref, fifo_refs = state["opt"], state.get("fifo")
+        theta_ref = state.get("theta")
         upd_fn = self._stages["update"]
 
         def upd_wait():
             plane = plane_wait()
+            args = [plane, resolve_refs(opt_ref)]
             if self.D > 0:
                 fifo = resolve_refs(fifo_refs)
-                return (plane, resolve_refs(opt_ref), fifo["g"],
-                        fifo["stamp"], grads_ref.result(), si)
-            return (plane, resolve_refs(opt_ref), grads_ref.result(), si)
+                args += [fifo["g"], fifo["stamp"]]
+            args += [grads_ref.result()]
+            if comp:
+                # θ_prev plane: produced by the previous step's update on
+                # THIS stream (FIFO) — safe to resolve and donate here
+                args += [resolve_refs(theta_ref)]
+            return tuple(args) + (si,)
 
         def upd_signals(out):
             plane_out = out[0]
@@ -475,37 +486,59 @@ class StreamEngine:
         if self.D > 0:
             new_fifo = {"g": TaskOutput(upd_task, lambda r: r[2]),
                         "stamp": TaskOutput(upd_task, lambda r: r[3])}
+        new_theta = None
+        if comp:
+            theta_idx = 4 if self.D > 0 else 2
+            new_theta = TaskOutput(upd_task,
+                                   lambda r, i=theta_idx: r[i])
         upd_stale = TaskOutput(upd_task, lambda r: r[-1])
 
         # per-group gossip mixes: each waits on ITS group's upd signal
         # only — a late group delays its own mix, nothing else — then
         # pushes the mixed plane with signal t+1 for the next forwards
         w_ref, versions_ref = state["w"], state["versions"]
+        resid_refs = state.get("resid")
         mix_tasks: Dict[str, StreamTask] = {}
         for g in gnames:
             mix_fn = self._group_stages["mix"][g]
+            resid_ref = resid_refs[g] if int8 else None
 
             if self.fused:
-                def mix_wait(g=g):
+                def mix_wait(g=g, resid_ref=resid_ref):
                     # fused kernel contract: mix reads the LIVE plane
                     # (signal t) + the update deltas (upd signal t)
                     live = board.wait_until(self._plane_slot(g), t)
                     delta = board.wait_until(self._upd_slot(g), t)
+                    if int8:
+                        # EF residual: previous mix of THIS group on THIS
+                        # stream produced it (FIFO) — resolve + donate
+                        return (live, delta, resolve_refs(resid_ref),
+                                resolve_refs(w_ref), sh)
                     return (live, delta, resolve_refs(w_ref), sh)
             else:
-                def mix_wait(g=g):
+                def mix_wait(g=g, resid_ref=resid_ref):
                     fresh = board.wait_until(self._upd_slot(g), t)
+                    if int8:
+                        return (fresh, resolve_refs(resid_ref),
+                                resolve_refs(w_ref), sh)
                     return (fresh, resolve_refs(w_ref), sh)
 
             def mix_signals(out, g=g):
-                board.put_signal(self._plane_slot(g), t + 1, out)
+                board.put_signal(self._plane_slot(g), t + 1,
+                                 out[0] if int8 else out)
 
             task = self._track(StreamTask(
                 "gossip", t, group=g, wait_fn=mix_wait, run_fn=mix_fn,
                 signals_fn=mix_signals))
             self._gossip.submit(task)
             mix_tasks[g] = task
-        mixed = {g: TaskOutput(tk) for g, tk in mix_tasks.items()}
+        if int8:
+            mixed = {g: TaskOutput(tk, lambda r: r[0])
+                     for g, tk in mix_tasks.items()}
+            new_resid = {g: TaskOutput(tk, lambda r: r[1])
+                         for g, tk in mix_tasks.items()}
+        else:
+            mixed = {g: TaskOutput(tk) for g, tk in mix_tasks.items()}
 
         # clock/metrics: recompute the push-sum weight exchange, stamp the
         # version clocks, fold the metric reduction (same math as the
@@ -534,6 +567,10 @@ class StreamEngine:
                      "w": new_w, "versions": new_versions}
         if self.D > 0:
             new_state["fifo"] = new_fifo
+        if int8:
+            new_state["resid"] = new_resid
+        if comp:
+            new_state["theta"] = new_theta
         return new_state, metrics
 
     def submit_aux(self, stage: str, fn: Callable, arg_refs: tuple,

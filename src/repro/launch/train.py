@@ -83,6 +83,9 @@ from repro.core.layerview import (
     version_metrics,
 )
 from repro.kernels.gossip_mix import gossip_mix as _gossip_mix_kernel
+from repro.kernels.quantize import dequant_mix as _dequant_mix_kernel
+from repro.kernels.quantize import quantize_plane as _quantize_plane_kernel
+from repro.kernels.ref import dequant_mix_ref, quantize_plane_ref
 from repro.launch import sharding as SH
 from repro.launch.mesh import data_axes, num_workers
 from repro.models.model import Model
@@ -249,8 +252,8 @@ def forward_slice_lane(loss_fn: Callable, *, fb_ratio: int = 1,
 
 
 def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
-                         update_delay: int = 0,
-                         apply: bool = True) -> Callable:
+                         update_delay: int = 0, apply: bool = True,
+                         compensate: float = 0.0) -> Callable:
     """Delayed update application on the write buffer.
 
     Returns ``upd(params, opt_state, grads, fifo, step_idx) ->
@@ -269,12 +272,27 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
     new params — the contract of the fused gossip lane
     (:func:`gossip_fused_lane`), which folds the apply into the mix's
     single memory pass. Params are still consumed read-only (weight
-    decay, delayed-gradient dtype)."""
+    decay, delayed-gradient dtype).
+
+    ``compensate=λ > 0`` turns on Zheng-style delay compensation
+    (DESIGN.md §14): the delayed gradient is corrected by the diagonal
+    Hessian approximation ``g' = g + λ·g⊙g⊙(θ_now − θ_stale)`` before the
+    optimizer sees it, with ``θ_now − θ_stale`` estimated from the
+    version clocks as ``s·(θ_now − θ_prev)`` — ``s`` the measured update
+    staleness and ``θ_prev`` ONE carried plane buffer (the previous
+    step's pre-update params), not a D-deep tree copy. The lane then
+    takes a ``theta`` kwarg and returns a 5-tuple with ``theta_new``
+    (this step's pre-update params) appended. At D == 0 the stamp-driven
+    staleness is 0 and the correction self-gates to a no-op."""
     D = int(update_delay)
     if D < 0:
         raise ValueError("update_delay must be >= 0")
+    lam = float(compensate)
+    if lam < 0:
+        raise ValueError("compensate (λ) must be >= 0")
 
-    def upd(params, opt_state, grads, fifo, step_idx, active=None):
+    def upd(params, opt_state, grads, fifo, step_idx, active=None,
+            theta=None):
         step_f = step_idx.astype(jnp.float32)
         if D > 0:
             g_apply = jax.tree.map(lambda b: b[0], fifo["g"])
@@ -292,15 +310,25 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
                                          step_f - applied_stamp, 0.0)
         else:
             update_staleness = jnp.zeros((), jnp.float32)
+        if lam > 0.0:
+            drift = update_staleness  # θ_now − θ_stale ≈ s·(θ_now − θ_prev)
+
+            def comp(g, p, tp):
+                gf = g.astype(jnp.float32)
+                delta = drift * (p.astype(jnp.float32)
+                                 - tp.astype(jnp.float32))
+                return (gf + lam * gf * gf * delta).astype(g.dtype)
+
+            grads = jax.tree.map(comp, grads, params, theta)
         lr = schedule(step_idx)
         updates, opt_state = optimizer.update(grads, opt_state, params, lr)
         if active is not None:
             updates = jax.tree.map(lambda u: u * active.astype(u.dtype),
                                    updates)
-        if not apply:
-            return updates, opt_state, fifo, update_staleness
-        params = apply_updates(params, updates)
-        return params, opt_state, fifo, update_staleness
+        out = updates if not apply else apply_updates(params, updates)
+        if lam > 0.0:
+            return out, opt_state, fifo, update_staleness, params
+        return out, opt_state, fifo, update_staleness
 
     return upd
 
@@ -357,7 +385,8 @@ def _ring_exchange(plane, w, shift_idx, M: int, ax, shifts: Sequence[int]):
 
 def gossip_plane_lane(part: FlatPartition, M: int, ax,
                       shifts: Sequence[int], *, use_pallas: bool = False,
-                      interpret: Optional[bool] = None):
+                      interpret: Optional[bool] = None,
+                      wire: str = "param"):
     """Push-sum ring gossip directly on the persistent flat plane: no
     per-step ravel, no unravel, and the wire dtype IS the plane dtype
     (bf16 params ship half the bytes of the old blanket-f32 wire; the
@@ -368,10 +397,49 @@ def gossip_plane_lane(part: FlatPartition, M: int, ax,
     ``gossip_mix`` kernel (pure-mix variant — the update was already
     applied by the backward lane); the default jnp path computes
     ``(w/2·mine + w'/2·recv) / (w/2 + w'/2)`` in f32, bitwise-identical
-    per element to the legacy ravel_pytree lane."""
+    per element to the legacy ravel_pytree lane.
+
+    ``wire="int8"`` quantizes the OUTGOING plane (error-feedback
+    residual carried in a second per-group plane buffer, DESIGN.md §14)
+    and ships ``{q, scales}`` per group instead of the param-dtype
+    buffer — ~0.52× the bf16 wire. The local mix operand stays exact;
+    only the received side is dequantized. Signature becomes
+    ``mix(plane, resid, w, shift_idx) -> (plane, resid, w)`` (identity
+    at M == 1 — nothing crosses the wire, nothing is quantized)."""
+    interpret = _resolve_interpret(interpret)
+    if wire == "int8":
+        if M == 1:
+            return lambda plane, resid, w, shift_idx: (plane, resid, w)
+        if use_pallas:
+            qfn = lambda x, r: _quantize_plane_kernel(
+                x, r, interpret=interpret)
+            dqfn = lambda x, q, s, a, b: _dequant_mix_kernel(
+                x, q, s, None, a, b, interpret=interpret)
+        else:
+            qfn = quantize_plane_ref
+            dqfn = lambda x, q, s, a, b: dequant_mix_ref(x, q, s, None, a, b)
+
+        def mix_q(plane, resid, w, shift_idx):
+            payload, new_resid = {}, {}
+            for name, mine in plane.items():
+                q, s, r2 = qfn(mine, resid[name])
+                payload[f"q:{name}"] = q
+                payload[f"s:{name}"] = s
+                new_resid[name] = r2
+            recv, w_half, rw = _ring_exchange(payload, w, shift_idx, M, ax,
+                                              shifts)
+            new_w = w_half + rw
+            alpha, beta = w_half / new_w, rw / new_w
+            mixed = {name: dqfn(mine, recv[f"q:{name}"], recv[f"s:{name}"],
+                                alpha, beta)
+                     for name, mine in plane.items()}
+            return mixed, new_resid, new_w
+
+        return mix_q
+    if wire != "param":
+        raise ValueError(f"unknown wire dtype {wire!r}")
     if M == 1:
         return lambda plane, w, shift_idx: (plane, w)
-    interpret = _resolve_interpret(interpret)
 
     def mix(plane, w, shift_idx):
         recv, w_half, rw = _ring_exchange(plane, w, shift_idx, M, ax, shifts)
@@ -393,7 +461,8 @@ def gossip_plane_lane(part: FlatPartition, M: int, ax,
 
 def gossip_fused_lane(part: FlatPartition, M: int, ax,
                       shifts: Sequence[int], *, use_pallas: bool = True,
-                      interpret: Optional[bool] = None):
+                      interpret: Optional[bool] = None,
+                      wire: str = "param"):
     """The paper's Alg. 1 ordering, fused: ship the PRE-update plane, then
     one pass per group computes ``mixed = α·x + β·recv + upd`` (3 reads +
     1 write — the memory-bound op the ``gossip_mix`` Pallas kernel was
@@ -405,13 +474,54 @@ def gossip_fused_lane(part: FlatPartition, M: int, ax,
     outgoing message). Both orderings are valid push-sum ASGD; the fused
     lane is the kernel's contract and is selected by ``use_pallas`` on
     the decoupled paths. At M == 1 it degenerates to a fused
-    ``x + upd`` apply (α=1, β=0), still through the kernel."""
+    ``x + upd`` apply (α=1, β=0), still through the kernel.
+
+    ``wire="int8"`` quantizes the outgoing pre-update plane (EF residual
+    carried forward, DESIGN.md §14) and fuses receive-side dequantize
+    into the same single mix pass (``dequant_mix`` kernel). Signature
+    becomes ``mix_apply(plane, resid, updates, w, shift_idx) ->
+    (plane, resid, w)``; at M == 1 the residual passes through
+    untouched."""
     interpret = _resolve_interpret(interpret)
     if use_pallas:
         op = lambda x, r, u, a, b: _gossip_mix_kernel(
             x, r, u, a, b, interpret=interpret)
     else:
         from repro.kernels.ref import gossip_mix_ref as op
+    if wire == "int8":
+        if use_pallas:
+            qfn = lambda x, r: _quantize_plane_kernel(
+                x, r, interpret=interpret)
+            dqfn = lambda x, q, s, u, a, b: _dequant_mix_kernel(
+                x, q, s, u, a, b, interpret=interpret)
+        else:
+            qfn = quantize_plane_ref
+            dqfn = dequant_mix_ref
+
+        def mix_apply_q(plane, resid, updates, w, shift_idx):
+            if M == 1:
+                mixed = {name: op(x, x, updates[name], jnp.float32(1.0),
+                                  jnp.float32(0.0))
+                         for name, x in plane.items()}
+                return mixed, resid, w
+            payload, new_resid = {}, {}
+            for name, mine in plane.items():
+                q, s, r2 = qfn(mine, resid[name])
+                payload[f"q:{name}"] = q
+                payload[f"s:{name}"] = s
+                new_resid[name] = r2
+            recv, w_half, rw = _ring_exchange(payload, w, shift_idx, M, ax,
+                                              shifts)
+            new_w = w_half + rw
+            alpha, beta = w_half / new_w, rw / new_w
+            mixed = {name: dqfn(x, recv[f"q:{name}"], recv[f"s:{name}"],
+                                updates[name], alpha, beta)
+                     for name, x in plane.items()}
+            return mixed, new_resid, new_w
+
+        return mix_apply_q
+    if wire != "param":
+        raise ValueError(f"unknown wire dtype {wire!r}")
 
     def mix_apply(plane, updates, w, shift_idx):
         if M == 1:
@@ -675,15 +785,20 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
                          squeeze_batch: bool = False,
                          active_fn: Optional[Callable] = None,
                          flat: bool = False,
-                         fused_mix: Optional[Callable] = None):
+                         fused_mix: Optional[Callable] = None,
+                         wire: str = "param",
+                         compensate: float = 0.0):
     """Per-worker decoupled step body (traced inside shard_map).
 
     Arguments arrive worker-stacked with a leading axis of 1 (the shard):
-    ``(read, write, opt, w, versions[, fifo_g, fifo_stamp], batch, step_idx,
-    shift_idx)`` — the fifo args are present iff ``D > 0``. The three lanes
-    compose: forward on the READ buffer, delayed update on the WRITE buffer,
-    gossip on the updated write copy, then the per-layer-group buffer swap
-    (read adopts each mixed group; its clock is stamped ``t + phi_g``).
+    ``(read, write, opt, w, versions[, fifo_g, fifo_stamp][, resid]
+    [, theta], batch, step_idx, shift_idx)`` — the fifo args are present
+    iff ``D > 0``, the error-feedback residual plane iff ``wire="int8"``,
+    and the stale-θ reference plane iff ``compensate > 0`` (DESIGN.md
+    §14). The three lanes compose: forward on the READ buffer, delayed
+    update on the WRITE buffer, gossip on the updated write copy, then
+    the per-layer-group buffer swap (read adopts each mixed group; its
+    clock is stamped ``t + phi_g``).
 
     ``flat=True`` (the default route, DESIGN.md §11): read/write/opt/fifo
     are flat planes (``part`` is a :class:`FlatPartition`); the forward
@@ -697,16 +812,26 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
     unstack_opt = lambda t: jax.tree.map(
         lambda x: x[0] if x.ndim >= 1 else x, t)
     restack = lambda t: jax.tree.map(lambda x: x[None], t)
+    int8 = wire == "int8"
+    comp = float(compensate) > 0.0
 
     def worker_fn(*args):
+        (read_st, write_st, opt_st, w_st, versions) = args[:5]
+        i = 5
         if D > 0:
-            (read_st, write_st, opt_st, w_st, versions,
-             fifo_g_st, fifo_stamp, batch, step_idx, shift_idx) = args
-            fifo = {"g": unstack(fifo_g_st), "stamp": fifo_stamp}
+            fifo = {"g": unstack(args[5]), "stamp": args[6]}
+            i = 7
         else:
-            (read_st, write_st, opt_st, w_st, versions,
-             batch, step_idx, shift_idx) = args
             fifo = ()
+        resid = None
+        if int8:
+            resid = unstack(args[i])
+            i += 1
+        theta = None
+        if comp:
+            theta = unstack(args[i])
+            i += 1
+        batch, step_idx, shift_idx = args[i:]
         read = unstack(read_st)
         write = unstack(write_st)
         opt_state = unstack_opt(opt_st)
@@ -726,17 +851,30 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
         if fused_mix is not None:
             # fused route: the backward lane yields the update DELTAS and
             # the gossip lane folds apply+mix into one pass per group
-            updates, opt_state, fifo, upd_stale = upd(write, opt_state,
-                                                      grads, fifo, step_idx,
-                                                      active=active)
-            write, w = fused_mix(write, updates, w, shift_idx)
+            upd_out = upd(write, opt_state, grads, fifo, step_idx,
+                          active=active, theta=theta) if comp else \
+                upd(write, opt_state, grads, fifo, step_idx, active=active)
+            updates, opt_state, fifo, upd_stale = upd_out[:4]
+            if comp:
+                theta = upd_out[4]
+            if int8:
+                write, resid, w = fused_mix(write, resid, updates, w,
+                                            shift_idx)
+            else:
+                write, w = fused_mix(write, updates, w, shift_idx)
         else:
             # backward/update lane: delayed gradient lands on the write
             # buffer, then the per-layer-group push-sum ring mix
-            write, opt_state, fifo, upd_stale = upd(write, opt_state, grads,
-                                                    fifo, step_idx,
-                                                    active=active)
-            write, w = mix(write, w, shift_idx)
+            upd_out = upd(write, opt_state, grads, fifo, step_idx,
+                          active=active, theta=theta) if comp else \
+                upd(write, opt_state, grads, fifo, step_idx, active=active)
+            write, opt_state, fifo, upd_stale = upd_out[:4]
+            if comp:
+                theta = upd_out[4]
+            if int8:
+                write, resid, w = mix(write, resid, w, shift_idx)
+            else:
+                write, w = mix(write, w, shift_idx)
         # buffer swap: the read copy adopts the mixed write copy and each
         # group clock is stamped with its generation time t + phi_g. In the
         # real async system this is a per-group pointer flip as each
@@ -754,6 +892,10 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
                 versions]
         if D > 0:
             outs += [restack(fifo["g"]), fifo["stamp"]]
+        if int8:
+            outs += [restack(resid)]
+        if comp:
+            outs += [restack(theta)]
         return tuple(outs) + (loss, upd_stale)
 
     return worker_fn
@@ -761,7 +903,8 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
 
 def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
                          part: Optional[LayerPartition] = None,
-                         flat: bool = True):
+                         flat: bool = True, wire: str = "param",
+                         compensate: float = 0.0):
     """Initial step state for the decoupled lane.
 
     ``read`` and ``write`` start as identical copies. Both are fresh
@@ -773,10 +916,19 @@ def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
     this is THE pack: params are packed into the persistent per-group
     plane here, once, and never repacked again — the step carries, mixes
     and donates the plane itself; the optimizer state and the gradient
-    FIFO are allocated directly in plane layout (DESIGN.md §11)."""
+    FIFO are allocated directly in plane layout (DESIGN.md §11).
+
+    ``wire="int8"`` adds the zero-initialized error-feedback residual
+    plane (``state["resid"]``, plane dtype); ``compensate > 0`` adds the
+    stale-θ reference plane (``state["theta"]``, a copy of the initial
+    params — the θ_prev of step 0). Both are flat-plane machinery
+    (DESIGN.md §14) and require ``flat=True``."""
     M = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     single = jax.tree.map(lambda x: x[0], params_stacked)
     D = int(update_delay)
+    if (wire == "int8" or float(compensate) > 0.0) and not flat:
+        raise ValueError("wire='int8' / compensate need the flat plane "
+                         "(flat=True)")
     if flat:
         if part is None:
             part = FlatPartition(single)
@@ -797,6 +949,10 @@ def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
         }
         if D > 0:
             state["fifo"] = fifo_init(part.pack(single), D, M)
+        if wire == "int8":
+            state["resid"] = jax.tree.map(jnp.zeros_like, plane)
+        if float(compensate) > 0.0:
+            state["theta"] = jax.tree.map(jnp.copy, plane)
         return state
     part = part or LayerPartition(single)
     state = {
@@ -818,28 +974,59 @@ def _decoupled_metrics(w, versions, loss, upd_stale, step_idx):
     return out
 
 
-def _decoupled_state_specs(D: int, pw):
+def _check_wire(wire: str, compensate: float, flat: bool) -> None:
+    """Shared validation for the quantized-wire / delay-compensation knobs
+    (both are flat-plane machinery — DESIGN.md §14)."""
+    if wire not in ("param", "int8"):
+        raise ValueError(f"unknown wire dtype {wire!r} "
+                         "(expected 'param' or 'int8')")
+    if float(compensate) < 0.0:
+        raise ValueError("compensate (λ) must be >= 0")
+    if (wire == "int8" or float(compensate) > 0.0) and not flat:
+        raise ValueError("wire='int8' / compensate > 0 need the flat plane "
+                         "(flat=True)")
+
+
+def _decoupled_state_specs(D: int, pw, wire: str = "param",
+                           compensate: float = 0.0):
     """shard_map specs for the flattened decoupled state
-    (read, write, opt, w, versions[, fifo_g, fifo_stamp])."""
-    return [pw] * 5 + ([pw, P()] if D > 0 else [])
+    (read, write, opt, w, versions[, fifo_g, fifo_stamp][, resid]
+    [, theta])."""
+    extra = int(wire == "int8") + int(float(compensate) > 0.0)
+    return [pw] * 5 + ([pw, P()] if D > 0 else []) + [pw] * extra
 
 
-def _decoupled_step_caller(fn_sm, D: int):
+def _decoupled_step_caller(fn_sm, D: int, wire: str = "param",
+                           compensate: float = 0.0):
     """Adapt the flat shard_map'd worker fn to the dict state + metrics
     step signature shared by both decoupled entry points."""
+    int8 = wire == "int8"
+    comp = float(compensate) > 0.0
 
     def step(state, batch, step_idx, shift_idx):
         args = [state["read"], state["write"], state["opt"], state["w"],
                 state["versions"]]
         if D > 0:
             args += [state["fifo"]["g"], state["fifo"]["stamp"]]
+        if int8:
+            args += [state["resid"]]
+        if comp:
+            args += [state["theta"]]
         outs = fn_sm(*args, batch, step_idx, shift_idx)
         read, write, opt, w, versions = outs[:5]
         loss, upd_stale = outs[-2:]
         new_state = {"read": read, "write": write, "opt": opt, "w": w,
                      "versions": versions}
+        i = 5
         if D > 0:
             new_state["fifo"] = {"g": outs[5], "stamp": outs[6]}
+            i = 7
+        if int8:
+            new_state["resid"] = outs[i]
+            i += 1
+        if comp:
+            new_state["theta"] = outs[i]
+            i += 1
         return new_state, _decoupled_metrics(w, versions, loss, upd_stale,
                                              step_idx)
 
@@ -855,7 +1042,9 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                                     update_delay: int = 1,
                                     constrain_grads: bool = False,
                                     flat: bool = True,
-                                    use_pallas: bool = False) -> ProdStep:
+                                    use_pallas: bool = False,
+                                    wire: str = "param",
+                                    compensate: float = 0.0) -> ProdStep:
     """The paper's decoupled execution on the real mesh.
 
     Step signature: ``fn(state, batch, step_idx, shift_idx) -> (state,
@@ -873,7 +1062,12 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
     replicated over the 'model' axis (per-leaf tensor-parallel param
     sharding needs ``flat=False`` — DESIGN.md §11). ``use_pallas`` routes
     mix+apply through the fused ``gossip_mix`` kernel
-    (:func:`gossip_fused_lane`; Alg. 1 ordering)."""
+    (:func:`gossip_fused_lane`; Alg. 1 ordering).
+
+    ``wire="int8"`` quantizes the gossip wire with an error-feedback
+    residual plane carried in the state; ``compensate=λ > 0`` turns on
+    the staleness-aware delay compensation in the backward lane
+    (DESIGN.md §14). Both require ``flat=True``."""
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
@@ -896,18 +1090,20 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
 
     if use_pallas and not flat:
         raise ValueError("use_pallas requires the flat plane (flat=True)")
+    _check_wire(wire, compensate, flat)
     part = FlatPartition(model.abstract_params())
     fwd = forward_lane(model.loss_fn, fb_ratio=R, grad_specs=grad_specs)
     upd = backward_update_lane(optimizer, schedule, update_delay=D,
-                               apply=not use_pallas)
+                               apply=not use_pallas, compensate=compensate)
     if use_pallas:
-        mix, fused = None, gossip_fused_lane(part, M, ax, shifts)
+        mix, fused = None, gossip_fused_lane(part, M, ax, shifts, wire=wire)
     elif flat:
-        mix, fused = gossip_plane_lane(part, M, ax, shifts), None
+        mix, fused = gossip_plane_lane(part, M, ax, shifts, wire=wire), None
     else:
         mix, fused = gossip_lane_legacy(part, M, ax, shifts), None
     worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes, D,
-                                     flat=flat, fused_mix=fused)
+                                     flat=flat, fused_mix=fused, wire=wire,
+                                     compensate=compensate)
 
     pw = P(ax)
     abstract_params = model.abstract_params()
@@ -935,16 +1131,20 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
             "g": fifo_g_abs,
             "stamp": jax.ShapeDtypeStruct((D,), jnp.float32),
         }
+    if wire == "int8":
+        abstract_state["resid"] = stacked_params
+    if float(compensate) > 0.0:
+        abstract_state["theta"] = stacked_params
 
     batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax),
                                   _abstract_batch(cfg, shape))
-    state_specs = _decoupled_state_specs(D, pw)
+    state_specs = _decoupled_state_specs(D, pw, wire, compensate)
     fn_sm = shard_map(
         worker_fn, mesh=mesh,
         in_specs=tuple(state_specs + [batch_specs_sm, P(), P()]),
         out_specs=tuple(state_specs + [P(), P()]),
         axis_names=set(worker_axes))
-    step = _decoupled_step_caller(fn_sm, D)
+    step = _decoupled_step_caller(fn_sm, D, wire, compensate)
 
     w_sh = NamedSharding(mesh, pw)
     scalar = NamedSharding(mesh, P())
@@ -971,6 +1171,10 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                 "versions": w_sh}
     if D > 0:
         state_sh["fifo"] = {"g": fifo_g_sh, "stamp": scalar}
+    if wire == "int8":
+        state_sh["resid"] = p_sh
+    if float(compensate) > 0.0:
+        state_sh["theta"] = p_sh
     metrics_sh = {"loss": scalar, "update_staleness": scalar,
                   "layer_staleness": scalar, "staleness_mean": scalar,
                   "weight_sum": scalar}
@@ -987,7 +1191,9 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
     return ProdStep(fn, abstract,
                     f"layup decoupled train (M={M}, R={R}, D={D}, "
                     f"shifts={shifts}, flat={flat}"
-                    f"{', pallas' if use_pallas else ''})")
+                    f"{', pallas' if use_pallas else ''}"
+                    f"{', wire=int8' if wire == 'int8' else ''}"
+                    f"{f', comp={compensate}' if compensate else ''})")
 
 
 def straggler_active_fn(mesh, straggler_delays) -> Optional[Callable]:
@@ -1020,7 +1226,9 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                    measure_drift: bool = False,
                                    flat: bool = True,
                                    use_pallas: bool = False,
-                                   publisher=None):
+                                   publisher=None,
+                                   wire: str = "param",
+                                   compensate: float = 0.0):
     """Decoupled LayUp over a generic pytree + loss_fn (no Model/ShapeConfig)
     — the engine behind the ``"prod"`` TrainerBackend (core/backend.py).
 
@@ -1061,29 +1269,34 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
         raise ValueError("publisher needs the flat plane (flat=True): the "
                          "legacy tree state has no per-group plane to "
                          "publish")
+    _check_wire(wire, compensate, flat)
 
     def build(params_single):
         part = FlatPartition(params_single)
         fwd = forward_lane(loss_fn, fb_ratio=R)
         upd = backward_update_lane(optimizer, schedule, update_delay=D,
-                                   apply=not use_pallas)
+                                   apply=not use_pallas,
+                                   compensate=compensate)
         if use_pallas:
-            mix, fused = None, gossip_fused_lane(part, M, ax, shifts)
+            mix, fused = None, gossip_fused_lane(part, M, ax, shifts,
+                                                 wire=wire)
         elif flat:
-            mix, fused = gossip_plane_lane(part, M, ax, shifts), None
+            mix, fused = gossip_plane_lane(part, M, ax, shifts,
+                                           wire=wire), None
         else:
             mix, fused = gossip_lane_legacy(part, M, ax, shifts), None
         worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes,
                                          D, squeeze_batch=True,
                                          active_fn=active_fn, flat=flat,
-                                         fused_mix=fused)
+                                         fused_mix=fused, wire=wire,
+                                         compensate=compensate)
         pw = P(ax)
-        state_specs = _decoupled_state_specs(D, pw)
+        state_specs = _decoupled_state_specs(D, pw, wire, compensate)
         fn_sm = shard_map(worker_fn, mesh=mesh,
                           in_specs=tuple(state_specs + [pw, P(), P()]),
                           out_specs=tuple(state_specs + [P(), P()]),
                           axis_names=set(worker_axes))
-        base_step = _decoupled_step_caller(fn_sm, D)
+        base_step = _decoupled_step_caller(fn_sm, D, wire, compensate)
 
         def step(state, batch, step_idx, shift_idx):
             new_state, metrics = base_step(state, batch, step_idx, shift_idx)
@@ -1103,7 +1316,8 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
         if "step" not in part_box:
             part_box["step"], part_box["part"] = build(params_single)
         return make_decoupled_state(stacked, optimizer, update_delay=D,
-                                    part=part_box["part"], flat=flat)
+                                    part=part_box["part"], flat=flat,
+                                    wire=wire, compensate=compensate)
 
     def step_fn(state, batch, step_idx, shift_idx):
         if "step" not in part_box:
@@ -1190,7 +1404,9 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
               overlap: bool = False,
               flat: bool = True,
               use_pallas: bool = False,
-              streams: int = 1) -> ProdStep:
+              streams: int = 1,
+              wire: str = "param",
+              compensate: float = 0.0) -> ProdStep:
     """``overlap=True`` selects the stage-graph pipeline engine
     (repro.launch.pipeline): the decoupled lane compiled into separately
     jitted fwd-slice / bwd+update / gossip stages dispatched asynchronously
@@ -1208,7 +1424,14 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
     per-step repack (DESIGN.md §11); ``flat=False`` restores the legacy
     tree state + per-step f32 ravel (and per-leaf TP param sharding).
     ``use_pallas`` routes the gossip mix through the fused Pallas
-    ``gossip_mix`` kernel (interpret mode off-TPU)."""
+    ``gossip_mix`` kernel (interpret mode off-TPU).
+
+    ``wire="int8"`` (decoupled lanes, flat only) quantizes the gossip
+    wire to int8 with error-feedback residuals — ~0.52× the bf16 wire
+    bytes; ``compensate=λ > 0`` adds the staleness-aware delay
+    compensation ``g + λ·g⊙g⊙(θ_now − θ_stale)`` in the backward lane
+    (λ = 0.5 is the documented default when turning it on —
+    DESIGN.md §14)."""
     from repro.optim import momentum, constant
     optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
     schedule = schedule or constant(0.1)
@@ -1216,6 +1439,11 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
     if streams > 1 and not overlap:
         raise ValueError("streams > 1 is a property of the stage-graph "
                          "pipeline; it requires overlap=True")
+    _check_wire(wire, compensate, flat)
+    if (wire != "param" or float(compensate) > 0.0) and not decoupled:
+        raise ValueError("wire='int8' / compensate > 0 belong to the "
+                         "decoupled LayUp lane (fb_ratio/update_delay/"
+                         "overlap)")
     if decoupled and (shape.kind != "train" or algo == "ddp"):
         raise ValueError(
             "fb_ratio/update_delay/overlap define the decoupled LayUp lane; "
@@ -1235,11 +1463,12 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
                     overrides=overrides, preset=preset, fb_ratio=fb_ratio,
                     update_delay=update_delay,
                     constrain_grads=constrain_grads, flat=flat,
-                    use_pallas=use_pallas, streams=streams)
+                    use_pallas=use_pallas, streams=streams, wire=wire,
+                    compensate=compensate)
             return make_layup_decoupled_train_step(
                 model, mesh, optimizer, schedule, shape, shifts, overrides,
                 preset, fb_ratio, update_delay, constrain_grads, flat,
-                use_pallas)
+                use_pallas, wire, compensate)
         return make_layup_train_step(model, mesh, optimizer, schedule, shape,
                                      shifts, overrides, preset, accum_steps,
                                      constrain_grads, use_pallas)

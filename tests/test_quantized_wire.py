@@ -1,0 +1,359 @@
+"""Quantized gossip wire (DESIGN.md §14): int8 + per-row-scale round trip,
+error-feedback residual invariants, delay compensation, and bit-exactness
+of the default wire across the three execution engines.
+
+Kernel-vs-ref comparisons use tight-but-nonzero tolerances: interpret-mode
+Pallas and XLA-compiled jnp contract FMAs (and fold divisions) differently,
+so scales can differ by ~1 ulp and an int8 level can flip where v/scale
+sits within ~1e-5 of a rounding boundary. What must agree tightly is the
+DEQUANTIZED value q·s (and the residual, which carries the complement).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import make_backend
+from repro.kernels import ops
+from repro.kernels.quantize import quant_layout, quant_wire_nbytes
+from repro.kernels.ref import dequant_mix_ref, quantize_plane_ref
+from repro.optim.optimizers import sgd
+
+from _fixtures import mlp_batch, mlp_problem
+from _subproc import run_sub
+
+# odd sizes straddle the 128-lane row and the 32-row sublane padding
+SIZES = [1, 127, 129, 1023, 8 * 128 + 5]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-6)
+
+
+def _res_tol(dtype):
+    # one bf16 ULP of slack: an f32 intermediate that straddles a rounding
+    # boundary can cast to adjacent bf16 values under different FMA
+    # contraction
+    return dict(rtol=2e-2, atol=1e-4) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-6)
+
+
+class TestQuantLayout:
+    def test_rows_padding_and_bytes(self):
+        for n in SIZES:
+            rows, tile, ntiles = quant_layout(n)
+            assert rows * 128 >= n
+            assert rows % 32 == 0 and rows == tile * ntiles
+            assert quant_wire_nbytes(n) == n + 4 * rows
+
+    def test_wire_under_055_of_bf16_at_scale(self):
+        n = 1 << 20
+        assert quant_wire_nbytes(n) <= 0.55 * (2 * n)
+
+
+class TestQuantizeRoundTrip:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n", SIZES)
+    def test_kernel_matches_ref(self, rng, dtype, n):
+        x = (jax.random.normal(rng, (n,)) * 3.0).astype(dtype)
+        r = (jax.random.normal(jax.random.fold_in(rng, 1), (n,))
+             * 0.01).astype(dtype)
+        qk, sk, resk = ops.quantize_plane(x, r, interpret=True)
+        qr, sr, resr = quantize_plane_ref(x, r)
+        rows, _, _ = quant_layout(n)
+        np.testing.assert_allclose(np.asarray(sk), np.asarray(sr),
+                                   rtol=1e-6, atol=0)
+        assert qk.dtype == jnp.int8 and qk.shape == x.shape
+        assert sk.shape == (rows,) and sk.dtype == jnp.float32
+        # the EF identity q·s + res == x + r_in must hold for BOTH
+        # implementations (this is what makes the wire non-lossy in sum)
+        v = (np.asarray(x, np.float32) + np.asarray(r, np.float32))
+        eps = (np.float32(np.finfo(np.float16).eps)
+               if dtype == jnp.bfloat16 else 1e-6)
+        for q, s, res in ((qk, sk, resk), (qr, sr, resr)):
+            deq = (np.asarray(q, np.float32)
+                   * np.repeat(np.asarray(s), 128)[:n])
+            np.testing.assert_allclose(
+                deq + np.asarray(res, np.float32), v,
+                rtol=0, atol=float(np.abs(v).max() + 1) * eps * 4)
+        # and the two residuals agree up to a single quantization level
+        # (a borderline int8 level can flip under different div folding)
+        lvl = float(np.asarray(sr).max())
+        np.testing.assert_allclose(
+            np.asarray(resk, np.float32), np.asarray(resr, np.float32),
+            rtol=0, atol=lvl * 1.01)
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_round_trip_error_bounded(self, rng, n):
+        x = jax.random.normal(rng, (n,)) * 2.0
+        q, s, res = quantize_plane_ref(x)
+        rows, _, _ = quant_layout(n)
+        deq = np.zeros(rows * 128, np.float32)
+        deq[:n] = np.asarray(q, np.float32) * np.repeat(np.asarray(s),
+                                                        128)[:rows * 128][:n]
+        err = np.abs(np.asarray(x) - deq[:n])
+        # per-row bound: |x - q*s| <= absmax_row / 254 (round-to-nearest
+        # over 127 levels), and the EF residual IS that error
+        xp = np.zeros(rows * 128, np.float32)
+        xp[:n] = np.asarray(x)
+        absmax = np.abs(xp.reshape(rows, 128)).max(axis=1)
+        bound = np.repeat(absmax / 254.0 + 1e-7, 128)[:n]
+        assert (err <= bound).all()
+        np.testing.assert_allclose(np.asarray(res), np.asarray(x) - deq[:n],
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_zero_plane_zero_scale_guard(self):
+        x = jnp.zeros((256,), jnp.float32)
+        q, s, res = quantize_plane_ref(x)
+        assert (np.asarray(q) == 0).all()
+        assert (np.asarray(s) == 1.0).all()  # guarded, not 0/0
+        assert (np.asarray(res) == 0.0).all()
+
+
+class TestDequantMix:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n", SIZES)
+    @pytest.mark.parametrize("with_upd", [False, True])
+    def test_kernel_matches_ref(self, rng, dtype, n, with_upd):
+        x = (jax.random.normal(rng, (n,)) * 2.0).astype(dtype)
+        peer = (jax.random.normal(jax.random.fold_in(rng, 1), (n,))
+                * 2.0).astype(dtype)
+        upd = ((jax.random.normal(jax.random.fold_in(rng, 2), (n,))
+                * 0.01).astype(dtype) if with_upd else None)
+        q, s, _ = quantize_plane_ref(peer)
+        # traced alpha/beta, like the lane's push-sum weights
+        a, b = jnp.float32(0.6), jnp.float32(0.4)
+        out_k = ops.dequant_mix(x, q, s, upd, a, b, interpret=True)
+        out_r = dequant_mix_ref(x, q, s, upd, a, b)
+        np.testing.assert_allclose(
+            np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+            **_res_tol(dtype))
+        assert out_k.dtype == x.dtype and out_k.shape == x.shape
+
+    def test_scales_shape_validated(self, rng):
+        x = jax.random.normal(rng, (256,))
+        q, s, _ = quantize_plane_ref(x)
+        with pytest.raises(ValueError):
+            ops.dequant_mix(x, q, s[:-1], None, 0.5, 0.5, interpret=True)
+
+
+class TestErrorFeedback:
+    @pytest.mark.parametrize("n", [257, 1023])
+    def test_residual_bounded_over_rounds(self, rng, n):
+        """EF invariant: carrying resid forward keeps it bounded by the
+        one-round quantization error (it never accumulates drift)."""
+        x = jax.random.normal(rng, (n,)) * 2.0
+        res = jnp.zeros_like(x)
+        scale_bound = float(jnp.max(jnp.abs(x))) / 100.0
+        for step in range(5):
+            xt = x * (1.0 + 0.1 * step)  # a slowly moving plane
+            q, s, res = quantize_plane_ref(xt, res)
+            assert float(jnp.max(jnp.abs(res))) <= scale_bound, step
+
+    def test_error_feedback_recovers_lost_mass(self, rng):
+        """What quantization drops in round t is re-injected in round
+        t+1: v_t = x_t + res_{t-1} and res_t = v_t - q_t*s_t exactly."""
+        n = 640
+        x = jax.random.normal(rng, (n,)) * 2.0
+        res = jnp.zeros_like(x)
+        total_sent = np.zeros(n, np.float64)
+        total_in = np.zeros(n, np.float64)
+        for step in range(3):
+            total_in += np.asarray(x, np.float64)
+            q, s, res = quantize_plane_ref(x, res)
+            rows, _, _ = quant_layout(n)
+            deq = (np.asarray(q, np.float64)
+                   * np.repeat(np.asarray(s, np.float64), 128)[:n])
+            total_sent += deq
+        # everything not yet shipped sits in the residual
+        np.testing.assert_allclose(total_in - total_sent,
+                                   np.asarray(res, np.float64),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def _drive(be, params, steps=4):
+    st = be.init(jax.random.PRNGKey(0), params)
+    losses = []
+    for t in range(steps):
+        st, m = be.step(st, mlp_batch(t), jax.random.PRNGKey(t))
+        losses.append(float(m["loss"]))
+    return losses, be
+
+
+ENGINES = [dict(), dict(overlap=True), dict(overlap=True, streams=2)]
+
+
+class TestWireThreading:
+    """M=1: the int8 mix is the identity (no peer), so the quantized wire
+    must be BIT-EXACT vs the param wire while still exercising the resid/
+    theta threading through all three engines."""
+
+    @pytest.mark.parametrize("eng", ENGINES,
+                             ids=["monolithic", "overlap", "streams"])
+    def test_int8_identity_at_m1(self, eng):
+        loss_fn, params = mlp_problem()
+        ref, _ = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=2, update_delay=1,
+            measure_drift=False, **eng), params)
+        got, be = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=2, update_delay=1,
+            measure_drift=False, wire="int8", **eng), params)
+        assert got == ref
+        s = be.summary()
+        assert s["wire_dtype"] == "int8"
+        assert s["wire_bytes_per_round"] < be.part.plane_nbytes()
+
+    @pytest.mark.parametrize("eng", ENGINES,
+                             ids=["monolithic", "overlap", "streams"])
+    def test_compensate_runs_and_d0_noop(self, eng):
+        loss_fn, params = mlp_problem()
+        # D=0: staleness is 0 every step, the correction self-gates to a
+        # no-op — bit-exact vs the uncompensated lane
+        ref, _ = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=1, update_delay=0,
+            measure_drift=False, **eng), params)
+        got, _ = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=1, update_delay=0,
+            measure_drift=False, compensate=0.5, **eng), params)
+        assert got == ref
+        # D=1: the correction must engage (losses shift once staleness>0)
+        raw, _ = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=1, update_delay=1,
+            measure_drift=False, **eng), params)
+        comp, _ = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=1, update_delay=1,
+            measure_drift=False, compensate=0.5, **eng), params)
+        assert raw != comp
+        assert raw[:2] == comp[:2]  # warmup steps: FIFO not yet stale
+
+    def test_wire_validation(self):
+        loss_fn, params = mlp_problem()
+        with pytest.raises(ValueError, match="wire"):
+            make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                         optimizer=sgd(), schedule=lambda t: 0.05,
+                         wire="fp4")
+        with pytest.raises(ValueError, match="flat"):
+            make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                         optimizer=sgd(), schedule=lambda t: 0.05,
+                         flat=False, wire="int8")
+        with pytest.raises(ValueError):
+            make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                         optimizer=sgd(), schedule=lambda t: 0.05,
+                         compensate=-1.0)
+
+
+class TestParamWireBitExact:
+    """wire="param" explicitly must be bit-identical to the default at
+    (R, D) ∈ {(1, 0), (1, 1), (2, 1)} — the quantization plumbing must
+    not perturb the exact wire."""
+
+    @pytest.mark.parametrize("R,D", [(1, 0), (1, 1), (2, 1)])
+    def test_explicit_param_wire_matches_default(self, R, D):
+        loss_fn, params = mlp_problem()
+        ref, _ = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=R, update_delay=D,
+            measure_drift=False), params)
+        got, _ = _drive(make_backend(
+            "prod", "layup", M=1, loss_fn=loss_fn, optimizer=sgd(),
+            schedule=lambda t: 0.05, fb_ratio=R, update_delay=D,
+            measure_drift=False, wire="param"), params)
+        assert got == ref
+
+
+class TestCompensationFormula:
+    def test_lane_formula_matches_manual(self):
+        """D=1 decoupled lane with λ>0: the applied update must equal the
+        optimizer run on hand-compensated grads g + λ·g⊙g⊙(θ_now−θ_stale)
+        with the FIFO's staleness as the drift factor."""
+        from repro.core.layerview import FlatPartition
+        from repro.launch.train import (backward_update_lane,
+                                        make_decoupled_state)
+        lam = 0.7
+        params = {"w": jnp.arange(6.0).reshape(2, 3) * 0.1}
+        part = FlatPartition(params)
+        opt = sgd()
+        upd = backward_update_lane(opt, lambda t: 0.1, update_delay=1,
+                                   compensate=lam)
+        plane = part.pack(params)
+        opt_state = opt.init(plane)
+        g0 = {k: jnp.ones_like(v) * 0.3 for k, v in plane.items()}
+        g1 = {k: jnp.ones_like(v) * 0.5 for k, v in plane.items()}
+        fifo = {"g": jax.tree.map(lambda x: x[None], g0),
+                "stamp": jnp.zeros((1,), jnp.float32)}
+        theta_stale = jax.tree.map(lambda x: x - 0.01, plane)
+        out, _, _, stale, theta_new = upd(plane, opt_state, g1, fifo,
+                                          jnp.int32(1), theta=theta_stale)
+        drift = float(stale)  # staleness popped from the FIFO stamp
+        assert drift == 1.0
+        g_comp = jax.tree.map(
+            lambda g, p, tp: g + lam * g * g * (drift * (p - tp)),
+            g0, plane, theta_stale)
+        updates, _ = opt.update(g_comp, opt.init(plane), plane, 0.1)
+        expected = jax.tree.map(lambda p, u: p + u, plane, updates)
+        for k in plane:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(expected[k]),
+                                       rtol=1e-6, atol=1e-7)
+        # θ_new is this step's pre-update params (next step's θ_stale)
+        for k in plane:
+            np.testing.assert_array_equal(np.asarray(theta_new[k]),
+                                          np.asarray(plane[k]))
+
+
+@pytest.mark.slow
+class TestMultiWorkerParity:
+    def test_m2_int8_tracks_param_wire(self):
+        """M=2 ring: the quantized wire's loss trajectory must track the
+        exact wire within tolerance (EF keeps the error non-drifting)."""
+        out = run_sub("""
+            import os
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=2")
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core.backend import make_backend
+            from repro.optim.optimizers import sgd
+
+            def loss_fn(p, b):
+                h = jnp.tanh(b["x"] @ p["l1"])
+                logits = h @ p["l2"]
+                ce = -jnp.mean(jax.nn.log_softmax(logits)[
+                    jnp.arange(logits.shape[0]), b["labels"]])
+                return ce, {}
+
+            params = {
+                "l1": jax.random.normal(jax.random.PRNGKey(1), (16, 32)) * .2,
+                "l2": jax.random.normal(jax.random.PRNGKey(2), (32, 10)) * .2}
+
+            def batch(t, M=2, b=8):
+                return {"x": jax.random.normal(
+                            jax.random.PRNGKey(10 + t), (M, b, 16)),
+                        "labels": jax.random.randint(
+                            jax.random.PRNGKey(90 + t), (M, b), 0, 10)}
+
+            losses = {}
+            for wire in ("param", "int8"):
+                be = make_backend("prod", "layup", M=2, loss_fn=loss_fn,
+                                  optimizer=sgd(), schedule=lambda t: 0.05,
+                                  fb_ratio=1, update_delay=1,
+                                  measure_drift=False, wire=wire)
+                st = be.init(jax.random.PRNGKey(0), params)
+                ls = []
+                for t in range(12):
+                    st, m = be.step(st, batch(t), jax.random.PRNGKey(t))
+                    ls.append(float(m["loss"]))
+                losses[wire] = ls
+            d = max(abs(a - b) for a, b in
+                    zip(losses["param"], losses["int8"]))
+            rel = d / max(abs(x) for x in losses["param"])
+            assert rel < 0.02, (rel, losses)
+            print("PARITY_OK", rel)
+        """)
+        assert "PARITY_OK" in out
