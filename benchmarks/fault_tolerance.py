@@ -1,0 +1,168 @@
+"""Nightly chaos job — degraded-mode training under injected faults.
+
+Runs the full fault-tolerant lane (M=4 host devices, per-group streams,
+int8 wire, R=2/D=1 — the PR-9 acceptance configuration) once fault-free
+and once per chaos flavor, with every fault scheduled through a
+deterministic :class:`~repro.chaos.plan.FaultPlan` (DESIGN.md §15):
+
+* ``crash``   — peer 1 dies mid-run and re-enters via donor re-sync;
+* ``hang``    — the host loop stalls (wall-clock degradation only);
+* ``corrupt`` — int8 wire payloads are damaged/dropped and must be
+  rejected by checksum and repaired bit-exact (reject-and-resend).
+
+Nightly artifact: ``BENCH_fault_tolerance.json`` — per-flavor final loss,
+loss delta vs fault-free, time-to-detect and time-to-resync (in steps,
+from the membership tracker), degraded-round and guard counters. Gates
+(CI fails otherwise):
+
+* every degraded run completes with finite loss, no ``TimeoutError``;
+* degraded final loss <= 1.2x the fault-free final loss — a single
+  crashed/recovered peer or a repaired wire round must not derail
+  convergence;
+* the crash flavor detects the death (time_to_detect recorded), re-syncs
+  exactly once, and conserves push-sum mass (weight_sum == 1.0) on every
+  round it reports;
+* the corrupt flavor's guard counters show the damage was seen
+  (checksum reject + drop detect) and repaired (resends == rejects).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dump_json, emit, ensure_host_devices, section
+
+FLAVORS = {
+    "crash": "crash:peer=1,step=3,recover=9",
+    "hang": "hang:step=4,seconds=0.05;hang:step=8,seconds=0.05",
+    "corrupt": "corrupt:step=3,group=0;drop:step=6,group=1",
+}
+LOSS_BUDGET = 1.2  # degraded final loss <= 1.2x fault-free
+
+
+def _problem():
+    import jax
+    import jax.numpy as jnp
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["l1"])
+        logits = h @ p["l2"]
+        ce = -jnp.mean(jax.nn.log_softmax(logits)[
+            jnp.arange(logits.shape[0]), b["labels"]])
+        return ce, {}
+
+    params = {"l1": jax.random.normal(jax.random.PRNGKey(1), (16, 64)) * 0.2,
+              "l2": jax.random.normal(jax.random.PRNGKey(2), (64, 10)) * 0.2}
+    return loss_fn, params
+
+
+def _batch(t, M, b=16):
+    import jax
+    return {"x": jax.random.normal(jax.random.PRNGKey(10 + t), (M, b, 16)),
+            "labels": jax.random.randint(jax.random.PRNGKey(90 + t),
+                                         (M, b), 0, 10)}
+
+
+def _run(flavor, faults, M, steps):
+    """One measured run; returns final loss, wall time and the chaos
+    accounting from the backend summary."""
+    import jax
+
+    from repro.core.backend import make_backend
+    from repro.optim.optimizers import sgd
+
+    loss_fn, params = _problem()
+    be = make_backend("prod", "layup", M=M, loss_fn=loss_fn,
+                      optimizer=sgd(0.1), schedule=lambda t: 0.1,
+                      fb_ratio=2, update_delay=1, overlap=True, streams=3,
+                      wire="int8", measure_drift=False, faults=faults)
+    rng = jax.random.PRNGKey(0)
+    state = be.init(rng, params)
+    losses, wsums = [], []
+    t0 = time.perf_counter()
+    for t in range(steps):
+        state, m = be.step(state, _batch(t, M), rng)
+        losses.append(float(m["loss"]))
+        wsums.append(float(m["weight_sum"]))
+    wall = time.perf_counter() - t0
+    be.engine.close()
+    s = be.summary()
+    assert all(np.isfinite(losses)), (flavor, losses)
+    assert all(abs(w - 1.0) < 1e-3 for w in wsums), (
+        f"{flavor}: push-sum mass not conserved: {wsums}")
+    final = float(np.mean(losses[-3:]))
+    return {"final_loss": final, "wall_s": wall, "losses": losses,
+            "summary": s}
+
+
+def main(steps=None, quick=False):
+    import jax
+
+    section("Fault-tolerant lane under chaos injection (DESIGN.md §15)")
+    n_dev = len(jax.devices())
+    M = 4 if n_dev >= 4 else n_dev
+    steps = steps or (14 if quick else 28)
+
+    base = _run("fault-free", "", M, steps)
+    emit("fault.baseline.final_loss", base["wall_s"] / steps * 1e6,
+         f"final_loss={base['final_loss']:.4f};M={M};steps={steps}")
+
+    for flavor, spec in FLAVORS.items():
+        r = _run(flavor, spec, M, steps)
+        s = r["summary"]
+        delta = r["final_loss"] - base["final_loss"]
+        ratio = r["final_loss"] / base["final_loss"]
+        ttd = s.get("time_to_detect_steps", float("nan"))
+        ttr = s.get("time_to_resync_steps", float("nan"))
+        emit(f"fault.{flavor}.final_loss", r["wall_s"] / steps * 1e6,
+             f"final_loss={r['final_loss']:.4f};delta={delta:+.4f};"
+             f"ratio={ratio:.3f};faults={s['faults_injected']};"
+             f"degraded_rounds={s['rounds_degraded']};"
+             f"time_to_detect={ttd};time_to_resync={ttr};"
+             f"resyncs={s['resyncs']};nonfinite_skips="
+             f"{s.get('nonfinite_skips', 0)}")
+
+        # the acceptance gate: a fault-injected run must stay within the
+        # loss budget of the fault-free run
+        assert r["final_loss"] <= LOSS_BUDGET * base["final_loss"], (
+            f"{flavor}: degraded final loss {r['final_loss']:.4f} blew the "
+            f"{LOSS_BUDGET}x budget vs fault-free {base['final_loss']:.4f}")
+
+        if flavor == "crash":
+            assert s["resyncs"] == 1, s
+            assert s["peers_dead"] == 0, s  # recovered before the end
+            assert s.get("time_to_detect_steps", -1) > 0, s
+            assert s.get("time_to_resync_steps", -1) > 0, s
+            emit("fault.crash.time_to_detect",
+                 s["time_to_detect_steps"] * 1e6,
+                 f"steps={s['time_to_detect_steps']}")
+            emit("fault.crash.time_to_resync",
+                 s["time_to_resync_steps"] * 1e6,
+                 f"steps={s['time_to_resync_steps']}")
+        if flavor == "corrupt":
+            assert s["checksum_rejects"] >= 1, s
+            assert s["drops_detected"] >= 1, s
+            assert s["resends"] == (s["checksum_rejects"]
+                                    + s["drops_detected"]), s
+        if flavor == "hang":
+            assert s["hangs"] == 2, s
+            # a hang degrades wall-clock only — numerics are untouched,
+            # so the trajectory matches fault-free exactly
+            assert r["losses"] == base["losses"], (
+                "hang flavor changed numerics")
+
+    dump_json("fault_tolerance", prefix="fault.")
+    print("# fault-tolerance gates passed", flush=True)
+    return base
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--steps", type=int, default=None)
+    a = p.parse_args()
+    ensure_host_devices(4)
+    main(steps=a.steps, quick=a.quick)

@@ -57,12 +57,23 @@ def main():
                          "delay compensation g + λ·g⊙g⊙(θ_now − θ_stale) "
                          "applied to the popped stale gradient (0 = off, "
                          "DESIGN.md §14)")
+    ap.add_argument("--faults", type=str, default=None,
+                    help="prod backend: deterministic chaos plan, e.g. "
+                         "'crash:peer=1,step=50,recover=120' or "
+                         "'corrupt:step=30,group=0;hang:step=40,"
+                         "seconds=0.1'. Turns the fault-tolerant "
+                         "membership lane on (alive-gated push-sum, "
+                         "deadline-guarded gossip, donor re-sync — "
+                         "DESIGN.md §15) and prints the membership "
+                         "timeline + degraded-round accounting after "
+                         "the run. '' enables membership with no faults")
     args = ap.parse_args()
     if args.streams > 1 and not args.overlap:
         ap.error("--streams > 1 requires --overlap (DESIGN.md §13)")
-    if (args.wire != "param" or args.compensate) and args.backend != "prod":
-        ap.error("--wire / --compensate apply to the prod lane only "
-                 "(use --backend prod)")
+    if (args.wire != "param" or args.compensate
+            or args.faults is not None) and args.backend != "prod":
+        ap.error("--wire / --compensate / --faults apply to the prod lane "
+                 "only (use --backend prod)")
 
     if args.backend == "prod":
         # the prod lane needs one host device per worker; both env vars must
@@ -158,6 +169,9 @@ def run_prod(args, hw, ds, init, loss_fn, delays):
         extras += f", {args.wire} wire"
     if args.compensate:
         extras += f", delay compensation λ={args.compensate:g}"
+    if args.faults is not None:
+        from repro.chaos import FaultPlan
+        extras += (f", chaos: {FaultPlan.parse(args.faults).describe()}")
     print(f"prod decoupled lane: R={R}, D={D} "
           f"(double-buffered params, {D}-deep gradient FIFO, "
           f"{engine}{extras})\n")
@@ -166,7 +180,8 @@ def run_prod(args, hw, ds, init, loss_fn, delays):
                        fb_ratio=R, update_delay=D,
                        straggler_delays=delays, shifts=(1, 2, 4),
                        overlap=args.overlap, streams=args.streams,
-                       wire=args.wire, compensate=args.compensate)
+                       wire=args.wire, compensate=args.compensate,
+                       faults=args.faults)
     ev_slow = make_backend("event", "layup", M=M, hw=hw,
                            straggler_delays=delays, fb_ratio=R,
                            update_delay=D)
@@ -242,6 +257,32 @@ def run_prod(args, hw, ds, init, loss_fn, delays):
                   f"(2+ streams executing simultaneously)")
             print(f"  signal_wait_s            {s['signal_wait_s']:.3f}s "
                   f"(one-sided signal predicates, DESIGN.md §13)")
+
+    if args.faults is not None:
+        s = num.summary()
+        print("\nmembership timeline (fault-tolerant lane, DESIGN.md §15):")
+        events = num.chaos.health.events
+        if events:
+            for epoch, peer, old, new in events:
+                print(f"  step {epoch:4d}  peer {peer}  "
+                      f"{old:>7s} -> {new}")
+        else:
+            print("  (no membership transitions — all peers stayed ALIVE)")
+        print("degraded-round accounting:")
+        print(f"  faults injected          {int(s['faults_injected'])}")
+        print(f"  rounds degraded          {int(s['rounds_degraded'])} "
+              f"(gossip rounds with <{M} live peers or a wire event)")
+        print(f"  peers dead at exit       {int(s['peers_dead'])}")
+        print(f"  donor re-syncs           {int(s['resyncs'])}")
+        print(f"  nonfinite grads skipped  {s['nonfinite_skips']:g}")
+        if "time_to_detect_steps" in s:
+            print(f"  time to detect (steps)   "
+                  f"{s['time_to_detect_steps']:g}")
+        if "time_to_resync_steps" in s:
+            print(f"  time to re-sync (steps)  "
+                  f"{s['time_to_resync_steps']:g}")
+        print(f"  push-sum mass Σw         {float(s['weight_sum']):.6f} "
+              f"(conserved = 1.0 through crash/renorm/recovery)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""Fault injection + self-healing membership for the async training lane.
+
+``repro.chaos`` makes the PD-ASGD lane degrade gracefully instead of
+deadlocking (DESIGN.md §15): a deterministic :class:`FaultPlan` replayed
+by the :class:`ChaosController` at the host step boundary, a
+:class:`PeerHealth` membership state machine fed by per-peer liveness
+epochs, an alive-gated push-sum exchange that conserves Σw over the live
+peer set, a :class:`WireGuard` checksum/resend protocol on the int8
+gossip wire, and donor-based recovery (:func:`resync_peer`) that
+re-admits a crashed peer with damped mixing weight.
+
+Enable it end to end with ``ProdTrainerBackend(..., faults=...)`` or
+``make_step(..., faults=...)`` — ``faults`` is a spec string (see
+:mod:`repro.chaos.plan`) or a :class:`FaultPlan`; the empty plan turns
+the membership machinery on without injecting anything (bit-exact with
+the fault-free lane).
+"""
+from repro.chaos.controller import ChaosController
+from repro.chaos.guard import WireGuard, buffer_checksum, plane_checksum
+from repro.chaos.health import ALIVE, DEAD, SUSPECT, PeerHealth
+from repro.chaos.plan import Fault, FaultPlan, as_plan
+from repro.chaos.recovery import resync_peer
+
+__all__ = [
+    "ALIVE", "SUSPECT", "DEAD",
+    "ChaosController", "Fault", "FaultPlan", "PeerHealth", "WireGuard",
+    "as_plan", "buffer_checksum", "plane_checksum", "resync_peer",
+]

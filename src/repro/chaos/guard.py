@@ -1,0 +1,104 @@
+"""Per-round plane checksum guard for the quantized gossip wire.
+
+The int8 wire (DESIGN.md §14) ships per-group ``{q, scales}`` payloads
+every round. :class:`WireGuard` models the NIC-side integrity protocol at
+the round boundary: the sender *seals* each outgoing group buffer with a
+CRC32 over its raw bytes and keeps the pristine buffer as a resend cache;
+the receiver verifies the checksum and, on mismatch (corrupt) or a
+missing payload (drop), rejects the delivery and requests a resend —
+substituting the sender's sealed copy. Because the repaired payload IS
+the sealed original, a guarded round is bit-exact with an unguarded
+fault-free round by construction; what the guard adds is *detection*
+(``checksum_rejects`` / ``drops_detected`` / ``resends`` counters
+surfaced in ``summary()``) and a bounded time-to-detect of one round.
+
+This is a host-boundary emulation: the in-jit ``ppermute`` exchange has
+no per-payload host hook, so the guard runs on the materialized plane at
+the step boundary where the chaos controller injects wire faults
+(DESIGN.md §15).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+def buffer_checksum(buf) -> int:
+    """CRC32 over a buffer's raw bytes (host transfer for device arrays)."""
+    arr = np.asarray(buf)
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def plane_checksum(plane: Dict[str, object]) -> Dict[str, int]:
+    """Per-group CRC32 of a flat plane (the unit the wire ships)."""
+    return {name: buffer_checksum(buf) for name, buf in plane.items()}
+
+
+class WireGuard:
+    """Seal / verify / resend protocol for one plane per round."""
+
+    def __init__(self):
+        self.rounds_sealed = 0
+        self.checksum_rejects = 0
+        self.drops_detected = 0
+        self.resends = 0
+
+    def seal(self, plane: Dict[str, object]) -> Dict[str, int]:
+        """Checksum every outgoing group buffer (the resend cache is the
+        plane itself — the caller keeps the handles alive)."""
+        self.rounds_sealed += 1
+        return plane_checksum(plane)
+
+    def verify(self, seals: Dict[str, int], name: str,
+               payload: Optional[object]) -> bool:
+        """True iff ``payload`` arrived and matches its seal."""
+        if payload is None:
+            return False
+        return buffer_checksum(payload) == seals[name]
+
+    def round_trip(self, plane: Dict[str, object], *,
+                   corrupt_group: Optional[str] = None,
+                   drop_group: Optional[str] = None
+                   ) -> Tuple[Dict[str, object], Dict[str, str]]:
+        """One guarded wire round with optional injected faults.
+
+        Seals ``plane``, damages the in-transit copy of the named groups
+        (byte flip for ``corrupt_group``, absence for ``drop_group``),
+        verifies on receive, and repairs every rejected payload from the
+        sealed pristine buffer. Returns ``(delivered, events)`` where
+        ``delivered`` is bit-exact with ``plane`` (repair == resend of
+        the original) and ``events`` records what the guard saw per
+        damaged group (``"ok"`` / ``"checksum-reject"`` / ``"drop"``)."""
+        seals = self.seal(plane)
+        delivered: Dict[str, object] = {}
+        events: Dict[str, str] = {}
+        for name, buf in plane.items():
+            wire: Optional[object] = buf
+            if name == drop_group:
+                wire = None
+            elif name == corrupt_group:
+                damaged = np.array(np.asarray(buf))  # in-transit copy
+                flat = damaged.view(np.uint8).reshape(-1)
+                flat[0] ^= 0xFF
+                wire = damaged
+            if self.verify(seals, name, wire):
+                events[name] = "ok"
+                delivered[name] = buf  # verified: keep the device handle
+                continue
+            if wire is None:
+                self.drops_detected += 1
+                events[name] = "drop"
+            else:
+                self.checksum_rejects += 1
+                events[name] = "checksum-reject"
+            self.resends += 1
+            delivered[name] = buf  # resend: the sealed pristine buffer
+        return delivered, events
+
+    def counters(self) -> Dict[str, int]:
+        return {"rounds_sealed": self.rounds_sealed,
+                "checksum_rejects": self.checksum_rejects,
+                "drops_detected": self.drops_detected,
+                "resends": self.resends}

@@ -1,0 +1,71 @@
+"""Peer recovery: donor re-sync of a re-admitted worker's replica.
+
+A DEAD peer that comes back does NOT restart training from scratch: it
+re-syncs its whole per-worker replica row — flat parameter planes (read +
+write), optimizer state, version clocks, EF residual plane, the stale-θ
+reference and its gradient-FIFO lane — from a live *donor*, then re-enters
+mixing carrying an exact share of the donor's push-sum mass (DESIGN.md
+§15). The mass split is exact by construction::
+
+    w_peer  = damp * w_donor / 2
+    w_donor = w_donor - w_peer          # Σw unchanged, bitwise
+
+so the Σw-conservation invariant the membership lane maintains over the
+live set survives re-admission. ``damp`` < 1 (wired from the delay
+compensation strength λ when enabled) under-weights the re-admitted peer's
+first mixing rounds — push-sum's native form of the paper's staleness
+damping: its contributions fade in as its weight recovers toward 1/M
+through subsequent mixing rounds.
+
+All mutations are host-side (numpy round-trip, shardings restored with
+``jax.device_put``): recovery is a rare event, never part of the jitted
+step.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+
+def mutate_leaf(leaf, fn: Callable[[np.ndarray], None]):
+    """Round-trip one device array through host memory, apply ``fn`` in
+    place, and restore the original sharding."""
+    arr = np.array(leaf)
+    fn(arr)
+    return jax.device_put(arr, leaf.sharding)
+
+
+def _row_copy(tree, peer: int, donor: int, M: int):
+    """``leaf[peer] = leaf[donor]`` for every worker-stacked leaf."""
+    def one(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == M:
+            return mutate_leaf(x, lambda a: a.__setitem__(peer, a[donor]))
+        return x  # worker-shared leaf (e.g. FIFO stamps): nothing to sync
+    return jax.tree.map(one, tree)
+
+
+def resync_peer(state: Dict[str, object], peer: int, donor: int, M: int, *,
+                damp: float = 1.0) -> Dict[str, object]:
+    """Re-sync ``peer``'s replica from ``donor`` and split the donor's
+    push-sum mass. Returns the updated state dict (``alive`` is set by
+    the caller via the health tracker's mask)."""
+    if peer == donor:
+        raise ValueError("recovery donor must differ from the peer")
+    if not 0.0 < damp <= 1.0:
+        raise ValueError(f"recovery damp must be in (0, 1], got {damp}")
+    state = dict(state)
+    for key in ("read", "write", "opt", "versions", "resid", "theta"):
+        if key in state:
+            state[key] = _row_copy(state[key], peer, donor, M)
+    if "fifo" in state:
+        state["fifo"] = {"g": _row_copy(state["fifo"]["g"], peer, donor, M),
+                         "stamp": state["fifo"]["stamp"]}
+
+    def split(w):
+        share = np.asarray(w[donor] * 0.5 * damp, w.dtype)
+        w[donor] = w[donor] - share  # exact: Σw is the same two terms
+        w[peer] = share
+    state["w"] = mutate_leaf(state["w"], split)
+    return state

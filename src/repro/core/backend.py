@@ -51,7 +51,8 @@ _EVENT_ALIAS = {"layup-block": "gosgd", "layup-hypercube": "layup"}
 
 # the metric keys every numeric backend (sim and prod) surfaces in summary()
 _NUMERIC_SUMMARY_KEYS = ("loss", "disagreement", "staleness_mean",
-                         "update_staleness", "weight_sum")
+                         "update_staleness", "weight_sum",
+                         "nonfinite_skips", "peers_live")
 
 
 def _numeric_summary(steps: int, last: Dict[str, Any]) -> Dict[str, float]:
@@ -191,7 +192,17 @@ class ProdTrainerBackend:
     ``compensate=λ > 0`` applies the staleness-aware delay correction
     ``g + λ·g⊙g⊙(θ_now − θ_stale)`` in the update lane (DESIGN.md §14).
     Both require ``flat=True``; ``summary()`` reports ``wire_dtype`` and
-    ``wire_bytes_per_round``."""
+    ``wire_bytes_per_round``.
+
+    ``faults`` (a :class:`repro.chaos.FaultPlan` or spec string, DESIGN.md
+    §15) turns on the fault-tolerant membership lane: the state gains the
+    per-peer ``alive`` mask, every push-sum exchange is alive-gated, and a
+    :class:`repro.chaos.ChaosController` replays the plan at each host
+    step boundary — crash/hang/nan/corrupt/drop/recover. The empty plan
+    (``faults=""``) enables the machinery without injecting anything and
+    is bit-exact with ``faults=None``; ``summary()`` merges the
+    controller's fault accounting (``faults_injected``,
+    ``rounds_degraded``, ``peers_dead``, ``resyncs``, ...)."""
 
     kind = "prod"
 
@@ -202,7 +213,7 @@ class ProdTrainerBackend:
                  overlap: bool = False, flat: bool = True,
                  use_pallas: bool = False, publisher=None,
                  streams: int = 1, wire: str = "param",
-                 compensate: float = 0.0):
+                 compensate: float = 0.0, faults=None):
         import jax
         from repro.launch.mesh import num_workers
         from repro.launch.train import make_decoupled_backend_trainer
@@ -234,6 +245,19 @@ class ProdTrainerBackend:
         self.publisher = publisher
         self.wire = str(wire)
         self.compensate = float(compensate)
+        self.update_delay = int(update_delay)
+        self.membership = faults is not None
+        self._faults = faults
+        self.chaos = None
+        self._nonfinite_total = 0.0
+        if self.membership:
+            # build eagerly so a malformed plan fails here, not at step;
+            # init() rebuilds a fresh controller per run
+            from repro.chaos import ChaosController
+            self.chaos = ChaosController(
+                faults, M, update_delay=self.update_delay, wire=self.wire,
+                compensate=self.compensate)
+        membership = self.membership
         if streams > 1 and not overlap:
             raise ValueError("streams > 1 is a property of the stage-graph "
                              "pipeline; it requires overlap=True")
@@ -248,7 +272,8 @@ class ProdTrainerBackend:
                     straggler_delays=straggler_delays,
                     measure_drift=measure_drift, timeline=self.timeline,
                     flat=flat, use_pallas=use_pallas, publisher=publisher,
-                    streams=streams, wire=wire, compensate=compensate)
+                    streams=streams, wire=wire, compensate=compensate,
+                    membership=membership)
         else:
             self.timeline = None
             self._init_fn, self._step_fn, self._shifts, self._engine_box = \
@@ -258,7 +283,8 @@ class ProdTrainerBackend:
                     straggler_delays=straggler_delays,
                     measure_drift=measure_drift, flat=flat,
                     use_pallas=use_pallas, publisher=publisher,
-                    wire=wire, compensate=compensate)
+                    wire=wire, compensate=compensate,
+                    membership=membership)
         self._steps = 0
         self._last: Dict[str, Any] = {}
         # host-side gossip-shift schedule: deterministic per backend, no
@@ -303,14 +329,36 @@ class ProdTrainerBackend:
             self.engine.reset()
         elif self.timeline is not None:  # overlap=True, first init
             self.timeline.reset()
-        return self._init_fn(rng, params_single)
+        state = self._init_fn(rng, params_single)
+        if self.membership:
+            # fresh controller per run (fault replay + health state are
+            # per-run); hook it to the engine so host mutations can
+            # materialize stream futures, and to the SignalBoard so the
+            # liveness beats land where deadline-guarded waits look
+            from repro.chaos import ChaosController
+            self.chaos = ChaosController(
+                self._faults, self.M, update_delay=self.update_delay,
+                wire=self.wire, compensate=self.compensate)
+            self._nonfinite_total = 0.0
+            eng = self.engine
+            self.chaos.attach(engine=eng, board=getattr(eng, "board", None))
+        return state
 
     def step(self, state, batch, rng):
         # rng is part of the TrainerBackend protocol (the sim backend uses
         # it for peer selection); the prod ring's shift schedule is drawn
         # host-side so stepping never enqueues device work beyond the lanes
+        if self.chaos is not None:
+            state, batch = self.chaos.before_step(state, batch, self._steps)
         shift_idx = np.int32(self._shift_rng.integers(0, len(self._shifts)))
         state, metrics = self._step_fn(state, batch, self._steps, shift_idx)
+        if self.chaos is not None and "nonfinite_skips" in metrics:
+            # cumulative skip accounting for summary(): a transient NaN's
+            # per-step metric is 0 again by the end of the run. Chaos mode
+            # already does host work per step, so the forced resolve of
+            # this one scalar (blocks on the stream engine's update task)
+            # is acceptable here — and only here
+            self._nonfinite_total += float(metrics["nonfinite_skips"])
         self._steps += 1
         self._last = metrics
         return state, metrics
@@ -336,6 +384,10 @@ class ProdTrainerBackend:
                        streams=float(t["streams"]),
                        exec_overlap_s=t["exec_overlap_s"],
                        signal_wait_s=t["signal_wait_s"])
+        if self.chaos is not None:
+            out.update(self.chaos.summary())
+            # cumulative across the run, not the last step's transient
+            out["nonfinite_skips"] = self._nonfinite_total
         return out
 
 
@@ -360,8 +412,10 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
     repro.serving.PlanePublisher receiving the read plane each gossip
     round — the train-and-serve feed, DESIGN.md §12), wire ("param" —
     bit-exact plane exchange — or "int8": quantized gossip wire with
-    error-feedback residuals, DESIGN.md §14) and compensate (λ > 0 turns
-    on the staleness-aware delay correction in the update lane).
+    error-feedback residuals, DESIGN.md §14), compensate (λ > 0 turns
+    on the staleness-aware delay correction in the update lane) and
+    faults (a repro.chaos FaultPlan/spec string enabling the
+    fault-tolerant membership lane + chaos injection, DESIGN.md §15).
     """
     if kind == "sim":
         if loss_fn is None or optimizer is None or schedule is None:

@@ -348,7 +348,7 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
                   mix: Callable, *, squeeze_batch: bool = False,
                   active_fn: Optional[Callable] = None, flat: bool = False,
                   fused: bool = False, wire: str = "param",
-                  compensate: float = 0.0):
+                  compensate: float = 0.0, membership: bool = False):
     """Per-worker stage bodies. They compose the SAME lane closures as
     ``_decoupled_worker_fn``, split at the stage boundaries, so each
     stage's math is identical to the corresponding span of the monolithic
@@ -370,7 +370,15 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
     plane as an extra argument and returns its successor alongside the
     mixed plane; ``compensate > 0``: the update stage gains the stale-θ
     reference plane and returns this step's pre-update params as the
-    next θ_prev (DESIGN.md §14)."""
+    next θ_prev (DESIGN.md §14).
+
+    ``membership`` (DESIGN.md §15): both the update and the gossip stage
+    gain the per-peer ``alive`` mask (a never-donated passthrough the
+    engine threads from the chaos controller's state). Dead peers apply
+    no updates, keep their version clocks frozen, and the alive-gated
+    push-sum exchange conserves Σw over the live set. The update stage
+    additionally returns the psum'd nonfinite-skip count (always — the
+    guard is unconditional in :func:`backward_update_lane`)."""
     phi = jnp.asarray(send_fractions(part.num_groups))
     int8 = wire == "int8"
     comp = float(compensate) > 0.0
@@ -400,7 +408,15 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
             write_st, opt_st, grads_st = args[:3]
             rest = args[3:]
             fifo = ()
-        theta = _unstack(rest[0]) if comp else None
+        j = 0
+        theta = None
+        if comp:
+            theta = _unstack(rest[j])
+            j += 1
+        alive_st = None
+        if membership:
+            alive_st = rest[j]
+            j += 1
         step_idx = rest[-1]
         write = _unstack(write_st)
         opt_state = _unstack_opt(opt_st)
@@ -409,7 +425,24 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
         upd_out = upd(write, opt_state, grads, fifo, step_idx,
                       active=active, theta=theta) if comp else \
             upd(write, opt_state, grads, fifo, step_idx, active=active)
-        out, opt_state, fifo, upd_stale = upd_out[:4]
+        out, opt_state, fifo, upd_stale, skips = upd_out[:5]
+        if alive_st is not None:
+            # a dead peer applies no updates (frozen until donor re-sync).
+            # A SELECT, not an arithmetic `·a` folded into active: the
+            # multiply changes XLA's FMA contraction and breaks empty-plan
+            # bit-exactness; where(1.0, new, old) is the identity
+            # bit-for-bit. Fused: ``out`` is the delta plane (gate to 0);
+            # default: ``out`` is the updated write buffer (gate to prev).
+            a = alive_st[0]
+            out = (jax.tree.map(
+                       lambda u: jnp.where(a > 0.0, u, jnp.zeros_like(u)),
+                       out) if fused else
+                   jax.tree.map(lambda n, o: jnp.where(a > 0.0, n, o),
+                                out, write))
+        # skips differs per worker (each sanitizes its own grads); the
+        # monolithic body psums it, so the stage must too before the P()
+        # out spec replicates it
+        skips = jax.lax.psum(skips, worker_axes)
         # fused: ``out`` is the update-delta plane (write untouched);
         # default: ``out`` is the updated write buffer
         outs = [_restack(out), _restack(opt_state)]
@@ -420,8 +453,8 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
             # The write input is NOT donated, so jit materializes this
             # output as a fresh copy — donatable next step without
             # aliasing the live read plane.
-            outs += [_restack(upd_out[4])]
-        return tuple(outs) + (upd_stale,)
+            outs += [_restack(upd_out[5])]
+        return tuple(outs) + (upd_stale, skips)
 
     def gossip_body(*args):
         if fused:
@@ -433,30 +466,47 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
         resid_st = rest[0] if int8 else None
         if int8:
             rest = rest[1:]
-        w_st, versions, step_idx, shift_idx = rest
+        if membership:
+            w_st, versions, alive_st, step_idx, shift_idx = rest
+            a = alive_st[0]
+        else:
+            w_st, versions, step_idx, shift_idx = rest
+            a = None
         write = _unstack(write_st)
         w = w_st[0]
         resid = None
         if fused and int8:
             write, resid, w = mix(write, _unstack(resid_st),
-                                  _unstack(upd_st), w, shift_idx)
+                                  _unstack(upd_st), w, shift_idx, alive=a)
         elif fused:
-            write, w = mix(write, _unstack(upd_st), w, shift_idx)
+            write, w = mix(write, _unstack(upd_st), w, shift_idx, alive=a)
         elif int8:
-            write, resid, w = mix(write, _unstack(resid_st), w, shift_idx)
+            write, resid, w = mix(write, _unstack(resid_st), w, shift_idx,
+                                  alive=a)
         else:
-            write, w = mix(write, w, shift_idx)
+            write, w = mix(write, w, shift_idx, alive=a)
         if M > 1:
-            versions = stamp_groups(versions,
-                                    step_idx.astype(jnp.float32) + phi)
+            stamped = stamp_groups(versions,
+                                   step_idx.astype(jnp.float32) + phi)
+            # dead peers' clocks freeze: their replica stops advancing
+            versions = stamped if a is None else \
+                jnp.where(a > 0.0, stamped, versions)
         if int8:
             return _restack(write), _restack(resid), w[None], versions
         return _restack(write), w[None], versions
 
-    def metrics_fn(losses, w, versions, upd_stale, step_idx):
+    def metrics_fn(losses, w, versions, upd_stale, step_idx, skips=None,
+                   alive=None):
         per_worker = (losses[0] + sum(losses[1:])) / R
-        loss = jnp.mean(per_worker)
-        return _decoupled_metrics(w, versions, loss, upd_stale, step_idx)
+        if alive is None:
+            loss = jnp.mean(per_worker)
+        else:
+            # live-weighted: a dead peer's (frozen) loss must not drag
+            # the reported mean — same reduction as the monolithic
+            # membership body's psum(loss*a)/psum(a)
+            loss = jnp.sum(per_worker * alive) / jnp.sum(alive)
+        return _decoupled_metrics(w, versions, loss, upd_stale, step_idx,
+                                  skips=skips, alive=alive)
 
     return ([make_fwd_body(r) for r in range(R)], update_body, gossip_body,
             metrics_fn)
@@ -465,7 +515,7 @@ def _stage_bodies(part: LayerPartition, R: int, D: int, M: int, worker_axes,
 def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
                 shardings: Optional[Dict[str, Any]] = None,
                 fused: bool = False, wire: str = "param",
-                compensate: float = 0.0):
+                compensate: float = 0.0, membership: bool = False):
     """shard_map + jit each stage body into its executable.
 
     ``shardings`` (Model path) pins jit-level in/out shardings so the model
@@ -482,7 +532,12 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
     ``wire="int8"``: gossip threads the residual plane (donated — its
     successor replaces it); ``compensate > 0``: update threads the θ_prev
     plane (donated — the stage returns a fresh copy of this step's
-    pre-update params as the next θ_prev)."""
+    pre-update params as the next θ_prev).
+
+    ``membership``: the alive mask rides as an extra NEVER-donated input
+    positioned after each stage's donated argument span, so every
+    donation index formula below is unchanged. The update stage emits
+    the nonfinite-skip count as a second trailing scalar (always)."""
     pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
     fwd_bodies, update_body, gossip_body, metrics_fn = bodies
     int8 = wire == "int8"
@@ -496,11 +551,13 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
     fwd_sm += [sm(b, (pw, batch_specs), pw) for b in fwd_bodies[1:]]
     fifo_in = (pw, P()) if D > 0 else ()
     theta_in = (pw,) if comp else ()
-    update_sm = sm(update_body, (pw, pw) + fifo_in + (pw,) + theta_in + (P(),),
-                   (pw, pw) + fifo_in + theta_in + (P(),))
+    alive_in = (pw,) if membership else ()
+    update_sm = sm(update_body,
+                   (pw, pw) + fifo_in + (pw,) + theta_in + alive_in + (P(),),
+                   (pw, pw) + fifo_in + theta_in + (P(), P()))
     resid_in = (pw,) if int8 else ()
     gossip_in = (((pw, pw) if fused else (pw,)) + resid_in
-                 + (pw, pw, P(), P()))
+                 + (pw, pw) + alive_in + (P(), P()))
     gossip_sm = sm(gossip_body, gossip_in, (pw,) + resid_in + (pw, pw))
 
     def gossip_step(*args):
@@ -509,11 +566,20 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
         # ((l0 + sum(rest)) / R, then mean over workers) and the staleness
         # metrics read the freshly stamped clocks — identical math to
         # _decoupled_step_caller, one less dispatch per step
-        *plane_args, w_st, versions, losses, upd_stale, step_idx, \
-            shift_idx = args
-        outs = gossip_sm(*plane_args, w_st, versions, step_idx, shift_idx)
+        if membership:
+            *plane_args, w_st, versions, alive, losses, upd_stale, skips, \
+                step_idx, shift_idx = args
+        else:
+            *plane_args, w_st, versions, losses, upd_stale, skips, \
+                step_idx, shift_idx = args
+            alive = None
+        sm_args = (*plane_args, w_st, versions)
+        if membership:
+            sm_args += (alive,)
+        outs = gossip_sm(*sm_args, step_idx, shift_idx)
         versions = outs[-1]
-        metrics = metrics_fn(losses, outs[-2], versions, upd_stale, step_idx)
+        metrics = metrics_fn(losses, outs[-2], versions, upd_stale, step_idx,
+                             skips=skips, alive=alive)
         return outs[:-1] + (versions, metrics)
 
     n_upd = (5 if D > 0 else 3) + (1 if comp else 0)  # donate all but write
@@ -534,20 +600,21 @@ def _jit_stages(bodies, mesh, worker_axes, R: int, D: int, *, batch_specs,
                         out_shardings=s["lossvec"]) for f in fwd_sm[1:]]
         fifo_sh = (s["fifo_g"], s["scalar"]) if D > 0 else ()
         theta_sh = (s["p"],) if comp else ()
+        alive_sh = (s["w"],) if membership else ()
         update = jax.jit(
             update_sm,
             in_shardings=(s["p"], s["opt"]) + fifo_sh
-            + (s["grads"],) + theta_sh + (s["scalar"],),
+            + (s["grads"],) + theta_sh + alive_sh + (s["scalar"],),
             out_shardings=(s["upd"], s["opt"]) + fifo_sh + theta_sh
-            + (s["scalar"],),
+            + (s["scalar"], s["scalar"]),
             donate_argnums=donate_upd)
         R_loss = tuple([s["lossvec"]] * len(fwd_sm))
         resid_sh = (s["p"],) if int8 else ()
         gossip_p = ((s["p"], s["upd"]) if fused else (s["p"],)) + resid_sh
         gossip = jax.jit(
             gossip_step,
-            in_shardings=gossip_p + (s["w"], s["w"], R_loss, s["scalar"],
-                                     s["scalar"], s["scalar"]),
+            in_shardings=gossip_p + (s["w"], s["w"]) + alive_sh
+            + (R_loss, s["scalar"], s["scalar"], s["scalar"], s["scalar"]),
             out_shardings=(s["p"],) + resid_sh
             + (s["w"], s["w"], s["metrics"]),
             donate_argnums=donate_gossip)
@@ -558,7 +625,8 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
                       mix: Callable, metrics_fn: Callable,
                       shifts: Sequence[int], *, fused: bool = False,
                       shardings: Optional[Dict[str, Any]] = None,
-                      R: int = 1, wire: str = "param"):
+                      R: int = 1, wire: str = "param",
+                      membership: bool = False):
     """The gossip stage split at the layer-group boundary, for the stream
     engine (``streams > 1``): one jitted mix executable PER PLANE BUFFER
     plus one clock/metrics executable.
@@ -585,7 +653,11 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
 
     ``wire="int8"``: each mix gains its group's residual buffer and
     returns ``(mixed, resid)`` — the residual is donated alongside the
-    usual set (its successor replaces it)."""
+    usual set (its successor replaces it).
+
+    ``membership``: every mix and the clock gain the (never-donated)
+    alive mask just before ``shift_idx``; the clock also threads the
+    update stage's nonfinite-skip scalar into the metric fold."""
     pw = P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
     phi = jnp.asarray(send_fractions(part.num_groups))
@@ -596,48 +668,78 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
                          out_specs=out_specs, axis_names=set(worker_axes))
 
     def make_mix_body(name):
-        if fused and int8:
-            def mix_body(buf_st, upd_st, resid_st, w_st, shift_idx):
+        # the alive mask (membership) rides just before shift_idx so the
+        # donated-argument indices below stay put for every variant
+        def mix_body(*args):
+            if membership:
+                *head, alive_st, shift_idx = args
+                a = alive_st[0]
+            else:
+                *head, shift_idx = args
+                a = None
+            if fused and int8:
+                buf_st, upd_st, resid_st, w_st = head
                 mixed, resid, _ = mix({name: buf_st[0]}, {name: resid_st[0]},
-                                      {name: upd_st[0]}, w_st[0], shift_idx)
+                                      {name: upd_st[0]}, w_st[0], shift_idx,
+                                      alive=a)
                 return mixed[name][None], resid[name][None]
-        elif fused:
-            def mix_body(buf_st, upd_st, w_st, shift_idx):
+            if fused:
+                buf_st, upd_st, w_st = head
                 mixed, _ = mix({name: buf_st[0]}, {name: upd_st[0]},
-                               w_st[0], shift_idx)
+                               w_st[0], shift_idx, alive=a)
                 return mixed[name][None]
-        elif int8:
-            def mix_body(buf_st, resid_st, w_st, shift_idx):
+            if int8:
+                buf_st, resid_st, w_st = head
                 mixed, resid, _ = mix({name: buf_st[0]}, {name: resid_st[0]},
-                                      w_st[0], shift_idx)
+                                      w_st[0], shift_idx, alive=a)
                 return mixed[name][None], resid[name][None]
-        else:
-            def mix_body(buf_st, w_st, shift_idx):
-                mixed, _ = mix({name: buf_st[0]}, w_st[0], shift_idx)
-                return mixed[name][None]
+            buf_st, w_st = head
+            mixed, _ = mix({name: buf_st[0]}, w_st[0], shift_idx, alive=a)
+            return mixed[name][None]
         return mix_body
 
-    def clock_body(w_st, versions, step_idx, shift_idx):
+    def clock_body(*args):
+        if membership:
+            w_st, versions, alive_st, step_idx, shift_idx = args
+            al = alive_st[0]
+        else:
+            w_st, versions, step_idx, shift_idx = args
+            al = None
         w = w_st[0]
         if M > 1:
             # the same scalar push-sum hop the full-plane gossip stage
             # performs, on an empty plane — only the weight ships
-            _, w_half, rw = _ring_exchange({}, w, shift_idx, M, ax, shifts)
-            w = w_half + rw
-            versions = stamp_groups(versions,
-                                    step_idx.astype(jnp.float32) + phi)
+            _, w_keep, rw, _ = _ring_exchange({}, w, shift_idx, M, ax,
+                                              shifts, alive=al)
+            w = w_keep + rw
+            stamped = stamp_groups(versions,
+                                   step_idx.astype(jnp.float32) + phi)
+            versions = stamped if al is None else \
+                jnp.where(al > 0.0, stamped, versions)
         return w[None], versions
 
     resid_in = (pw,) if int8 else ()
-    mix_in = ((pw, pw) if fused else (pw,)) + resid_in + (pw, P())
+    alive_in = (pw,) if membership else ()
+    mix_in = (((pw, pw) if fused else (pw,)) + resid_in + (pw,)
+              + alive_in + (P(),))
     mix_out = (pw, pw) if int8 else pw
     mix_sms = {name: sm(make_mix_body(name), mix_in, mix_out)
                for name in part.group_sizes}
-    clock_sm = sm(clock_body, (pw, pw, P(), P()), (pw, pw))
+    clock_sm = sm(clock_body, (pw, pw) + alive_in + (P(), P()), (pw, pw))
 
-    def clock_step(w_st, versions, losses, upd_stale, step_idx, shift_idx):
-        w, versions = clock_sm(w_st, versions, step_idx, shift_idx)
-        metrics = metrics_fn(losses, w, versions, upd_stale, step_idx)
+    def clock_step(*args):
+        if membership:
+            w_st, versions, alive, losses, upd_stale, skips, step_idx, \
+                shift_idx = args
+            clock_args = (w_st, versions, alive, step_idx, shift_idx)
+        else:
+            w_st, versions, losses, upd_stale, skips, step_idx, \
+                shift_idx = args
+            alive = None
+            clock_args = (w_st, versions, step_idx, shift_idx)
+        w, versions = clock_sm(*clock_args)
+        metrics = metrics_fn(losses, w, versions, upd_stale, step_idx,
+                             skips=skips, alive=alive)
         return w, versions, metrics
 
     if fused:
@@ -652,10 +754,12 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
         s = shardings
         buf = lambda name: s["p"][name]
         mixes = {}
+        alive_sh = (s["w"],) if membership else ()
         for name, f in mix_sms.items():
             resid_sh = (buf(name),) if int8 else ()
             mix_sh = (((buf(name), s["upd"][name]) if fused
-                       else (buf(name),)) + resid_sh + (s["w"], s["scalar"]))
+                       else (buf(name),)) + resid_sh + (s["w"],)
+                      + alive_sh + (s["scalar"],))
             mix_out_sh = (buf(name), buf(name)) if int8 else buf(name)
             mixes[name] = jax.jit(f, in_shardings=mix_sh,
                                   out_shardings=mix_out_sh,
@@ -663,8 +767,8 @@ def _jit_group_stages(part: FlatPartition, mesh, worker_axes, M: int,
         R_loss = tuple([s["lossvec"]] * R)
         clock = jax.jit(
             clock_step,
-            in_shardings=(s["w"], s["w"], R_loss, s["scalar"], s["scalar"],
-                          s["scalar"]),
+            in_shardings=(s["w"], s["w"]) + alive_sh
+            + (R_loss, s["scalar"], s["scalar"], s["scalar"], s["scalar"]),
             out_shardings=(s["w"], s["w"], s["metrics"]),
             donate_argnums=(0, 1))
     return {"mix": mixes, "clock": clock}
@@ -773,6 +877,10 @@ class PipelineEngine:
         # the write buffer is consumed read-only.
         comp = self.compensate > 0.0
         int8 = self.wire == "int8"
+        # membership (chaos lane): the alive mask is a never-donated
+        # passthrough — the chaos controller mutates it host-side at
+        # fault events, every stage reads it
+        alive = state.get("alive")
         ev = tl.begin("update", t)
         upd_args = (state["write"], state["opt"])
         if self.D > 0:
@@ -780,6 +888,8 @@ class PipelineEngine:
         upd_args += (grads,)
         if comp:
             upd_args += (state["theta"],)
+        if alive is not None:
+            upd_args += (alive,)
         upd_outs = self._stages["update"](*upd_args, si)
         write, opt = upd_outs[0], upd_outs[1]
         i = 2
@@ -789,7 +899,7 @@ class PipelineEngine:
         if comp:
             theta = upd_outs[i]
             i += 1
-        upd_stale = upd_outs[i]
+        upd_stale, skips = upd_outs[i], upd_outs[i + 1]
         tl.commit(ev, upd_stale)
 
         # gossip lane (+ fused metric reduction): the mixed result becomes
@@ -802,9 +912,11 @@ class PipelineEngine:
         plane_args = (state["write"], write) if self.fused else (write,)
         if int8:
             plane_args += (state["resid"],)
+        gossip_args = plane_args + (state["w"], state["versions"])
+        if alive is not None:
+            gossip_args += (alive,)
         gossip_outs = self._stages["gossip"](
-            *plane_args, state["w"], state["versions"], tuple(losses),
-            upd_stale, si, sh)
+            *gossip_args, tuple(losses), upd_stale, skips, si, sh)
         if int8:
             mixed, resid, w, versions, metrics = gossip_outs
         else:
@@ -821,8 +933,8 @@ class PipelineEngine:
         # free (no copies); they are released on a later non-blocking
         # prune once the fence is ready.
         self._graveyard.append(
-            (metrics["loss"], (state, metrics, losses, upd_stale, grads,
-                               write)))
+            (metrics["loss"], (state, metrics, losses, upd_stale, skips,
+                               grads, write)))
 
         new_state = {"read": mixed, "write": mixed, "opt": opt, "w": w,
                      "versions": versions}
@@ -832,6 +944,8 @@ class PipelineEngine:
             new_state["resid"] = resid
         if comp:
             new_state["theta"] = theta
+        if alive is not None:
+            new_state["alive"] = alive
         return new_state, metrics
 
     def reset(self) -> None:
@@ -891,7 +1005,8 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                   flat: bool = True,
                                   use_pallas: bool = False,
                                   streams: int = 1, wire: str = "param",
-                                  compensate: float = 0.0) -> PipelineStep:
+                                  compensate: float = 0.0,
+                                  membership: bool = False) -> PipelineStep:
     """The decoupled LayUp lane as a stage-graph pipeline on the real mesh —
     same sharding/abstract setup as ``make_layup_decoupled_train_step``,
     split into separately jitted stages. ``flat=True`` (default): the
@@ -903,7 +1018,9 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
     numerics, measured *execution* overlap; requires ``flat=True``.
     ``wire="int8"`` quantizes the gossip wire with error-feedback
     residuals; ``compensate > 0`` enables the staleness-aware delay
-    correction in the update stage (DESIGN.md §14)."""
+    correction in the update stage (DESIGN.md §14). ``membership`` adds
+    the per-peer alive mask to the state and alive-gates every exchange
+    (fault-tolerant lane, DESIGN.md §15)."""
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
@@ -929,7 +1046,7 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
     if streams > 1 and not flat:
         raise ValueError("streams > 1 ships the flat group plane across "
                          "the stream boundary; it requires flat=True")
-    _check_wire(wire, compensate, flat)
+    _check_wire(wire, compensate, flat, membership)
     int8 = wire == "int8"
     comp = float(compensate) > 0.0
     part = FlatPartition(model.abstract_params())
@@ -946,7 +1063,7 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
         mix = gossip_lane_legacy(part, M, ax, shifts)
     bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd, mix,
                            flat=flat, fused=use_pallas, wire=wire,
-                           compensate=compensate)
+                           compensate=compensate, membership=membership)
 
     pw = P(ax)
     abstract_params = model.abstract_params()
@@ -980,18 +1097,22 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                 mesh, P(s.spec[0], None, *tuple(s.spec)[1:])), p_sh)
     b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
                               preset=preset)
+    metrics_sh = {"loss": scalar, "update_staleness": scalar,
+                  "layer_staleness": scalar, "staleness_mean": scalar,
+                  "weight_sum": scalar, "nonfinite_skips": scalar}
+    if membership:
+        metrics_sh["peers_live"] = scalar
     shardings = {
         "p": p_sh, "opt": opt_sh, "w": w_sh, "scalar": scalar, "batch": b_sh,
         "lossvec": w_sh, "grads": p_sh, "upd": p_sh,
         "fifo_g": fifo_g_sh,
-        "metrics": {"loss": scalar, "update_staleness": scalar,
-                    "layer_staleness": scalar, "staleness_mean": scalar,
-                    "weight_sum": scalar},
+        "metrics": metrics_sh,
     }
     batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax), batch_abs)
     stages = _jit_stages(bodies, mesh, worker_axes, R, D,
                          batch_specs=batch_specs_sm, shardings=shardings,
-                         fused=use_pallas, wire=wire, compensate=compensate)
+                         fused=use_pallas, wire=wire, compensate=compensate,
+                         membership=membership)
 
     i32 = jax.ShapeDtypeStruct((), jnp.int32)
     f32 = jax.ShapeDtypeStruct((), jnp.float32)
@@ -1008,33 +1129,36 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
         upd_abs = jax.tree.map(stack, upd_abs)
     resid_abs = (stacked_params,) if int8 else ()
     theta_abs = (stacked_params,) if comp else ()
+    alive_abs = (w_abs,) if membership else ()
     gossip_plane_abs = (((stacked_params, upd_abs) if use_pallas
                         else (stacked_params,)) + resid_abs)
     abstract_args = {
         "fwd": (stacked_params, batch_abs),
         "update": (stacked_params, stacked_opt) + fifo_abs
-                  + (stacked_params,) + theta_abs + (i32,),
-        "gossip": gossip_plane_abs + (w_abs, v_abs,
-                                      tuple([lossvec_abs] * R),
-                                      f32, i32, i32),
+                  + (stacked_params,) + theta_abs + alive_abs + (i32,),
+        "gossip": gossip_plane_abs + (w_abs, v_abs) + alive_abs
+                  + (tuple([lossvec_abs] * R), f32, f32, i32, i32),
     }
     tags = (f"{', pallas' if use_pallas else ''}"
             f"{', wire=int8' if int8 else ''}"
-            f"{f', comp={float(compensate):g}' if comp else ''}")
+            f"{f', comp={float(compensate):g}' if comp else ''}"
+            f"{', membership' if membership else ''}")
     if streams > 1:
         from repro.launch.streams import StreamEngine
         group_stages = _jit_group_stages(part, mesh, worker_axes, M, mix,
                                          bodies[3], shifts,
                                          fused=use_pallas,
                                          shardings=shardings, R=R,
-                                         wire=wire)
-        clock_abs = (w_abs, v_abs, tuple([lossvec_abs] * R), f32, i32, i32)
+                                         wire=wire, membership=membership)
+        clock_abs = ((w_abs, v_abs) + alive_abs
+                     + (tuple([lossvec_abs] * R), f32, f32, i32, i32))
         for name in part.group_sizes:
             buf_abs = ((stacked_params[name], upd_abs[name]) if use_pallas
                        else (stacked_params[name],))
             if int8:
                 buf_abs = buf_abs + (stacked_params[name],)
-            abstract_args[f"mix:{name}"] = buf_abs + (w_abs, i32)
+            abstract_args[f"mix:{name}"] = (buf_abs + (w_abs,) + alive_abs
+                                            + (i32,))
         abstract_args["clock"] = clock_abs
         engine = StreamEngine(
             R=R, D=D, M=M, group_names=list(part.group_sizes),
@@ -1055,9 +1179,16 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
             abstract_args=abstract_args)
 
     def init_state(params_stacked):
-        return make_decoupled_state(params_stacked, optimizer,
-                                    update_delay=D, part=part, flat=flat,
-                                    wire=wire, compensate=compensate)
+        state = make_decoupled_state(params_stacked, optimizer,
+                                     update_delay=D, part=part, flat=flat,
+                                     wire=wire, compensate=compensate,
+                                     membership=membership)
+        if membership:
+            # the alive mask is a passthrough (never a stage OUTPUT), so
+            # unlike w it would keep its eager default-device placement
+            # forever — commit it to the mesh like the stage inputs expect
+            state["alive"] = jax.device_put(state["alive"], w_sh)
+        return state
 
     return PipelineStep(engine, init_state, engine.describe)
 
@@ -1073,7 +1204,8 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                   use_pallas: bool = False,
                                   publisher=None,
                                   streams: int = 1, wire: str = "param",
-                                  compensate: float = 0.0):
+                                  compensate: float = 0.0,
+                                  membership: bool = False):
     """Pipeline-engine counterpart of ``make_decoupled_backend_trainer``:
     same generic pytree + loss_fn contract, same sim-layout batches, but
     the step is the stage-graph engine instead of one jitted program.
@@ -1126,7 +1258,7 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                          "the stream engine's read plane is a future, not "
                          "a stable handle to publish (serve from a "
                          "streams=1 engine, or materialize snapshots)")
-    _check_wire(wire, compensate, flat)
+    _check_wire(wire, compensate, flat, membership)
 
     def build(params_single):
         part = FlatPartition(params_single)
@@ -1144,19 +1276,21 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
         bodies = _stage_bodies(part, R, D, M, worker_axes, fwd_slices, upd,
                                mix, squeeze_batch=True, active_fn=active_fn,
                                flat=flat, fused=use_pallas, wire=wire,
-                               compensate=compensate)
+                               compensate=compensate, membership=membership)
         stages = _jit_stages(bodies, mesh, worker_axes, R, D, batch_specs=pw,
                              fused=use_pallas, wire=wire,
-                             compensate=compensate)
+                             compensate=compensate, membership=membership)
         tags = (f"{', pallas' if use_pallas else ''}"
                 f"{', wire=int8' if wire == 'int8' else ''}"
-                f"{f', comp={float(compensate):g}' if compensate else ''}")
+                f"{f', comp={float(compensate):g}' if compensate else ''}"
+                f"{', membership' if membership else ''}")
         if streams > 1:
             from repro.launch.streams import StreamEngine
             group_stages = _jit_group_stages(part, mesh, worker_axes, M,
                                              mix, bodies[3], shifts,
                                              fused=use_pallas, R=R,
-                                             wire=wire)
+                                             wire=wire,
+                                             membership=membership)
             engine = StreamEngine(
                 R=R, D=D, M=M, group_names=list(part.group_sizes),
                 stages=stages, group_stages=group_stages,
@@ -1183,9 +1317,16 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
             if measure_drift:
                 from repro.core.api import disagreement
                 box["drift"] = jax.jit(disagreement)
-        return make_decoupled_state(stacked, optimizer, update_delay=D,
-                                    part=box["part"], flat=flat,
-                                    wire=wire, compensate=compensate)
+        state = make_decoupled_state(stacked, optimizer, update_delay=D,
+                                     part=box["part"], flat=flat,
+                                     wire=wire, compensate=compensate,
+                                     membership=membership)
+        if membership:
+            # passthrough leaf: commit to the mesh once (see the Model
+            # path's init_state) — no stage output ever re-shards it
+            state["alive"] = jax.device_put(
+                state["alive"], NamedSharding(mesh, pw))
+        return state
 
     def step_fn(state, batch, step_idx, shift_idx):
         if "engine" not in box:

@@ -109,6 +109,7 @@ class SignalBoard:
         self._keep = int(keep)
         self._signals: Dict[str, int] = {}
         self._payloads: Dict[str, Dict[int, Any]] = {}
+        self._poison: Optional[BaseException] = None
 
     def put_signal(self, slot: str, signal: int, payload: Any = None) -> None:
         """Push ``payload`` into ``slot`` as version ``signal`` and flip
@@ -139,11 +140,19 @@ class SignalBoard:
         deadline = time.monotonic() + timeout
         with self._cv:
             while self._signals.get(slot, -(1 << 62)) < value:
+                if self._poison is not None:
+                    raise RuntimeError(
+                        f"signal board poisoned while waiting on "
+                        f"{slot!r} >= {value}") from self._poison
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self._cv.wait(remaining):
                     raise TimeoutError(
                         f"signal_wait_until({slot!r}, >= {value}) timed "
                         f"out at {self._signals.get(slot)!r}")
+            if self._poison is not None:
+                raise RuntimeError(
+                    f"signal board poisoned while waiting on "
+                    f"{slot!r} >= {value}") from self._poison
             d = self._payloads.get(slot, {})
             if value not in d:
                 raise KeyError(
@@ -158,11 +167,23 @@ class SignalBoard:
         with self._cv:
             return self._signals.get(slot)
 
+    def poison(self, exc: BaseException) -> None:
+        """Fail-fast kill switch: wake every waiter and make all current
+        and future ``wait_until`` calls raise (chained to ``exc``). A
+        task failure on one stream must not leave tasks on OTHER streams
+        blocked on signals that will never arrive — without this, a
+        poisoned pipeline strands daemon threads in 600 s timeouts."""
+        with self._cv:
+            if self._poison is None:
+                self._poison = exc
+            self._cv.notify_all()
+
     def reset(self) -> None:
-        """Drop every slot (fresh run)."""
+        """Drop every slot and clear any poison (fresh run)."""
         with self._cv:
             self._signals.clear()
             self._payloads.clear()
+            self._poison = None
             self._cv.notify_all()
 
 
@@ -259,10 +280,13 @@ class Stream:
     _SHUTDOWN = object()
 
     def __init__(self, name: str, timeline, *, maxsize: int = 0,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 on_error: Optional[Callable[[StreamTask,
+                                              BaseException], None]] = None):
         self.name = name
         self.timeline = timeline
         self._clock = clock
+        self.on_error = on_error
         self._q: "queue.Queue" = queue.Queue(maxsize)
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"stream:{name}")
@@ -298,6 +322,11 @@ class Stream:
         except BaseException as e:  # surfaced at result()/wait time
             task._exc = e
             t_done = self._clock()
+            if self.on_error is not None:
+                try:
+                    self.on_error(task, e)
+                except Exception:
+                    pass  # the original failure must still surface
         if self.timeline is not None:
             self.timeline.record_exec(
                 task.stage, task.step, stream=self.name,
@@ -369,8 +398,12 @@ class StreamEngine:
         n = min(int(n_streams), self.R + 2)
         G = len(self.group_names)
         per_step_gossip = G + 2  # mixes + clock (+ the odd aux task)
+        # any task failure poisons the board: tasks on OTHER streams
+        # blocked in wait_until wake and fail instead of stranding their
+        # daemon thread in a 600 s timeout (drained by finalize/close)
         mk = lambda name, per_step: Stream(
-            name, timeline, maxsize=max(4, self.max_inflight_steps * per_step))
+            name, timeline, maxsize=max(4, self.max_inflight_steps * per_step),
+            on_error=lambda task, exc: self.board.poison(exc))
         self._gossip = mk("gossip", per_step_gossip)
         if n >= 3:
             self._update = mk("update", 2)
@@ -453,6 +486,9 @@ class StreamEngine:
         # signal value t — the one-sided put the mixes wait on
         opt_ref, fifo_refs = state["opt"], state.get("fifo")
         theta_ref = state.get("theta")
+        # membership (chaos lane): never-donated alive-mask passthrough,
+        # mutated host-side by the chaos controller at fault events
+        alive_ref = state.get("alive")
         upd_fn = self._stages["update"]
 
         def upd_wait():
@@ -466,6 +502,8 @@ class StreamEngine:
                 # θ_prev plane: produced by the previous step's update on
                 # THIS stream (FIFO) — safe to resolve and donate here
                 args += [resolve_refs(theta_ref)]
+            if alive_ref is not None:
+                args += [resolve_refs(alive_ref)]
             return tuple(args) + (si,)
 
         def upd_signals(out):
@@ -491,7 +529,8 @@ class StreamEngine:
             theta_idx = 4 if self.D > 0 else 2
             new_theta = TaskOutput(upd_task,
                                    lambda r, i=theta_idx: r[i])
-        upd_stale = TaskOutput(upd_task, lambda r: r[-1])
+        upd_stale = TaskOutput(upd_task, lambda r: r[-2])
+        skips = TaskOutput(upd_task, lambda r: r[-1])
 
         # per-group gossip mixes: each waits on ITS group's upd signal
         # only — a late group delays its own mix, nothing else — then
@@ -503,6 +542,12 @@ class StreamEngine:
             mix_fn = self._group_stages["mix"][g]
             resid_ref = resid_refs[g] if int8 else None
 
+            def mix_tail():
+                # never-donated alive mask rides just before shift_idx
+                if alive_ref is not None:
+                    return (resolve_refs(alive_ref), sh)
+                return (sh,)
+
             if self.fused:
                 def mix_wait(g=g, resid_ref=resid_ref):
                     # fused kernel contract: mix reads the LIVE plane
@@ -513,15 +558,15 @@ class StreamEngine:
                         # EF residual: previous mix of THIS group on THIS
                         # stream produced it (FIFO) — resolve + donate
                         return (live, delta, resolve_refs(resid_ref),
-                                resolve_refs(w_ref), sh)
-                    return (live, delta, resolve_refs(w_ref), sh)
+                                resolve_refs(w_ref)) + mix_tail()
+                    return (live, delta, resolve_refs(w_ref)) + mix_tail()
             else:
                 def mix_wait(g=g, resid_ref=resid_ref):
                     fresh = board.wait_until(self._upd_slot(g), t)
                     if int8:
                         return (fresh, resolve_refs(resid_ref),
-                                resolve_refs(w_ref), sh)
-                    return (fresh, resolve_refs(w_ref), sh)
+                                resolve_refs(w_ref)) + mix_tail()
+                    return (fresh, resolve_refs(w_ref)) + mix_tail()
 
             def mix_signals(out, g=g):
                 board.put_signal(self._plane_slot(g), t + 1,
@@ -548,17 +593,22 @@ class StreamEngine:
         clock_fn = self._group_stages["clock"]
 
         def clock_wait():
-            return (resolve_refs(w_ref), resolve_refs(versions_ref),
-                    tuple(l.result() for l in losses),
-                    upd_stale.result(), si, sh)
+            head = (resolve_refs(w_ref), resolve_refs(versions_ref))
+            if alive_ref is not None:
+                head += (resolve_refs(alive_ref),)
+            return head + (tuple(l.result() for l in losses),
+                           upd_stale.result(), skips.result(), si, sh)
 
         clock_task = self._track(StreamTask(
             "clock", t, wait_fn=clock_wait, run_fn=clock_fn))
         self._gossip.submit(clock_task)
         new_w = TaskOutput(clock_task, lambda r: r[0])
         new_versions = TaskOutput(clock_task, lambda r: r[1])
-        metric_keys = ("loss", "update_staleness", "weight_sum",
-                       "layer_staleness", "staleness_mean")
+        metric_keys = ["loss", "update_staleness", "weight_sum",
+                       "layer_staleness", "staleness_mean",
+                       "nonfinite_skips"]
+        if alive_ref is not None:
+            metric_keys.append("peers_live")
         metrics = {k: TaskOutput(clock_task,
                                  (lambda r, k=k: r[2][k]))
                    for k in metric_keys}
@@ -571,6 +621,8 @@ class StreamEngine:
             new_state["resid"] = new_resid
         if comp:
             new_state["theta"] = new_theta
+        if alive_ref is not None:
+            new_state["alive"] = alive_ref
         return new_state, metrics
 
     def submit_aux(self, stage: str, fn: Callable, arg_refs: tuple,
@@ -592,10 +644,23 @@ class StreamEngine:
         return resolve_refs(tree)
 
     def finalize(self) -> None:
-        """Block until every submitted task has executed."""
+        """Drain EVERY submitted task, then re-raise the first failure.
+
+        Raising on the first failed task would leave later tasks (other
+        streams) undrained and their threads potentially blocked on
+        signals the failed task never produced; the board poison wakes
+        them, and the full drain here guarantees every thread is idle
+        before the exception surfaces."""
+        first: Optional[BaseException] = None
         for task in self._tasks:
-            task.result()
+            try:
+                task.result()
+            except BaseException as e:
+                if first is None:
+                    first = e
         self._prune()
+        if first is not None:
+            raise first
 
     def reset(self) -> None:
         """Fresh measured run: drain the streams, clear the board and the
@@ -606,13 +671,16 @@ class StreamEngine:
 
     def close(self) -> None:
         """Shut the stream threads down (tests; daemon threads otherwise
-        die with the process)."""
-        self.finalize()
-        seen = set()
-        for s in [self._gossip, self._update, *self._fwd]:
-            if id(s) not in seen:
-                seen.add(id(s))
-                s.close()
+        die with the process). The streams are closed even when the drain
+        raises — a poisoned pipeline must not leak its threads."""
+        try:
+            self.finalize()
+        finally:
+            seen = set()
+            for s in [self._gossip, self._update, *self._fwd]:
+                if id(s) not in seen:
+                    seen.add(id(s))
+                    s.close()
 
     def lower(self) -> Dict[str, Any]:
         """Lower every stage executable against its abstract args (Model

@@ -94,10 +94,15 @@ from repro.optim.optimizers import Optimizer, apply_updates
 
 @dataclass
 class ProdStep:
-    """A lowered-able step: ``fn`` jitted with shardings, plus abstract args."""
+    """A lowered-able step: ``fn`` jitted with shardings, plus abstract args.
+
+    ``chaos`` (set by ``make_step(faults=)``) is the
+    :class:`repro.chaos.ChaosController` driving the step's fault plan —
+    callers apply ``chaos.before_step`` at each host step boundary."""
     fn: Any
     abstract_args: Tuple[Any, ...]
     describe: str = ""
+    chaos: Any = None
 
     def lower(self):
         return self.fn.lower(*self.abstract_args)
@@ -257,7 +262,11 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
     """Delayed update application on the write buffer.
 
     Returns ``upd(params, opt_state, grads, fifo, step_idx) ->
-    (params, opt_state, fifo, update_staleness)``. With ``update_delay=D > 0``
+    (params, opt_state, fifo, update_staleness, nonfinite_skips)``.
+    ``nonfinite_skips`` counts the layer groups whose delayed gradient
+    arrived NaN/Inf this step: those groups' updates are skipped (params
+    untouched, optimizer state fed zeros — DESIGN.md §15) instead of
+    poisoning the plane. With ``update_delay=D > 0``
     gradients flow through a D-deep FIFO (``{"g": (D, ...) tree in the
     params' dtypes, "stamp": (D,) f32}``): the gradient applied at step
     ``t`` was generated
@@ -281,9 +290,10 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
     version clocks as ``s·(θ_now − θ_prev)`` — ``s`` the measured update
     staleness and ``θ_prev`` ONE carried plane buffer (the previous
     step's pre-update params), not a D-deep tree copy. The lane then
-    takes a ``theta`` kwarg and returns a 5-tuple with ``theta_new``
-    (this step's pre-update params) appended. At D == 0 the stamp-driven
-    staleness is 0 and the correction self-gates to a no-op."""
+    takes a ``theta`` kwarg and appends ``theta_new`` (this step's
+    pre-update params) after ``nonfinite_skips``. At D == 0 the
+    stamp-driven staleness is 0 and the correction self-gates to a
+    no-op."""
     D = int(update_delay)
     if D < 0:
         raise ValueError("update_delay must be >= 0")
@@ -310,6 +320,20 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
                                          step_f - applied_stamp, 0.0)
         else:
             update_staleness = jnp.zeros((), jnp.float32)
+        # nonfinite guard (DESIGN.md §15): a NaN/Inf gradient for a layer
+        # group is skipped, not applied — sanitized to zero BEFORE the
+        # optimizer (where(ok, g, 0), never g·0: Inf·0 is NaN — so the
+        # optimizer state stays finite) and its update masked below so the
+        # group's params are untouched. For finite gradients both steps
+        # are bitwise identity (select-true, u·1.0). In flat mode leaves
+        # ARE layer groups, so `skips` counts skipped (worker, group)
+        # pairs.
+        ok = jax.tree.map(lambda g: jnp.isfinite(g).all(), grads)
+        skips = sum(1.0 - o.astype(jnp.float32)
+                    for o in jax.tree.leaves(ok))
+        skips = jnp.asarray(skips, jnp.float32)
+        grads = jax.tree.map(lambda g, o: jnp.where(o, g, jnp.zeros_like(g)),
+                             grads, ok)
         if lam > 0.0:
             drift = update_staleness  # θ_now − θ_stale ≈ s·(θ_now − θ_prev)
 
@@ -322,13 +346,17 @@ def backward_update_lane(optimizer: Optimizer, schedule: Callable, *,
             grads = jax.tree.map(comp, grads, params, theta)
         lr = schedule(step_idx)
         updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        # mask the skipped groups' updates too: a sanitized-to-zero grad
+        # can still move params through momentum — skip means UNCHANGED
+        updates = jax.tree.map(lambda u, o: u * o.astype(u.dtype),
+                               updates, ok)
         if active is not None:
             updates = jax.tree.map(lambda u: u * active.astype(u.dtype),
                                    updates)
         out = updates if not apply else apply_updates(params, updates)
         if lam > 0.0:
-            return out, opt_state, fifo, update_staleness, params
-        return out, opt_state, fifo, update_staleness
+            return out, opt_state, fifo, update_staleness, skips, params
+        return out, opt_state, fifo, update_staleness, skips
 
     return upd
 
@@ -361,26 +389,53 @@ def _resolve_interpret(interpret: Optional[bool]) -> bool:
     return bool(interpret)
 
 
-def _ring_exchange(plane, w, shift_idx, M: int, ax, shifts: Sequence[int]):
+def _ring_exchange(plane, w, shift_idx, M: int, ax, shifts: Sequence[int],
+                   alive=None):
     """One push-sum ring hop on the flat plane: ship every group buffer
     (in its own dtype — the wire cost is exactly ``plane_nbytes`` per
-    peer) plus the halved push-sum weight. Returns (recv, w_half, rw)."""
+    peer) plus the halved push-sum weight.
+
+    Returns ``(recv, w_keep, rw, use)``: the received buffers, the local
+    share of the push-sum weight after the hop, the received weight
+    share, and a 0/1 gate (``None`` without membership) that is 1 only
+    when BOTH this worker and the hop's source are alive — callers must
+    fall back to their own buffer when it is 0.
+
+    ``alive`` (a per-worker 0/1 f32 scalar, DESIGN.md §15) gates the
+    exchange for fault-tolerant membership: mass is sent only when both
+    endpoints are alive (``w_sent = w/2 · a_self · a_tgt`` — a dead
+    target would absorb it, leaking Σw out of the live set; a dead
+    sender must not inject its stale plane), so Σw over the live peers
+    is conserved exactly every round (``w_keep + w_sent`` re-adds the
+    identical f32 terms). With every peer alive the gating multiplies by
+    1.0 throughout — bitwise identical to the ungated hop."""
     def branch(s):
         perm = [(i, (i + s) % M) for i in range(M)]
+        inv = [(i, (i - s) % M) for i in range(M)]
 
         def run(args):
-            plane, w_half = args
+            plane, w = args
+            if alive is None:
+                w_sent = w * 0.5
+                w_keep = w * 0.5
+            else:
+                a_tgt = jax.lax.ppermute(alive, ax, inv)
+                w_sent = w * 0.5 * (alive * a_tgt)
+                w_keep = w - w_sent
             recv = {name: jax.lax.ppermute(v, ax, perm)
                     for name, v in plane.items()}
-            rw = jax.lax.ppermute(w_half, ax, perm)
-            return recv, rw
+            rw = jax.lax.ppermute(w_sent, ax, perm)
+            # the received w_sent already carries the sender's gating;
+            # `use` re-derives it receiver-side (a_src · a_self) as the
+            # fall-back-to-own-buffer predicate
+            use = (None if alive is None
+                   else jax.lax.ppermute(alive, ax, perm) * alive)
+            return recv, w_keep, rw, use
 
         return run
 
-    w_half = w * 0.5
-    recv, rw = jax.lax.switch(shift_idx, [branch(s) for s in shifts],
-                              (plane, w_half))
-    return recv, w_half, rw
+    return jax.lax.switch(shift_idx, [branch(s) for s in shifts],
+                          (plane, w))
 
 
 def gossip_plane_lane(part: FlatPartition, M: int, ax,
@@ -409,7 +464,8 @@ def gossip_plane_lane(part: FlatPartition, M: int, ax,
     interpret = _resolve_interpret(interpret)
     if wire == "int8":
         if M == 1:
-            return lambda plane, resid, w, shift_idx: (plane, resid, w)
+            return lambda plane, resid, w, shift_idx, alive=None: (
+                plane, resid, w)
         if use_pallas:
             qfn = lambda x, r: _quantize_plane_kernel(
                 x, r, interpret=interpret)
@@ -419,41 +475,52 @@ def gossip_plane_lane(part: FlatPartition, M: int, ax,
             qfn = quantize_plane_ref
             dqfn = lambda x, q, s, a, b: dequant_mix_ref(x, q, s, None, a, b)
 
-        def mix_q(plane, resid, w, shift_idx):
+        def mix_q(plane, resid, w, shift_idx, alive=None):
             payload, new_resid = {}, {}
             for name, mine in plane.items():
                 q, s, r2 = qfn(mine, resid[name])
                 payload[f"q:{name}"] = q
                 payload[f"s:{name}"] = s
                 new_resid[name] = r2
-            recv, w_half, rw = _ring_exchange(payload, w, shift_idx, M, ax,
-                                              shifts)
-            new_w = w_half + rw
-            alpha, beta = w_half / new_w, rw / new_w
-            mixed = {name: dqfn(mine, recv[f"q:{name}"], recv[f"s:{name}"],
-                                alpha, beta)
-                     for name, mine in plane.items()}
+            recv, w_keep, rw, use = _ring_exchange(payload, w, shift_idx,
+                                                   M, ax, shifts, alive)
+            new_w = w_keep + rw
+            # membership: a dead peer's weight is 0 on both sides of the
+            # hop — guard the 0/0 (its buffers are never read again)
+            denom = new_w if use is None else jnp.where(new_w > 0.0,
+                                                        new_w, 1.0)
+            alpha, beta = w_keep / denom, rw / denom
+            mixed = {}
+            for name, mine in plane.items():
+                mx = dqfn(mine, recv[f"q:{name}"], recv[f"s:{name}"],
+                          alpha, beta)
+                mixed[name] = mx if use is None else jnp.where(
+                    use > 0.0, mx, mine)
             return mixed, new_resid, new_w
 
         return mix_q
     if wire != "param":
         raise ValueError(f"unknown wire dtype {wire!r}")
     if M == 1:
-        return lambda plane, w, shift_idx: (plane, w)
+        return lambda plane, w, shift_idx, alive=None: (plane, w)
 
-    def mix(plane, w, shift_idx):
-        recv, w_half, rw = _ring_exchange(plane, w, shift_idx, M, ax, shifts)
-        new_w = w_half + rw
+    def mix(plane, w, shift_idx, alive=None):
+        recv, w_keep, rw, use = _ring_exchange(plane, w, shift_idx, M, ax,
+                                               shifts, alive)
+        new_w = w_keep + rw
+        denom = new_w if use is None else jnp.where(new_w > 0.0, new_w, 1.0)
         mixed = {}
         for name, mine in plane.items():
             if use_pallas:
-                mixed[name] = _gossip_mix_kernel(
-                    mine, recv[name], None, w_half / new_w, rw / new_w,
+                mx = _gossip_mix_kernel(
+                    mine, recv[name], None, w_keep / denom, rw / denom,
                     interpret=interpret)
             else:
-                mf = (w_half * mine.astype(jnp.float32)
-                      + rw * recv[name].astype(jnp.float32)) / new_w
-                mixed[name] = mf.astype(mine.dtype)
+                mf = (w_keep * mine.astype(jnp.float32)
+                      + rw * recv[name].astype(jnp.float32)) / denom
+                mx = mf.astype(mine.dtype)
+            mixed[name] = mx if use is None else jnp.where(use > 0.0, mx,
+                                                           mine)
         return mixed, new_w
 
     return mix
@@ -498,7 +565,7 @@ def gossip_fused_lane(part: FlatPartition, M: int, ax,
             qfn = quantize_plane_ref
             dqfn = dequant_mix_ref
 
-        def mix_apply_q(plane, resid, updates, w, shift_idx):
+        def mix_apply_q(plane, resid, updates, w, shift_idx, alive=None):
             if M == 1:
                 mixed = {name: op(x, x, updates[name], jnp.float32(1.0),
                                   jnp.float32(0.0))
@@ -510,30 +577,48 @@ def gossip_fused_lane(part: FlatPartition, M: int, ax,
                 payload[f"q:{name}"] = q
                 payload[f"s:{name}"] = s
                 new_resid[name] = r2
-            recv, w_half, rw = _ring_exchange(payload, w, shift_idx, M, ax,
-                                              shifts)
-            new_w = w_half + rw
-            alpha, beta = w_half / new_w, rw / new_w
-            mixed = {name: dqfn(x, recv[f"q:{name}"], recv[f"s:{name}"],
-                                updates[name], alpha, beta)
-                     for name, x in plane.items()}
+            recv, w_keep, rw, use = _ring_exchange(payload, w, shift_idx,
+                                                   M, ax, shifts, alive)
+            new_w = w_keep + rw
+            denom = new_w if use is None else jnp.where(new_w > 0.0,
+                                                        new_w, 1.0)
+            alpha, beta = w_keep / denom, rw / denom
+            mixed = {}
+            for name, x in plane.items():
+                mx = dqfn(x, recv[f"q:{name}"], recv[f"s:{name}"],
+                          updates[name], alpha, beta)
+                if use is not None:
+                    # degraded hop: still apply the local update (α=1,
+                    # β=0), just don't mix in the dead source's payload
+                    own = op(x, x, updates[name], jnp.float32(1.0),
+                             jnp.float32(0.0))
+                    mx = jnp.where(use > 0.0, mx, own)
+                mixed[name] = mx
             return mixed, new_resid, new_w
 
         return mix_apply_q
     if wire != "param":
         raise ValueError(f"unknown wire dtype {wire!r}")
 
-    def mix_apply(plane, updates, w, shift_idx):
+    def mix_apply(plane, updates, w, shift_idx, alive=None):
         if M == 1:
             mixed = {name: op(x, x, updates[name], jnp.float32(1.0),
                               jnp.float32(0.0))
                      for name, x in plane.items()}
             return mixed, w
-        recv, w_half, rw = _ring_exchange(plane, w, shift_idx, M, ax, shifts)
-        new_w = w_half + rw
-        alpha, beta = w_half / new_w, rw / new_w
-        mixed = {name: op(x, recv[name], updates[name], alpha, beta)
-                 for name, x in plane.items()}
+        recv, w_keep, rw, use = _ring_exchange(plane, w, shift_idx, M, ax,
+                                               shifts, alive)
+        new_w = w_keep + rw
+        denom = new_w if use is None else jnp.where(new_w > 0.0, new_w, 1.0)
+        alpha, beta = w_keep / denom, rw / denom
+        mixed = {}
+        for name, x in plane.items():
+            mx = op(x, recv[name], updates[name], alpha, beta)
+            if use is not None:
+                own = op(x, x, updates[name], jnp.float32(1.0),
+                         jnp.float32(0.0))
+                mx = jnp.where(use > 0.0, mx, own)
+            mixed[name] = mx
         return mixed, new_w
 
     return mix_apply
@@ -550,13 +635,13 @@ def gossip_lane(part: FlatPartition, M: int, ax, shifts: Sequence[int], *,
     (``gossip_plane_lane``). Returns ``mix(tree, w, shift_idx) ->
     (tree, w)``; the identity when M == 1."""
     if M == 1:
-        return lambda tree, w, shift_idx: (tree, w)
+        return lambda tree, w, shift_idx, alive=None: (tree, w)
     plane_mix = gossip_plane_lane(part, M, ax, shifts,
                                   use_pallas=use_pallas,
                                   interpret=interpret)
 
-    def mix(tree, w, shift_idx):
-        plane, w = plane_mix(part.pack(tree), w, shift_idx)
+    def mix(tree, w, shift_idx, alive=None):
+        plane, w = plane_mix(part.pack(tree), w, shift_idx, alive=alive)
         return part.unpack(plane), w
 
     return mix
@@ -572,21 +657,23 @@ def gossip_lane_legacy(part: LayerPartition, M: int, ax,
     replicates them over 'model', see DESIGN.md §11). Returns
     ``mix(tree, w, shift_idx) -> (tree, w)``; the identity when M == 1."""
     if M == 1:
-        return lambda tree, w, shift_idx: (tree, w)
+        return lambda tree, w, shift_idx, alive=None: (tree, w)
 
-    def mix(tree, w, shift_idx):
+    def mix(tree, w, shift_idx, alive=None):
+        if alive is not None:
+            raise ValueError("membership needs the flat plane (flat=True)")
         groups = part.split(tree)
         packed, unravel = {}, {}
         for name, sub in groups.items():
             packed[name], unravel[name] = ravel_pytree(
                 jax.tree.map(lambda v: v.astype(jnp.float32), sub))
 
-        recv, w_half, rw = _ring_exchange(packed, w, shift_idx, M, ax,
-                                          shifts)
-        new_w = w_half + rw
+        recv, w_keep, rw, _ = _ring_exchange(packed, w, shift_idx, M, ax,
+                                             shifts)
+        new_w = w_keep + rw
         mixed_groups = {}
         for name, mine in packed.items():
-            mixed = (w_half * mine + rw * recv[name]) / new_w
+            mixed = (w_keep * mine + rw * recv[name]) / new_w
             mixed_groups[name] = jax.tree.map(
                 lambda x, ref: x.astype(ref.dtype),
                 unravel[name](mixed), groups[name])
@@ -610,7 +697,8 @@ def make_ddp_train_step(model: Model, mesh, optimizer: Optimizer,
 
     def step(params, opt_state, batch, step_idx):
         loss, grads = fwd(params, batch)
-        params, opt_state, _, _ = upd(params, opt_state, grads, (), step_idx)
+        params, opt_state, _, _, _ = upd(params, opt_state, grads, (),
+                                         step_idx)
         return params, opt_state, loss
 
     p_sh = SH.param_shardings(model, mesh, overrides=overrides,
@@ -711,7 +799,8 @@ def make_layup_train_step(model: Model, mesh, optimizer: Optimizer,
             lambda x: x[0] if x.ndim >= 1 else x, opt_st)
         w = w_st[0]
         loss, grads = fwd(params, batch)
-        params, opt_state, _, _ = upd(params, opt_state, grads, (), step_idx)
+        params, opt_state, _, _, _ = upd(params, opt_state, grads, (),
+                                         step_idx)
         params, w = mix(params, w, shift_idx)
         loss = jax.lax.pmean(loss, worker_axes)
         restack = lambda t: jax.tree.map(lambda x: x[None], t)
@@ -787,15 +876,20 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
                          flat: bool = False,
                          fused_mix: Optional[Callable] = None,
                          wire: str = "param",
-                         compensate: float = 0.0):
+                         compensate: float = 0.0,
+                         membership: bool = False):
     """Per-worker decoupled step body (traced inside shard_map).
 
     Arguments arrive worker-stacked with a leading axis of 1 (the shard):
     ``(read, write, opt, w, versions[, fifo_g, fifo_stamp][, resid]
-    [, theta], batch, step_idx, shift_idx)`` — the fifo args are present
-    iff ``D > 0``, the error-feedback residual plane iff ``wire="int8"``,
-    and the stale-θ reference plane iff ``compensate > 0`` (DESIGN.md
-    §14). The three lanes compose: forward on the READ buffer, delayed
+    [, theta][, alive], batch, step_idx, shift_idx)`` — the fifo args are
+    present iff ``D > 0``, the error-feedback residual plane iff
+    ``wire="int8"``, the stale-θ reference plane iff ``compensate > 0``
+    (DESIGN.md §14), and the per-worker 0/1 ``alive`` membership mask iff
+    ``membership`` (DESIGN.md §15: a dead peer's updates are masked, its
+    version clocks freeze, the gossip hop is alive-gated, and the loss is
+    averaged over the live peers only). The three lanes compose: forward
+    on the READ buffer, delayed
     update on the WRITE buffer, gossip on the updated write copy, then
     the per-layer-group buffer swap (read adopts each mixed group; its
     clock is stamped ``t + phi_g``).
@@ -831,6 +925,11 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
         if comp:
             theta = unstack(args[i])
             i += 1
+        alive_st, a = None, None
+        if membership:
+            alive_st = args[i]
+            a = alive_st[0]
+            i += 1
         batch, step_idx, shift_idx = args[i:]
         read = unstack(read_st)
         write = unstack(write_st)
@@ -854,27 +953,43 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
             upd_out = upd(write, opt_state, grads, fifo, step_idx,
                           active=active, theta=theta) if comp else \
                 upd(write, opt_state, grads, fifo, step_idx, active=active)
-            updates, opt_state, fifo, upd_stale = upd_out[:4]
+            updates, opt_state, fifo, upd_stale, skips = upd_out[:5]
             if comp:
-                theta = upd_out[4]
+                theta = upd_out[5]
+            if membership:
+                # a dead peer applies no updates (its replica is frozen
+                # until donor re-sync). A SELECT, not `u·a`: an arithmetic
+                # gate changes XLA's FMA contraction and breaks the
+                # empty-plan bit-exactness; where(1.0, u, 0) is the
+                # identity bit-for-bit
+                updates = jax.tree.map(
+                    lambda u: jnp.where(a > 0.0, u, jnp.zeros_like(u)),
+                    updates)
             if int8:
                 write, resid, w = fused_mix(write, resid, updates, w,
-                                            shift_idx)
+                                            shift_idx, alive=a)
             else:
-                write, w = fused_mix(write, updates, w, shift_idx)
+                write, w = fused_mix(write, updates, w, shift_idx, alive=a)
         else:
             # backward/update lane: delayed gradient lands on the write
             # buffer, then the per-layer-group push-sum ring mix
+            write_prev = write
             upd_out = upd(write, opt_state, grads, fifo, step_idx,
                           active=active, theta=theta) if comp else \
                 upd(write, opt_state, grads, fifo, step_idx, active=active)
-            write, opt_state, fifo, upd_stale = upd_out[:4]
+            write, opt_state, fifo, upd_stale, skips = upd_out[:5]
             if comp:
-                theta = upd_out[4]
+                theta = upd_out[5]
+            if membership:
+                # dead peer: params frozen until donor re-sync — a select
+                # (bit-transparent when alive), never an arithmetic mask
+                write = jax.tree.map(
+                    lambda n, o: jnp.where(a > 0.0, n, o),
+                    write, write_prev)
             if int8:
-                write, resid, w = mix(write, resid, w, shift_idx)
+                write, resid, w = mix(write, resid, w, shift_idx, alive=a)
             else:
-                write, w = mix(write, w, shift_idx)
+                write, w = mix(write, w, shift_idx, alive=a)
         # buffer swap: the read copy adopts the mixed write copy and each
         # group clock is stamped with its generation time t + phi_g. In the
         # real async system this is a per-group pointer flip as each
@@ -885,9 +1000,23 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
         # worker receives every step; with M == 1 nothing is received.
         read = write
         if M > 1:
-            versions = stamp_groups(versions,
-                                    step_idx.astype(jnp.float32) + phi)
-        loss = jax.lax.pmean(loss, worker_axes)
+            stamped = stamp_groups(versions,
+                                   step_idx.astype(jnp.float32) + phi)
+            # a dead peer's clocks freeze at its last live generation —
+            # the serving health gate keys off this (DESIGN.md §15)
+            versions = stamped if not membership else jnp.where(
+                a > 0.0, stamped, versions)
+        if membership:
+            # loss over the live peers only (a dead peer's forward output
+            # is meaningless); with every peer alive this is bitwise
+            # pmean: psum(loss·1.0)/psum(1.0) == psum(loss)/M
+            loss = (jax.lax.psum(loss * a, worker_axes)
+                    / jax.lax.psum(a, worker_axes))
+        else:
+            loss = jax.lax.pmean(loss, worker_axes)
+        # skips differ per worker (one peer's NaN is everyone's metric):
+        # psum so the P() out spec is sound
+        skips = jax.lax.psum(skips, worker_axes)
         outs = [restack(read), restack(write), restack(opt_state), w[None],
                 versions]
         if D > 0:
@@ -896,7 +1025,9 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
             outs += [restack(resid)]
         if comp:
             outs += [restack(theta)]
-        return tuple(outs) + (loss, upd_stale)
+        if membership:
+            outs += [alive_st]
+        return tuple(outs) + (loss, upd_stale, skips)
 
     return worker_fn
 
@@ -904,7 +1035,8 @@ def _decoupled_worker_fn(part: LayerPartition, fwd: Callable, upd: Callable,
 def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
                          part: Optional[LayerPartition] = None,
                          flat: bool = True, wire: str = "param",
-                         compensate: float = 0.0):
+                         compensate: float = 0.0,
+                         membership: bool = False):
     """Initial step state for the decoupled lane.
 
     ``read`` and ``write`` start as identical copies. Both are fresh
@@ -921,14 +1053,17 @@ def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
     ``wire="int8"`` adds the zero-initialized error-feedback residual
     plane (``state["resid"]``, plane dtype); ``compensate > 0`` adds the
     stale-θ reference plane (``state["theta"]``, a copy of the initial
-    params — the θ_prev of step 0). Both are flat-plane machinery
-    (DESIGN.md §14) and require ``flat=True``."""
+    params — the θ_prev of step 0); ``membership`` adds the per-worker
+    0/1 ``alive`` mask (all ones — the chaos controller mutates it at
+    fault events, DESIGN.md §15). All are flat-plane machinery and
+    require ``flat=True``."""
     M = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     single = jax.tree.map(lambda x: x[0], params_stacked)
     D = int(update_delay)
-    if (wire == "int8" or float(compensate) > 0.0) and not flat:
-        raise ValueError("wire='int8' / compensate need the flat plane "
-                         "(flat=True)")
+    if (wire == "int8" or float(compensate) > 0.0 or membership) \
+            and not flat:
+        raise ValueError("wire='int8' / compensate / membership need the "
+                         "flat plane (flat=True)")
     if flat:
         if part is None:
             part = FlatPartition(single)
@@ -953,6 +1088,8 @@ def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
             state["resid"] = jax.tree.map(jnp.zeros_like, plane)
         if float(compensate) > 0.0:
             state["theta"] = jax.tree.map(jnp.copy, plane)
+        if membership:
+            state["alive"] = jnp.ones((M,), jnp.float32)
         return state
     part = part or LayerPartition(single)
     state = {
@@ -967,37 +1104,47 @@ def make_decoupled_state(params_stacked, optimizer, *, update_delay: int = 0,
     return state
 
 
-def _decoupled_metrics(w, versions, loss, upd_stale, step_idx):
+def _decoupled_metrics(w, versions, loss, upd_stale, step_idx, skips=None,
+                       alive=None):
     out = {"loss": loss, "update_staleness": upd_stale,
            "weight_sum": jnp.sum(w)}
+    if skips is not None:
+        out["nonfinite_skips"] = skips
+    if alive is not None:
+        out["peers_live"] = jnp.sum(alive)
     out.update(version_metrics(versions, step_idx))
     return out
 
 
-def _check_wire(wire: str, compensate: float, flat: bool) -> None:
-    """Shared validation for the quantized-wire / delay-compensation knobs
-    (both are flat-plane machinery — DESIGN.md §14)."""
+def _check_wire(wire: str, compensate: float, flat: bool,
+                membership: bool = False) -> None:
+    """Shared validation for the quantized-wire / delay-compensation /
+    membership knobs (all flat-plane machinery — DESIGN.md §14/§15)."""
     if wire not in ("param", "int8"):
         raise ValueError(f"unknown wire dtype {wire!r} "
                          "(expected 'param' or 'int8')")
     if float(compensate) < 0.0:
         raise ValueError("compensate (λ) must be >= 0")
-    if (wire == "int8" or float(compensate) > 0.0) and not flat:
-        raise ValueError("wire='int8' / compensate > 0 need the flat plane "
-                         "(flat=True)")
+    if (wire == "int8" or float(compensate) > 0.0 or membership) \
+            and not flat:
+        raise ValueError("wire='int8' / compensate > 0 / faults need the "
+                         "flat plane (flat=True)")
 
 
 def _decoupled_state_specs(D: int, pw, wire: str = "param",
-                           compensate: float = 0.0):
+                           compensate: float = 0.0,
+                           membership: bool = False):
     """shard_map specs for the flattened decoupled state
     (read, write, opt, w, versions[, fifo_g, fifo_stamp][, resid]
-    [, theta])."""
-    extra = int(wire == "int8") + int(float(compensate) > 0.0)
+    [, theta][, alive])."""
+    extra = (int(wire == "int8") + int(float(compensate) > 0.0)
+             + int(membership))
     return [pw] * 5 + ([pw, P()] if D > 0 else []) + [pw] * extra
 
 
 def _decoupled_step_caller(fn_sm, D: int, wire: str = "param",
-                           compensate: float = 0.0):
+                           compensate: float = 0.0,
+                           membership: bool = False):
     """Adapt the flat shard_map'd worker fn to the dict state + metrics
     step signature shared by both decoupled entry points."""
     int8 = wire == "int8"
@@ -1012,9 +1159,11 @@ def _decoupled_step_caller(fn_sm, D: int, wire: str = "param",
             args += [state["resid"]]
         if comp:
             args += [state["theta"]]
+        if membership:
+            args += [state["alive"]]
         outs = fn_sm(*args, batch, step_idx, shift_idx)
         read, write, opt, w, versions = outs[:5]
-        loss, upd_stale = outs[-2:]
+        loss, upd_stale, skips = outs[-3:]
         new_state = {"read": read, "write": write, "opt": opt, "w": w,
                      "versions": versions}
         i = 5
@@ -1027,8 +1176,13 @@ def _decoupled_step_caller(fn_sm, D: int, wire: str = "param",
         if comp:
             new_state["theta"] = outs[i]
             i += 1
+        alive = None
+        if membership:
+            new_state["alive"] = alive = outs[i]
+            i += 1
         return new_state, _decoupled_metrics(w, versions, loss, upd_stale,
-                                             step_idx)
+                                             step_idx, skips=skips,
+                                             alive=alive)
 
     return step
 
@@ -1044,7 +1198,8 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                                     flat: bool = True,
                                     use_pallas: bool = False,
                                     wire: str = "param",
-                                    compensate: float = 0.0) -> ProdStep:
+                                    compensate: float = 0.0,
+                                    membership: bool = False) -> ProdStep:
     """The paper's decoupled execution on the real mesh.
 
     Step signature: ``fn(state, batch, step_idx, shift_idx) -> (state,
@@ -1067,7 +1222,10 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
     ``wire="int8"`` quantizes the gossip wire with an error-feedback
     residual plane carried in the state; ``compensate=λ > 0`` turns on
     the staleness-aware delay compensation in the backward lane
-    (DESIGN.md §14). Both require ``flat=True``."""
+    (DESIGN.md §14); ``membership`` compiles the fault-tolerant
+    alive-gated lane (per-worker ``alive`` mask in the state, live-set
+    push-sum renormalization, frozen dead-peer clocks — DESIGN.md §15).
+    All require ``flat=True``."""
     cfg = model.cfg
     worker_axes = data_axes(mesh)
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
@@ -1090,7 +1248,7 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
 
     if use_pallas and not flat:
         raise ValueError("use_pallas requires the flat plane (flat=True)")
-    _check_wire(wire, compensate, flat)
+    _check_wire(wire, compensate, flat, membership)
     part = FlatPartition(model.abstract_params())
     fwd = forward_lane(model.loss_fn, fb_ratio=R, grad_specs=grad_specs)
     upd = backward_update_lane(optimizer, schedule, update_delay=D,
@@ -1103,7 +1261,8 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
         mix, fused = gossip_lane_legacy(part, M, ax, shifts), None
     worker_fn = _decoupled_worker_fn(part, fwd, upd, mix, M, worker_axes, D,
                                      flat=flat, fused_mix=fused, wire=wire,
-                                     compensate=compensate)
+                                     compensate=compensate,
+                                     membership=membership)
 
     pw = P(ax)
     abstract_params = model.abstract_params()
@@ -1135,16 +1294,19 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
         abstract_state["resid"] = stacked_params
     if float(compensate) > 0.0:
         abstract_state["theta"] = stacked_params
+    if membership:
+        abstract_state["alive"] = jax.ShapeDtypeStruct((M,), jnp.float32)
 
     batch_specs_sm = jax.tree.map(_worker_batch_pspec(ax),
                                   _abstract_batch(cfg, shape))
-    state_specs = _decoupled_state_specs(D, pw, wire, compensate)
+    state_specs = _decoupled_state_specs(D, pw, wire, compensate,
+                                         membership)
     fn_sm = shard_map(
         worker_fn, mesh=mesh,
         in_specs=tuple(state_specs + [batch_specs_sm, P(), P()]),
-        out_specs=tuple(state_specs + [P(), P()]),
+        out_specs=tuple(state_specs + [P(), P(), P()]),
         axis_names=set(worker_axes))
-    step = _decoupled_step_caller(fn_sm, D, wire, compensate)
+    step = _decoupled_step_caller(fn_sm, D, wire, compensate, membership)
 
     w_sh = NamedSharding(mesh, pw)
     scalar = NamedSharding(mesh, P())
@@ -1175,9 +1337,13 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
         state_sh["resid"] = p_sh
     if float(compensate) > 0.0:
         state_sh["theta"] = p_sh
+    if membership:
+        state_sh["alive"] = w_sh
     metrics_sh = {"loss": scalar, "update_staleness": scalar,
                   "layer_staleness": scalar, "staleness_mean": scalar,
-                  "weight_sum": scalar}
+                  "weight_sum": scalar, "nonfinite_skips": scalar}
+    if membership:
+        metrics_sh["peers_live"] = scalar
     batch_abs = _abstract_batch(cfg, shape)
     b_sh = SH.batch_shardings(batch_abs, mesh, overrides=overrides,
                               preset=preset)
@@ -1193,7 +1359,8 @@ def make_layup_decoupled_train_step(model: Model, mesh, optimizer: Optimizer,
                     f"shifts={shifts}, flat={flat}"
                     f"{', pallas' if use_pallas else ''}"
                     f"{', wire=int8' if wire == 'int8' else ''}"
-                    f"{f', comp={compensate}' if compensate else ''})")
+                    f"{f', comp={compensate}' if compensate else ''}"
+                    f"{', membership' if membership else ''})")
 
 
 def straggler_active_fn(mesh, straggler_delays) -> Optional[Callable]:
@@ -1228,7 +1395,8 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                    use_pallas: bool = False,
                                    publisher=None,
                                    wire: str = "param",
-                                   compensate: float = 0.0):
+                                   compensate: float = 0.0,
+                                   membership: bool = False):
     """Decoupled LayUp over a generic pytree + loss_fn (no Model/ShapeConfig)
     — the engine behind the ``"prod"`` TrainerBackend (core/backend.py).
 
@@ -1269,7 +1437,7 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
         raise ValueError("publisher needs the flat plane (flat=True): the "
                          "legacy tree state has no per-group plane to "
                          "publish")
-    _check_wire(wire, compensate, flat)
+    _check_wire(wire, compensate, flat, membership)
 
     def build(params_single):
         part = FlatPartition(params_single)
@@ -1289,14 +1457,17 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                          D, squeeze_batch=True,
                                          active_fn=active_fn, flat=flat,
                                          fused_mix=fused, wire=wire,
-                                         compensate=compensate)
+                                         compensate=compensate,
+                                         membership=membership)
         pw = P(ax)
-        state_specs = _decoupled_state_specs(D, pw, wire, compensate)
+        state_specs = _decoupled_state_specs(D, pw, wire, compensate,
+                                             membership)
         fn_sm = shard_map(worker_fn, mesh=mesh,
                           in_specs=tuple(state_specs + [pw, P(), P()]),
-                          out_specs=tuple(state_specs + [P(), P()]),
+                          out_specs=tuple(state_specs + [P(), P(), P()]),
                           axis_names=set(worker_axes))
-        base_step = _decoupled_step_caller(fn_sm, D, wire, compensate)
+        base_step = _decoupled_step_caller(fn_sm, D, wire, compensate,
+                                           membership)
 
         def step(state, batch, step_idx, shift_idx):
             new_state, metrics = base_step(state, batch, step_idx, shift_idx)
@@ -1317,7 +1488,8 @@ def make_decoupled_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
             part_box["step"], part_box["part"] = build(params_single)
         return make_decoupled_state(stacked, optimizer, update_delay=D,
                                     part=part_box["part"], flat=flat,
-                                    wire=wire, compensate=compensate)
+                                    wire=wire, compensate=compensate,
+                                    membership=membership)
 
     def step_fn(state, batch, step_idx, shift_idx):
         if "step" not in part_box:
@@ -1406,7 +1578,8 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
               use_pallas: bool = False,
               streams: int = 1,
               wire: str = "param",
-              compensate: float = 0.0) -> ProdStep:
+              compensate: float = 0.0,
+              faults=None) -> ProdStep:
     """``overlap=True`` selects the stage-graph pipeline engine
     (repro.launch.pipeline): the decoupled lane compiled into separately
     jitted fwd-slice / bwd+update / gossip stages dispatched asynchronously
@@ -1431,18 +1604,27 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
     bytes; ``compensate=λ > 0`` adds the staleness-aware delay
     compensation ``g + λ·g⊙g⊙(θ_now − θ_stale)`` in the backward lane
     (λ = 0.5 is the documented default when turning it on —
-    DESIGN.md §14)."""
+    DESIGN.md §14).
+
+    ``faults`` (a :class:`repro.chaos.FaultPlan` or spec string,
+    decoupled lanes, flat only) compiles the fault-tolerant membership
+    lane (per-worker ``alive`` mask, live-set push-sum renormalization —
+    DESIGN.md §15) and attaches a ``ChaosController`` for the plan on
+    the returned step (``.chaos``); an empty plan enables the machinery
+    without injecting anything."""
     from repro.optim import momentum, constant
     optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
     schedule = schedule or constant(0.1)
     decoupled = fb_ratio > 1 or update_delay > 0 or overlap
+    membership = faults is not None
     if streams > 1 and not overlap:
         raise ValueError("streams > 1 is a property of the stage-graph "
                          "pipeline; it requires overlap=True")
-    _check_wire(wire, compensate, flat)
-    if (wire != "param" or float(compensate) > 0.0) and not decoupled:
-        raise ValueError("wire='int8' / compensate > 0 belong to the "
-                         "decoupled LayUp lane (fb_ratio/update_delay/"
+    _check_wire(wire, compensate, flat, membership)
+    if (wire != "param" or float(compensate) > 0.0 or membership) \
+            and not decoupled:
+        raise ValueError("wire='int8' / compensate > 0 / faults belong to "
+                         "the decoupled LayUp lane (fb_ratio/update_delay/"
                          "overlap)")
     if decoupled and (shape.kind != "train" or algo == "ddp"):
         raise ValueError(
@@ -1458,17 +1640,25 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
                     "the decoupled lane does not compose with accum_steps")
             if overlap:
                 from repro.launch.pipeline import make_layup_decoupled_pipeline
-                return make_layup_decoupled_pipeline(
+                step = make_layup_decoupled_pipeline(
                     model, mesh, optimizer, schedule, shape, shifts=shifts,
                     overrides=overrides, preset=preset, fb_ratio=fb_ratio,
                     update_delay=update_delay,
                     constrain_grads=constrain_grads, flat=flat,
                     use_pallas=use_pallas, streams=streams, wire=wire,
-                    compensate=compensate)
-            return make_layup_decoupled_train_step(
-                model, mesh, optimizer, schedule, shape, shifts, overrides,
-                preset, fb_ratio, update_delay, constrain_grads, flat,
-                use_pallas, wire, compensate)
+                    compensate=compensate, membership=membership)
+            else:
+                step = make_layup_decoupled_train_step(
+                    model, mesh, optimizer, schedule, shape, shifts,
+                    overrides, preset, fb_ratio, update_delay,
+                    constrain_grads, flat, use_pallas, wire, compensate,
+                    membership)
+            if membership:
+                from repro.chaos import ChaosController
+                step.chaos = ChaosController(
+                    faults, num_workers(mesh), update_delay=update_delay,
+                    wire=wire, compensate=compensate)
+            return step
         return make_layup_train_step(model, mesh, optimizer, schedule, shape,
                                      shifts, overrides, preset, accum_steps,
                                      constrain_grads, use_pallas)

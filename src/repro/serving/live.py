@@ -93,7 +93,8 @@ class LiveServer:
             return None
         self._last_seq = snap.seq
         decision = self.policy.evaluate(snap,
-                                        last_swap_step=self._last_swap_step)
+                                        last_swap_step=self._last_swap_step,
+                                        worker=self.worker)
         self.decisions.append(decision)
         if decision.accepted:
             import numpy as np

@@ -40,7 +40,8 @@ import numpy as np
 class SwapDecision:
     """Outcome of gating one snapshot. ``reason`` is one of
     ``fresh`` / ``forced-max-interval`` (accepted) or
-    ``min-interval`` / ``staleness`` / ``drift`` (rejected)."""
+    ``min-interval`` / ``staleness`` / ``drift`` /
+    ``unhealthy-source`` (rejected)."""
 
     accepted: bool
     reason: str
@@ -60,9 +61,14 @@ class SwapPolicy:
     max_drift: Optional[float] = None       # figA1 disagreement bound
     min_interval_steps: int = 0             # min training steps between swaps
     max_interval_steps: Optional[int] = None  # force-accept beyond this
+    # membership view (a repro.chaos.PeerHealth): refuse snapshots whose
+    # source worker is suspect/dead — a crashed peer's frozen replica
+    # must never reach serving, DESIGN.md §15
+    health: Optional[object] = None
     counts: Dict[str, int] = field(default_factory=dict)
 
-    def _decide(self, snap, last_swap_step: Optional[int]) -> SwapDecision:
+    def _decide(self, snap, last_swap_step: Optional[int],
+                worker: Optional[int]) -> SwapDecision:
         from repro.core.layerview import layer_staleness
 
         # host conversions: blocks this (serving) thread until the
@@ -79,6 +85,11 @@ class SwapPolicy:
                                 seq=snap.seq, step=snap.step,
                                 staleness_max=stale_max, drift=drift)
 
+        # the health gate comes FIRST — it beats even the forced accept:
+        # freshness never outranks serving a suspect/dead worker's replica
+        if (self.health is not None and worker is not None
+                and not self.health.serving_ok(worker)):
+            return dec(False, "unhealthy-source")
         if age is not None and age < self.min_interval_steps:
             return dec(False, "min-interval")
         if (self.max_interval_steps is not None and age is not None
@@ -91,17 +102,20 @@ class SwapPolicy:
             return dec(False, "drift")
         return dec(True, "fresh")
 
-    def evaluate(self, snap,
-                 last_swap_step: Optional[int] = None) -> SwapDecision:
-        """Gate one snapshot against the last accepted swap's step."""
-        d = self._decide(snap, last_swap_step)
+    def evaluate(self, snap, last_swap_step: Optional[int] = None,
+                 worker: Optional[int] = None) -> SwapDecision:
+        """Gate one snapshot against the last accepted swap's step.
+        ``worker`` is the publishing worker's index for the health gate
+        (ignored when no ``health`` view is configured)."""
+        d = self._decide(snap, last_swap_step, worker)
         self.counts[d.reason] = self.counts.get(d.reason, 0) + 1
         return d
 
     @property
     def rejected(self) -> int:
         return sum(n for r, n in self.counts.items()
-                   if r in ("min-interval", "staleness", "drift"))
+                   if r in ("min-interval", "staleness", "drift",
+                            "unhealthy-source"))
 
     @property
     def gated_rejections(self) -> int:

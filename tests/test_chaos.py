@@ -1,0 +1,583 @@
+"""Fault-tolerance chaos matrix (DESIGN.md §15): fault plans, membership,
+wire guards, nonfinite skips, fail-fast streams, and the end-to-end
+killed-peer runs.
+
+The fast tests run on the single pinned CPU device; everything that needs
+M > 1 host devices runs out-of-process via ``run_sub`` and is marked
+``slow`` (same split as the dry-run mesh tests). The pinned invariants:
+
+* an **empty** FaultPlan turns the membership lane on without touching
+  device state — bit-exact with the fault-free lane across all three
+  engines at (R, D) ∈ {(1,0), (1,1), (2,1)};
+* Σw (the push-sum ``weight_sum`` metric) stays 1.0 through crash,
+  death renormalization and recovery — conservation over the live set;
+* a peer killed mid-run never raises ``TimeoutError`` and the run
+  completes with finite loss;
+* a flipped int8 payload is rejected by checksum and repaired bit-exact;
+* a NaN delayed gradient is skipped (that group's params untouched) and
+  counted in ``nonfinite_skips``.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chaos import (ALIVE, DEAD, SUSPECT, ChaosController, Fault,
+                         FaultPlan, PeerHealth, WireGuard, buffer_checksum,
+                         plane_checksum)
+from repro.core.backend import make_backend
+from repro.launch.streams import SignalBoard, Stream, StreamTask
+from repro.optim.optimizers import sgd
+
+from _fixtures import mlp_batch, mlp_problem
+from _subproc import run_sub
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_parse_roundtrip_deterministic(self):
+        spec = "crash:peer=1,step=5;nan:step=3,peer=0,group=1;hang:step=2,seconds=0.1"
+        a, b = FaultPlan.parse(spec), FaultPlan.parse(spec)
+        assert a == b  # same spec -> same plan, always
+        # stable step order regardless of how the spec was written
+        assert [f.step for f in a.faults] == [2, 3, 5]
+        assert a.at(5) == (Fault(kind="crash", step=5, peer=1),)
+        assert a.at(4) == ()
+        assert a.last_step == 5
+
+    def test_recover_sugar(self):
+        p = FaultPlan.parse("crash:peer=2,step=3,recover=7")
+        kinds = [(f.kind, f.step, f.peer) for f in p.faults]
+        assert kinds == [("crash", 3, 2), ("recover", 7, 2)]
+
+    def test_empty_plan_is_valid_noop(self):
+        p = FaultPlan.parse("")
+        assert p.empty and p.at(0) == () and p.last_step == -1
+        assert "no faults" in p.describe()
+
+    @pytest.mark.parametrize("bad", [
+        "explode:step=1",          # unknown kind
+        "crash:peer=1",            # missing step
+        "crash:peer=1,step=-2",    # negative step
+        "nan:step=1,recover=3",    # recover sugar is crash-only
+        "hang:step=1,seconds=99",  # hang bound
+        "crash:step=1,frobs=2",    # unknown field
+    ])
+    def test_rejects_malformed(self, bad):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# PeerHealth membership machine
+# ---------------------------------------------------------------------------
+class TestPeerHealth:
+    def test_escalation_ladder(self):
+        h = PeerHealth(3, suspect_after=1, dead_after=2)
+        for t in range(2):
+            for p in range(3):
+                h.beat(p, t)
+            h.observe(t)
+        assert all(h.status(p) == ALIVE for p in range(3))
+        # peer 1 stops beating: 1 missed epoch -> SUSPECT, 2 -> DEAD
+        h.beat(0, 2), h.beat(2, 2)
+        h.observe(2)
+        assert h.status(1) == SUSPECT and h.is_live(1)
+        assert not h.serving_ok(1)  # suspect mixes but never serves
+        h.beat(0, 3), h.beat(2, 3)
+        h.observe(3)
+        assert h.status(1) == DEAD and not h.is_live(1)
+        assert h.peers_dead == 1
+        np.testing.assert_array_equal(h.alive_mask(), [1.0, 0.0, 1.0])
+        # a dead peer's beats are ignored until readmission (the live
+        # peers keep beating so they don't escalate themselves)
+        h.beat(0, 4), h.beat(2, 4)
+        h.beat(1, 4)
+        h.observe(4)
+        assert h.status(1) == DEAD
+        h.readmit(1, 5)
+        assert h.status(1) == ALIVE and h.serving_ok(1)
+        # the timeline carries every transition
+        transitions = [(p, new) for _, p, _, new in h.events]
+        assert transitions == [(1, SUSPECT), (1, DEAD), (1, ALIVE)]
+
+    def test_suspect_recovers_on_beat(self):
+        h = PeerHealth(2, suspect_after=1, dead_after=3)
+        h.beat(0, 0), h.beat(1, 0)
+        h.observe(0)
+        h.beat(0, 1)
+        h.observe(1)
+        assert h.status(1) == SUSPECT
+        h.beat(0, 2), h.beat(1, 2)  # it was a transient, not a crash
+        h.observe(2)
+        assert h.status(1) == ALIVE
+
+    def test_wait_guarded_success_path(self):
+        h = PeerHealth(2)
+        board = SignalBoard()
+        board.put_signal("x", 3, "payload")
+        out = h.wait_guarded(board, "x", 3, peer=1, deadline=0.05)
+        assert out == "payload" and h.status(1) == ALIVE
+
+    def test_wait_guarded_escalates_to_dead(self):
+        h = PeerHealth(2)
+        board = SignalBoard()  # slot never signalled
+        t0 = time.monotonic()
+        out = h.wait_guarded(board, "never", 1, peer=1, epoch=7,
+                             deadline=0.01, retries=2, backoff=2.0)
+        assert out is None
+        assert h.status(1) == DEAD
+        # retries with backoff + grace wait, not one long deadline:
+        # 0.01 + 0.02 + 0.04 plus scheduling slack
+        assert time.monotonic() - t0 < 2.0
+        assert (7, 1, SUSPECT, DEAD) in h.events
+
+    def test_wait_guarded_late_signal_while_suspect(self):
+        h = PeerHealth(2)
+        board = SignalBoard()
+
+        def late_put():
+            time.sleep(0.1)
+            board.put_signal("late", 1, "made-it")
+
+        thr = threading.Thread(target=late_put)
+        thr.start()
+        # retry ladder 0.02 + 0.04 + 0.08 (+0.16 grace) comfortably spans
+        # the 0.1 s late signal even under CI scheduling slack
+        out = h.wait_guarded(board, "late", 1, peer=0,
+                             deadline=0.02, retries=3)
+        thr.join()
+        assert out == "made-it"
+        assert h.status(0) in (ALIVE, SUSPECT)  # never escalated to DEAD
+        assert h.peers_dead == 0
+
+
+# ---------------------------------------------------------------------------
+# WireGuard: per-round plane checksum, reject-and-resend
+# ---------------------------------------------------------------------------
+class TestWireGuard:
+    def _plane(self):
+        rng = np.random.default_rng(0)
+        return {"l1": jnp.asarray(rng.normal(size=(2, 16)), jnp.float32),
+                "l2": jnp.asarray(rng.normal(size=(2, 8)), jnp.float32)}
+
+    def test_checksum_detects_single_bit_flip(self):
+        plane = self._plane()
+        seals = plane_checksum(plane)
+        damaged = np.array(np.asarray(plane["l1"]))
+        damaged.view(np.uint8).reshape(-1)[0] ^= 0x01
+        assert buffer_checksum(damaged) != seals["l1"]
+        assert buffer_checksum(plane["l1"]) == seals["l1"]
+
+    def test_corrupt_rejected_and_repaired_bit_exact(self):
+        g = WireGuard()
+        plane = self._plane()
+        delivered, events = g.round_trip(plane, corrupt_group="l1")
+        assert events == {"l1": "checksum-reject", "l2": "ok"}
+        for name in plane:  # repair == resend of the sealed original
+            np.testing.assert_array_equal(np.asarray(delivered[name]),
+                                          np.asarray(plane[name]))
+        c = g.counters()
+        assert c["checksum_rejects"] == 1 and c["resends"] == 1
+        assert c["drops_detected"] == 0
+
+    def test_drop_detected_and_resent(self):
+        g = WireGuard()
+        plane = self._plane()
+        delivered, events = g.round_trip(plane, drop_group="l2")
+        assert events == {"l1": "ok", "l2": "drop"}
+        np.testing.assert_array_equal(np.asarray(delivered["l2"]),
+                                      np.asarray(plane["l2"]))
+        assert g.counters()["drops_detected"] == 1
+
+    def test_clean_round_is_pass_through(self):
+        g = WireGuard()
+        plane = self._plane()
+        delivered, events = g.round_trip(plane)
+        assert set(events.values()) == {"ok"}
+        assert delivered["l1"] is plane["l1"]  # verified: same handle
+        assert g.counters()["resends"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Nonfinite-gradient guard in the update lane
+# ---------------------------------------------------------------------------
+class TestNonfiniteSkip:
+    def test_nan_group_skipped_params_untouched(self):
+        from repro.core.layerview import FlatPartition
+        from repro.launch.train import backward_update_lane
+        params = {"l1": jnp.ones((4, 4)), "l2": jnp.ones((4, 2))}
+        part = FlatPartition(params)
+        plane = part.pack(params)
+        opt = sgd(0.1)
+        upd = backward_update_lane(opt, lambda t: 0.1, update_delay=0)
+        grads = {k: jnp.ones_like(v) * 0.5 for k, v in plane.items()}
+        bad = dict(grads)
+        bad_name = sorted(plane)[0]  # flat plane: leaves are 1-D buffers
+        bad[bad_name] = bad[bad_name].at[0].set(jnp.nan)
+        out, _, _, _, skips = upd(plane, opt.init(plane), bad, None,
+                                  jnp.int32(0))
+        assert float(skips) == 1.0
+        # the NaN group is untouched; the clean group still stepped
+        np.testing.assert_array_equal(np.asarray(out[bad_name]),
+                                      np.asarray(plane[bad_name]))
+        clean = [n for n in plane if n != bad_name][0]
+        assert not np.allclose(np.asarray(out[clean]),
+                               np.asarray(plane[clean]))
+
+    def test_finite_grads_skip_nothing(self):
+        from repro.core.layerview import FlatPartition
+        from repro.launch.train import backward_update_lane
+        params = {"l1": jnp.ones((4, 4))}
+        part = FlatPartition(params)
+        plane = part.pack(params)
+        opt = sgd(0.1)
+        upd = backward_update_lane(opt, lambda t: 0.1, update_delay=0)
+        grads = {k: jnp.ones_like(v) for k, v in plane.items()}
+        _, _, _, _, skips = upd(plane, opt.init(plane), grads, None,
+                                jnp.int32(0))
+        assert float(skips) == 0.0
+
+    def test_end_to_end_nan_fault_counted_and_survived(self):
+        """M=1, D=1 lane with a scheduled NaN injection: the poisoned
+        group's update is skipped (counted in the step metric), the run
+        stays finite, and the lane keeps training afterwards."""
+        loss_fn, params = mlp_problem()
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=sgd(0.1), schedule=lambda t: 0.1,
+                          fb_ratio=1, update_delay=1, measure_drift=False,
+                          faults="nan:step=3,peer=0,group=0")
+        rng = jax.random.PRNGKey(0)
+        state = be.init(rng, params)
+        skips_seen, losses = [], []
+        for t in range(8):
+            state, m = be.step(state, mlp_batch(t), rng)
+            losses.append(float(m["loss"]))
+            skips_seen.append(float(m["nonfinite_skips"]))
+        assert all(np.isfinite(losses)), losses
+        assert max(skips_seen) >= 1.0, skips_seen
+        s = be.summary()
+        assert s["nan_injections"] == 1
+        assert s["nonfinite_skips"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast streams (the TimeoutError-stranding fix)
+# ---------------------------------------------------------------------------
+class TestStreamFailFast:
+    def test_poison_wakes_cross_stream_waiter(self):
+        """A task failure on one stream must fail waiters on OTHER streams
+        immediately (board poison), not strand them in a long timeout."""
+        board = SignalBoard()
+        s_a = Stream("chaos-a", None,
+                     on_error=lambda task, exc: board.poison(exc))
+        s_b = Stream("chaos-b", None,
+                     on_error=lambda task, exc: board.poison(exc))
+        try:
+            def boom():
+                raise ValueError("injected stage failure")
+
+            waiter = s_b.submit(StreamTask(
+                "mix", 0,
+                wait_fn=lambda: (board.wait_until("never", 1, timeout=600.0),),
+                run_fn=lambda x: x))
+            bad = s_a.submit(StreamTask("update", 0, run_fn=boom))
+            t0 = time.monotonic()
+            with pytest.raises(RuntimeError, match="poisoned"):
+                waiter.result(timeout=30.0)
+            assert time.monotonic() - t0 < 10.0  # fail-fast, not 600 s
+            with pytest.raises(ValueError, match="injected stage failure"):
+                bad.result(timeout=5.0)
+        finally:
+            s_a.close()
+            s_b.close()
+        assert not s_a._thread.is_alive() and not s_b._thread.is_alive()
+
+    def test_board_reset_clears_poison(self):
+        board = SignalBoard()
+        board.poison(ValueError("old failure"))
+        with pytest.raises(RuntimeError):
+            board.wait_until("x", 1, timeout=0.01)
+        board.reset()
+        board.put_signal("x", 1, "fresh")
+        assert board.wait_until("x", 1, timeout=0.1) == "fresh"
+
+    def test_engine_close_drains_and_joins_after_failure(self):
+        """A poisoned StreamEngine run: close() must raise the original
+        failure AND leave no live stream threads behind."""
+        loss_fn, params = mlp_problem()
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=sgd(0.1), schedule=lambda t: 0.1,
+                          fb_ratio=1, update_delay=1, overlap=True,
+                          streams=2, measure_drift=False)
+        rng = jax.random.PRNGKey(0)
+        state = be.init(rng, params)
+        state, _ = be.step(state, mlp_batch(0), rng)
+        eng = be.engine
+
+        def boom():
+            raise RuntimeError("poisoned task")
+
+        eng._track(eng._gossip.submit(StreamTask("aux", 1, run_fn=boom)))
+        with pytest.raises(RuntimeError):
+            eng.close()
+        leaked = [th for th in threading.enumerate()
+                  if th.name.startswith("stream:") and th.is_alive()]
+        assert leaked == [], leaked
+
+
+# ---------------------------------------------------------------------------
+# SwapPolicy health gate (serving never trusts a suspect/dead source)
+# ---------------------------------------------------------------------------
+class TestSwapPolicyHealthGate:
+    class _Snap:
+        def __init__(self, seq, step):
+            self.seq, self.step = seq, step
+            self.versions = np.full((1, 2), float(step), np.float32)
+            self.drift = None
+
+    def test_unhealthy_source_rejected(self):
+        from repro.serving.policy import SwapPolicy
+        h = PeerHealth(2)
+        h.mark_suspect(1, 0)
+        pol = SwapPolicy(health=h)
+        ok = pol.evaluate(self._Snap(0, 5), worker=0)
+        assert ok.accepted and ok.reason == "fresh"
+        bad = pol.evaluate(self._Snap(1, 6), worker=1)
+        assert not bad.accepted and bad.reason == "unhealthy-source"
+        assert pol.counts["unhealthy-source"] == 1
+        assert pol.rejected == 1
+
+    def test_health_gate_beats_forced_accept(self):
+        from repro.serving.policy import SwapPolicy
+        h = PeerHealth(2)
+        h.mark_dead(1, 0)
+        pol = SwapPolicy(max_interval_steps=1, health=h)
+        # way past the forced-accept bound, but the source is dead:
+        # freshness never outranks serving a dead worker's frozen replica
+        d = pol.evaluate(self._Snap(0, 100), last_swap_step=0, worker=1)
+        assert not d.accepted and d.reason == "unhealthy-source"
+        # readmitted -> the same snapshot shape force-accepts again
+        h.readmit(1, 1)
+        d2 = pol.evaluate(self._Snap(1, 101), last_swap_step=0, worker=1)
+        assert d2.accepted and d2.reason == "forced-max-interval"
+
+    def test_no_health_view_ignores_worker(self):
+        from repro.serving.policy import SwapPolicy
+        pol = SwapPolicy()
+        d = pol.evaluate(self._Snap(0, 1), worker=3)
+        assert d.accepted
+
+
+# ---------------------------------------------------------------------------
+# Chaos matrix: empty plan is bit-exact, all engines, all (R, D)
+# ---------------------------------------------------------------------------
+class TestEmptyPlanBitExact:
+    @pytest.mark.parametrize("R,D", [(1, 0), (1, 1), (2, 1)])
+    @pytest.mark.parametrize("engine", ["monolithic", "overlap", "streams"])
+    def test_m1_empty_plan_matches_fault_free(self, R, D, engine):
+        loss_fn, params = mlp_problem()
+        ekw = {"monolithic": {}, "overlap": {"overlap": True},
+               "streams": {"overlap": True, "streams": 2}}[engine]
+        kw = dict(loss_fn=loss_fn, optimizer=sgd(0.1),
+                  schedule=lambda t: 0.1, fb_ratio=R, update_delay=D,
+                  measure_drift=False, **ekw)
+
+        def drive(be):
+            rng = jax.random.PRNGKey(0)
+            state = be.init(rng, params)
+            out = []
+            for t in range(5):
+                state, m = be.step(state, mlp_batch(t), rng)
+                out.append(float(m["loss"]))
+            if hasattr(be.engine, "close"):
+                be.engine.close()
+            return out
+
+        ref = drive(make_backend("prod", "layup", M=1, **kw))
+        got = drive(make_backend("prod", "layup", M=1, faults="", **kw))
+        assert got == ref  # bit-exact: membership on, nothing injected
+
+    def test_membership_metrics_present(self):
+        loss_fn, params = mlp_problem()
+        be = make_backend("prod", "layup", M=1, loss_fn=loss_fn,
+                          optimizer=sgd(0.1), schedule=lambda t: 0.1,
+                          fb_ratio=1, update_delay=1, measure_drift=False,
+                          faults="")
+        rng = jax.random.PRNGKey(0)
+        state = be.init(rng, params)
+        state, m = be.step(state, mlp_batch(0), rng)
+        assert float(m["nonfinite_skips"]) == 0.0
+        assert float(m["peers_live"]) == 1.0
+        s = be.summary()
+        assert s["faults_injected"] == 0 and s["rounds_degraded"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ChaosController unit behaviour (host protocol, M=1-safe pieces)
+# ---------------------------------------------------------------------------
+class TestChaosController:
+    def test_empty_plan_never_touches_state(self):
+        ctl = ChaosController("", M=2, update_delay=1)
+        state = {"w": np.ones(2, np.float32) / 2}
+        out_state, out_batch = ctl.before_step(state, {"x": 1}, 0)
+        assert out_state is state and out_batch == {"x": 1}
+        assert ctl.summary()["rounds_degraded"] == 0
+
+    def test_wire_fault_counters_state_bit_exact(self):
+        plane = {"l1": jnp.ones((2, 8)), "l2": jnp.ones((2, 4)) * 2}
+        ctl = ChaosController("corrupt:step=1,group=0;drop:step=2,group=1",
+                              M=2, wire="int8")
+        state = {"read": dict(plane)}
+        state, _ = ctl.before_step(state, None, 1)
+        state, _ = ctl.before_step(state, None, 2)
+        for name in plane:  # reject-and-resend repairs bit-exact
+            np.testing.assert_array_equal(np.asarray(state["read"][name]),
+                                          np.asarray(plane[name]))
+        s = ctl.summary()
+        assert s["checksum_rejects"] == 1 and s["drops_detected"] == 1
+        assert s["resends"] == 2 and s["rounds_degraded"] == 2
+
+    def test_crash_detect_latency_accounting(self):
+        ctl = ChaosController("crash:peer=1,step=2", M=4, update_delay=0)
+        w = np.ones(4, np.float32) / 4
+        alive = np.ones(4, np.float32)
+        state = {"w": jnp.asarray(w), "alive": jnp.asarray(alive)}
+        for t in range(6):
+            state, _ = ctl.before_step(state, None, t)
+        assert ctl.health.status(1) == DEAD
+        assert ctl.time_to_detect() is not None
+        # the one-time renorm conserved total push-sum mass over survivors
+        w_after = np.asarray(state["w"])
+        assert w_after[1] == 0.0
+        np.testing.assert_allclose(w_after.sum(), 1.0, rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(state["alive"]),
+                                      [1.0, 0.0, 1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end multi-worker chaos (subprocess: needs M host devices)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestKilledPeerRuns:
+    def test_m4_streams_int8_crash_and_recover(self):
+        """The headline acceptance run: M=4, streams=3, int8 wire, R=2,
+        D=1; peer 1 crashes at step 3 and re-enters at step 9. The run
+        must complete with finite loss, NO TimeoutError, Σw == 1.0 every
+        round, and exactly one donor re-sync."""
+        out = run_sub("""
+            import os
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=4")
+            import numpy as np, jax, sys
+            sys.path.insert(0, "tests")
+            from _fixtures import mlp_problem, mlp_batch
+            from repro.core.backend import make_backend
+            from repro.optim.optimizers import sgd
+
+            M = 4
+            loss_fn, params = mlp_problem()
+            be = make_backend("prod", "layup", M=M, loss_fn=loss_fn,
+                              optimizer=sgd(0.1), schedule=lambda t: 0.1,
+                              fb_ratio=2, update_delay=1, overlap=True,
+                              streams=3, wire="int8", measure_drift=False,
+                              faults="crash:peer=1,step=3,recover=9")
+            rng = jax.random.PRNGKey(0)
+            state = be.init(rng, params)
+            losses, wsums = [], []
+            for t in range(14):
+                state, m = be.step(state, mlp_batch(t, M=M, b=8), rng)
+                losses.append(float(m["loss"]))
+                wsums.append(float(m["weight_sum"]))
+            be.engine.close()
+            s = be.summary()
+            assert all(np.isfinite(losses)), losses
+            assert all(abs(w - 1.0) < 1e-3 for w in wsums), wsums
+            assert s["resyncs"] == 1, s
+            assert s["peers_dead"] == 0, s   # recovered
+            assert s["peers_live"] == 4.0, s
+            assert s["rounds_degraded"] >= 1, s
+            print("OK")
+        """, timeout=1500)
+        assert "OK" in out
+
+    @pytest.mark.parametrize("M", [2, 4])
+    def test_killed_peer_completes_finite(self, M):
+        """Crash with NO recovery at M∈{2,4}: the survivors renormalize
+        (Σw conserved at 1.0) and the run completes with finite loss on
+        both the monolithic and the overlap engine."""
+        out = run_sub(f"""
+            import os
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count={M}")
+            import numpy as np, jax, sys
+            sys.path.insert(0, "tests")
+            from _fixtures import mlp_problem, mlp_batch
+            from repro.core.backend import make_backend
+            from repro.optim.optimizers import sgd
+
+            M = {M}
+            loss_fn, params = mlp_problem()
+            kw = dict(loss_fn=loss_fn, optimizer=sgd(0.1),
+                      schedule=lambda t: 0.1, fb_ratio=1, update_delay=1,
+                      measure_drift=False, faults="crash:peer=1,step=2")
+            for ekw, name in [(dict(), "mono"), (dict(overlap=True), "ovl")]:
+                be = make_backend("prod", "layup", M=M, **kw, **ekw)
+                rng = jax.random.PRNGKey(0)
+                state = be.init(rng, params)
+                losses = []
+                for t in range(8):
+                    state, m = be.step(state, mlp_batch(t, M=M, b=8), rng)
+                    losses.append(float(m["loss"]))
+                s = be.summary()
+                assert all(np.isfinite(losses)), (name, losses)
+                assert s["peers_dead"] == 1, (name, s)
+                assert s["peers_live"] == float(M - 1), (name, s)
+                assert abs(s["weight_sum"] - 1.0) < 1e-3, (name, s)
+            print("OK")
+        """, timeout=1500)
+        assert "OK" in out
+
+    def test_m2_empty_plan_bit_exact_all_engines(self):
+        """Membership on + nothing injected is bit-exact with the
+        fault-free lane at M=2 across all three engines."""
+        out = run_sub("""
+            import os
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=2")
+            import numpy as np, jax, sys
+            sys.path.insert(0, "tests")
+            from _fixtures import mlp_problem, mlp_batch
+            from repro.core.backend import make_backend
+            from repro.optim.optimizers import sgd
+
+            loss_fn, params = mlp_problem()
+            kw = dict(loss_fn=loss_fn, optimizer=sgd(0.1),
+                      schedule=lambda t: 0.1, fb_ratio=1, update_delay=1,
+                      measure_drift=False)
+
+            def drive(be):
+                rng = jax.random.PRNGKey(0)
+                state = be.init(rng, params)
+                out = []
+                for t in range(6):
+                    state, m = be.step(state, mlp_batch(t, M=2, b=8), rng)
+                    out.append(float(m["loss"]))
+                if hasattr(be.engine, "close"):
+                    be.engine.close()
+                return out
+
+            for ekw in [dict(), dict(overlap=True),
+                        dict(overlap=True, streams=2)]:
+                ref = drive(make_backend("prod", "layup", M=2, **kw, **ekw))
+                got = drive(make_backend("prod", "layup", M=2, faults="",
+                                         **kw, **ekw))
+                assert ref == got, (ekw, ref, got)
+            print("OK")
+        """, timeout=1500)
+        assert "OK" in out

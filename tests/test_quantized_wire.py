@@ -289,8 +289,8 @@ class TestCompensationFormula:
         fifo = {"g": jax.tree.map(lambda x: x[None], g0),
                 "stamp": jnp.zeros((1,), jnp.float32)}
         theta_stale = jax.tree.map(lambda x: x - 0.01, plane)
-        out, _, _, stale, theta_new = upd(plane, opt_state, g1, fifo,
-                                          jnp.int32(1), theta=theta_stale)
+        out, _, _, stale, _, theta_new = upd(plane, opt_state, g1, fifo,
+                                             jnp.int32(1), theta=theta_stale)
         drift = float(stale)  # staleness popped from the FIFO stamp
         assert drift == 1.0
         g_comp = jax.tree.map(
