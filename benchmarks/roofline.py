@@ -39,8 +39,32 @@ def fmt_ms(s):
     return f"{s * 1e3:.2f}"
 
 
+def tuned_schedule():
+    """Surface the autotuner's pick next to the analytic table: when the
+    nightly ``BENCH_autotune_record.json`` artifact exists, print the
+    measured best schedule and how far it sits from the hand-picked
+    default (see benchmarks/autotune.py and DESIGN.md §16)."""
+    path = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_autotune_record.json")
+    if not os.path.exists(path):
+        return None
+    from repro.launch.tuner import load_tuning
+    rec = load_tuning(path)
+    if rec is None:
+        return None
+    section("Tuned schedule (from autotune artifact)")
+    print(f"# key={rec.key}")
+    print(f"# best={rec.best['label']} score={rec.score:.4f} "
+          f"over {len(rec.table)} candidates")
+    emit("roofline.tuned_schedule", rec.table[0]["step_time_s"] * 1e6,
+         f"label={rec.best['label']};score={rec.score:.4f};"
+         f"candidates={len(rec.table)}")
+    return rec
+
+
 def main(quick=False):
     section("Roofline table (from dry-run artifacts)")
+    tuned_schedule()
     data = load()
     if not data:
         print("# no dry-run results yet — run: "

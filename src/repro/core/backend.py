@@ -213,10 +213,29 @@ class ProdTrainerBackend:
                  overlap: bool = False, flat: bool = True,
                  use_pallas: bool = False, publisher=None,
                  streams: int = 1, wire: str = "param",
-                 compensate: float = 0.0, faults=None):
+                 compensate: float = 0.0, faults=None,
+                 max_inflight_steps=None, tuning=None):
         import jax
         from repro.launch.mesh import num_workers
         from repro.launch.train import make_decoupled_backend_trainer
+
+        # a tuning record (launch/tuner.py, DESIGN.md §16) replaces the
+        # hand-picked schedule defaults; kwargs the caller moved off their
+        # defaults always win, and a failed load warns and changes nothing
+        self.tuning = None
+        if tuning is not None:
+            from repro.launch.tuner import apply_tuning, resolve_tuning
+            record = resolve_tuning(tuning)
+            if record is not None:
+                tuned = apply_tuning(record, fb_ratio=fb_ratio,
+                                     update_delay=update_delay, flat=flat,
+                                     max_inflight_steps=max_inflight_steps)
+                fb_ratio = tuned["fb_ratio"]
+                update_delay = tuned["update_delay"]
+                flat = tuned["flat"]
+                max_inflight_steps = tuned["max_inflight_steps"]
+                overlap = True
+                self.tuning = record
 
         algo_name = algo.name if isinstance(algo, DistAlgorithm) else str(algo)
         if not algo_name.startswith("layup"):
@@ -273,7 +292,8 @@ class ProdTrainerBackend:
                     measure_drift=measure_drift, timeline=self.timeline,
                     flat=flat, use_pallas=use_pallas, publisher=publisher,
                     streams=streams, wire=wire, compensate=compensate,
-                    membership=membership)
+                    membership=membership,
+                    max_inflight_steps=max_inflight_steps)
         else:
             self.timeline = None
             self._init_fn, self._step_fn, self._shifts, self._engine_box = \
@@ -415,7 +435,10 @@ def make_backend(kind: str, algo, *, M: int, loss_fn: Callable = None,
     error-feedback residuals, DESIGN.md §14), compensate (λ > 0 turns
     on the staleness-aware delay correction in the update lane) and
     faults (a repro.chaos FaultPlan/spec string enabling the
-    fault-tolerant membership lane + chaos injection, DESIGN.md §15).
+    fault-tolerant membership lane + chaos injection, DESIGN.md §15),
+    max_inflight_steps (the pipeline engine's backpressure bound) and
+    tuning (a repro.launch.tuner TuningRecord or path — autotuned
+    schedule defaults, DESIGN.md §16).
     """
     if kind == "sim":
         if loss_fn is None or optimizer is None or schedule is None:

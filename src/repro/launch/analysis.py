@@ -454,6 +454,33 @@ def analyze(compiled, cfg, shape, *, arch: str, algo: str, mesh_desc: str,
     )
 
 
+def stage_floors(report, *, R: int = 1) -> Dict[str, float]:
+    """Per-stage roofline lower bounds for the decoupled stage schedule,
+    consumed by the autotuner's scorer (``launch/tuner.py``).
+
+    The train convention above prices a step at fwd + 2×bwd + the remat
+    fwd (layer_mult=4), so one forward pass is ~1/4 and the
+    backward+update tail ~3/4 of the device-side term; the device term
+    itself is the binding roof of compute vs memory. With R slices the
+    step's forward work is split R ways, so the PER-SLICE floor divides
+    by R. The gossip floor is the collective term unchanged — its wire
+    bytes don't depend on the schedule.
+
+    Accepts a :class:`RooflineReport` or its ``to_dict()`` form (the
+    benchmarks pass reloaded JSON)."""
+    if hasattr(report, "t_compute"):
+        t_comp = float(report.t_compute)
+        t_mem = float(report.t_memory)
+        t_coll = float(report.t_collective)
+    else:
+        t_comp = float(report.get("t_compute", 0.0))
+        t_mem = float(report.get("t_memory", 0.0))
+        t_coll = float(report.get("t_collective", 0.0))
+    dev = max(t_comp, t_mem)
+    R = max(int(R), 1)
+    return {"fwd": 0.25 * dev / R, "update": 0.75 * dev, "gossip": t_coll}
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS: 6·N(_active)·tokens for train, 2·N·tokens for inference."""
     counts = cfg.param_counts()

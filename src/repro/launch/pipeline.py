@@ -955,9 +955,32 @@ class PipelineEngine:
         self.timeline.reset()
         self._graveyard = []
 
+    def stage_cutouts(self) -> Dict[str, Tuple[Any, tuple]]:
+        """Every separately jitted stage executable paired with the
+        abstract argument signature to synthesize inputs from — the
+        autotuner's extraction point (``launch/tuner.py``, DESIGN.md
+        §16). Keys match ``lower()``: ``fwd0..fwdR-1``, ``update``,
+        ``gossip``. Raises when the engine carries no abstract args
+        (legacy tree state) or the forward batch signature is still the
+        backend path's placeholder (step once first)."""
+        if not self.abstract_args:
+            raise ValueError(
+                "engine has no abstract args to cut stages out against "
+                "(the flat-plane factories publish them at build; the "
+                "legacy tree state has none)")
+        if self.abstract_args["fwd"][-1] is None:
+            raise ValueError(
+                "forward batch abstract unknown: step the engine once so "
+                "the backend path records the batch signature")
+        out = {}
+        for r, f in enumerate(self._stages["fwd"]):
+            out[f"fwd{r}"] = (f, self.abstract_args["fwd"])
+        for name in ("update", "gossip"):
+            out[name] = (self._stages[name], self.abstract_args[name])
+        return out
+
     def lower(self) -> Dict[str, Any]:
-        """Lower every stage executable against its abstract args (Model
-        path only — the generic backend builds stages at init time)."""
+        """Lower every stage executable against its abstract args."""
         if not self.abstract_args:
             raise ValueError("engine has no abstract args to lower against")
         out = {}
@@ -994,6 +1017,66 @@ class PipelineStep:
 # ---------------------------------------------------------------------------
 
 
+def flat_abstract_args(part, optimizer: Optimizer, M: int, R: int, D: int, *,
+                       batch_abs=None, fused: bool = False,
+                       wire: str = "param", compensate: float = 0.0,
+                       membership: bool = False,
+                       groups: bool = False) -> Dict[str, tuple]:
+    """Abstract argument signatures for every stage executable of a
+    FLAT-plane engine, keyed like ``PipelineEngine.abstract_args``
+    (``"fwd"``/``"update"``/``"gossip"``, plus ``"mix:{group}"``/
+    ``"clock"`` when ``groups=True`` for the stream engine).
+
+    This is the cutout-extraction contract (``launch/tuner.py``,
+    DESIGN.md §16): both factory paths publish these on the engine so
+    each stage is independently lowerable and runnable in isolation.
+    ``batch_abs=None`` leaves a placeholder the backend path fills from
+    the first concrete batch it sees (``stage_cutouts()`` refuses to
+    hand out the forward stage until then)."""
+    stack = lambda s: jax.ShapeDtypeStruct((M,) + tuple(s.shape), s.dtype)
+    stacked_params = part.abstract_plane((M,))
+    stacked_opt = jax.tree.map(
+        stack, jax.eval_shape(optimizer.init, part.abstract_plane()))
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    w_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
+    v_abs = jax.ShapeDtypeStruct((M, part.num_groups), jnp.float32)
+    lossvec_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
+    fifo_abs = ()
+    if D > 0:
+        fifo_abs = (part.abstract_plane((M, D)),
+                    jax.ShapeDtypeStruct((D,), jnp.float32))
+    upd_abs = (jax.eval_shape(
+        lambda p: optimizer.update(p, optimizer.init(p), p, 0.1)[0],
+        part.abstract_plane()) if fused else stacked_params)
+    if fused:
+        upd_abs = jax.tree.map(stack, upd_abs)
+    int8 = wire == "int8"
+    comp = float(compensate) > 0.0
+    resid_abs = (stacked_params,) if int8 else ()
+    theta_abs = (stacked_params,) if comp else ()
+    alive_abs = (w_abs,) if membership else ()
+    gossip_plane_abs = (((stacked_params, upd_abs) if fused
+                         else (stacked_params,)) + resid_abs)
+    out = {
+        "fwd": (stacked_params, batch_abs),
+        "update": (stacked_params, stacked_opt) + fifo_abs
+                  + (stacked_params,) + theta_abs + alive_abs + (i32,),
+        "gossip": gossip_plane_abs + (w_abs, v_abs) + alive_abs
+                  + (tuple([lossvec_abs] * R), f32, f32, i32, i32),
+    }
+    if groups:
+        for name in part.group_sizes:
+            buf_abs = ((stacked_params[name], upd_abs[name]) if fused
+                       else (stacked_params[name],))
+            if int8:
+                buf_abs = buf_abs + (stacked_params[name],)
+            out[f"mix:{name}"] = buf_abs + (w_abs,) + alive_abs + (i32,)
+        out["clock"] = ((w_abs, v_abs) + alive_abs
+                        + (tuple([lossvec_abs] * R), f32, f32, i32, i32))
+    return out
+
+
 def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                   schedule: Callable, shape,
                                   shifts: Sequence[int] = (1, 2, 4, 8),
@@ -1006,7 +1089,9 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                   use_pallas: bool = False,
                                   streams: int = 1, wire: str = "param",
                                   compensate: float = 0.0,
-                                  membership: bool = False) -> PipelineStep:
+                                  membership: bool = False,
+                                  max_inflight_steps: Optional[int] = None
+                                  ) -> PipelineStep:
     """The decoupled LayUp lane as a stage-graph pipeline on the real mesh —
     same sharding/abstract setup as ``make_layup_decoupled_train_step``,
     split into separately jitted stages. ``flat=True`` (default): the
@@ -1114,35 +1199,41 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                          fused=use_pallas, wire=wire, compensate=compensate,
                          membership=membership)
 
-    i32 = jax.ShapeDtypeStruct((), jnp.int32)
-    f32 = jax.ShapeDtypeStruct((), jnp.float32)
-    w_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
-    v_abs = jax.ShapeDtypeStruct((M, part.num_groups), jnp.float32)
-    lossvec_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
-    fifo_abs = ()
-    if D > 0:
-        fifo_abs = (fifo_g_abs, jax.ShapeDtypeStruct((D,), jnp.float32))
-    upd_abs = (jax.eval_shape(
-        lambda p: optimizer.update(p, optimizer.init(p), p, 0.1)[0],
-        abstract_opt_base) if use_pallas else stacked_params)
-    if use_pallas:
-        upd_abs = jax.tree.map(stack, upd_abs)
-    resid_abs = (stacked_params,) if int8 else ()
-    theta_abs = (stacked_params,) if comp else ()
-    alive_abs = (w_abs,) if membership else ()
-    gossip_plane_abs = (((stacked_params, upd_abs) if use_pallas
-                        else (stacked_params,)) + resid_abs)
-    abstract_args = {
-        "fwd": (stacked_params, batch_abs),
-        "update": (stacked_params, stacked_opt) + fifo_abs
-                  + (stacked_params,) + theta_abs + alive_abs + (i32,),
-        "gossip": gossip_plane_abs + (w_abs, v_abs) + alive_abs
-                  + (tuple([lossvec_abs] * R), f32, f32, i32, i32),
-    }
+    if flat:
+        # the shared helper IS the published stage-signature contract
+        # (cutout extraction, DESIGN.md §16) — the backend path builds
+        # the identical dict, minus the batch it learns at step one
+        abstract_args = flat_abstract_args(
+            part, optimizer, M, R, D, batch_abs=batch_abs,
+            fused=use_pallas, wire=wire, compensate=compensate,
+            membership=membership, groups=streams > 1)
+    else:
+        i32 = jax.ShapeDtypeStruct((), jnp.int32)
+        f32 = jax.ShapeDtypeStruct((), jnp.float32)
+        w_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
+        v_abs = jax.ShapeDtypeStruct((M, part.num_groups), jnp.float32)
+        lossvec_abs = jax.ShapeDtypeStruct((M,), jnp.float32)
+        fifo_abs = ()
+        if D > 0:
+            fifo_abs = (fifo_g_abs, jax.ShapeDtypeStruct((D,), jnp.float32))
+        upd_abs = stacked_params
+        resid_abs = (stacked_params,) if int8 else ()
+        theta_abs = (stacked_params,) if comp else ()
+        alive_abs = (w_abs,) if membership else ()
+        gossip_plane_abs = (stacked_params,) + resid_abs
+        abstract_args = {
+            "fwd": (stacked_params, batch_abs),
+            "update": (stacked_params, stacked_opt) + fifo_abs
+                      + (stacked_params,) + theta_abs + alive_abs + (i32,),
+            "gossip": gossip_plane_abs + (w_abs, v_abs) + alive_abs
+                      + (tuple([lossvec_abs] * R), f32, f32, i32, i32),
+        }
     tags = (f"{', pallas' if use_pallas else ''}"
             f"{', wire=int8' if int8 else ''}"
             f"{f', comp={float(compensate):g}' if comp else ''}"
             f"{', membership' if membership else ''}")
+    inflight_kw = ({} if max_inflight_steps is None
+                   else {"max_inflight_steps": int(max_inflight_steps)})
     if streams > 1:
         from repro.launch.streams import StreamEngine
         group_stages = _jit_group_stages(part, mesh, worker_axes, M, mix,
@@ -1150,16 +1241,6 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
                                          fused=use_pallas,
                                          shardings=shardings, R=R,
                                          wire=wire, membership=membership)
-        clock_abs = ((w_abs, v_abs) + alive_abs
-                     + (tuple([lossvec_abs] * R), f32, f32, i32, i32))
-        for name in part.group_sizes:
-            buf_abs = ((stacked_params[name], upd_abs[name]) if use_pallas
-                       else (stacked_params[name],))
-            if int8:
-                buf_abs = buf_abs + (stacked_params[name],)
-            abstract_args[f"mix:{name}"] = (buf_abs + (w_abs,) + alive_abs
-                                            + (i32,))
-        abstract_args["clock"] = clock_abs
         engine = StreamEngine(
             R=R, D=D, M=M, group_names=list(part.group_sizes),
             stages=stages, group_stages=group_stages, timeline=timeline,
@@ -1168,7 +1249,7 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
             describe=(f"layup decoupled stream pipeline (M={M}, R={R}, "
                       f"D={D}, shifts={shifts}, streams={streams}, "
                       f"groups={len(part.group_sizes)}{tags})"),
-            abstract_args=abstract_args)
+            abstract_args=abstract_args, **inflight_kw)
     else:
         engine = PipelineEngine(
             R=R, D=D, M=M, stages=stages, timeline=timeline,
@@ -1176,7 +1257,7 @@ def make_layup_decoupled_pipeline(model, mesh, optimizer: Optimizer,
             describe=(f"layup decoupled pipeline (M={M}, R={R}, D={D}, "
                       f"shifts={shifts}, stages={R + 2}, flat={flat}"
                       f"{tags})"),
-            abstract_args=abstract_args)
+            abstract_args=abstract_args, **inflight_kw)
 
     def init_state(params_stacked):
         state = make_decoupled_state(params_stacked, optimizer,
@@ -1205,7 +1286,8 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                                   publisher=None,
                                   streams: int = 1, wire: str = "param",
                                   compensate: float = 0.0,
-                                  membership: bool = False):
+                                  membership: bool = False,
+                                  max_inflight_steps: Optional[int] = None):
     """Pipeline-engine counterpart of ``make_decoupled_backend_trainer``:
     same generic pytree + loss_fn contract, same sim-layout batches, but
     the step is the stage-graph engine instead of one jitted program.
@@ -1284,6 +1366,17 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                 f"{', wire=int8' if wire == 'int8' else ''}"
                 f"{f', comp={float(compensate):g}' if compensate else ''}"
                 f"{', membership' if membership else ''}")
+        # publish the stage signatures so the tuner can cut stages out of
+        # a backend-path engine too; the forward BATCH abstract is a
+        # placeholder until step_fn sees the first concrete batch
+        absargs = None
+        if flat:
+            absargs = flat_abstract_args(
+                part, optimizer, M, R, D, fused=use_pallas, wire=wire,
+                compensate=compensate, membership=membership,
+                groups=streams > 1)
+        inflight_kw = ({} if max_inflight_steps is None
+                       else {"max_inflight_steps": int(max_inflight_steps)})
         if streams > 1:
             from repro.launch.streams import StreamEngine
             group_stages = _jit_group_stages(part, mesh, worker_axes, M,
@@ -1298,13 +1391,15 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
                 wire=wire, compensate=compensate,
                 describe=(f"stream pipeline backend (M={M}, R={R}, D={D}, "
                           f"streams={streams}, "
-                          f"groups={len(part.group_sizes)}{tags})"))
+                          f"groups={len(part.group_sizes)}{tags})"),
+                abstract_args=absargs, **inflight_kw)
         else:
             engine = PipelineEngine(
                 R=R, D=D, M=M, stages=stages, timeline=timeline,
                 fused=use_pallas, wire=wire, compensate=compensate,
                 describe=(f"pipeline backend (M={M}, R={R}, D={D}, "
-                          f"flat={flat}{tags})"))
+                          f"flat={flat}{tags})"),
+                abstract_args=absargs, **inflight_kw)
         return engine, part
 
     def init_fn(rng, params_single):
@@ -1331,8 +1426,17 @@ def make_pipeline_backend_trainer(loss_fn: Callable, optimizer: Optimizer,
     def step_fn(state, batch, step_idx, shift_idx):
         if "engine" not in box:
             raise RuntimeError("call init_fn before step_fn")
-        state, metrics = box["engine"].step(state, batch, step_idx,
-                                            shift_idx)
+        eng = box["engine"]
+        if eng.abstract_args and eng.abstract_args["fwd"][-1] is None:
+            # the backend path learns the forward batch signature from
+            # the first concrete batch — from here on stage cutouts
+            # (launch/tuner.py) and lower() work like the Model path
+            eng.abstract_args["fwd"] = (
+                eng.abstract_args["fwd"][0],
+                jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(np.shape(x), x.dtype),
+                    batch))
+        state, metrics = eng.step(state, batch, step_idx, shift_idx)
         if measure_drift:
             if streams > 1:
                 # state leaves are stream futures: run the drift jit on

@@ -682,6 +682,32 @@ class StreamEngine:
                     seen.add(id(s))
                     s.close()
 
+    def stage_cutouts(self) -> Dict[str, Tuple[Any, tuple]]:
+        """Every separately jitted stage executable paired with its
+        abstract argument signature — the autotuner's extraction point
+        (``launch/tuner.py``, DESIGN.md §16; mirrors
+        ``PipelineEngine.stage_cutouts``). Keys match ``lower()``:
+        ``fwd0..fwdR-1``, ``update``, ``mix:{group}``, ``clock``."""
+        if not self.abstract_args:
+            raise ValueError(
+                "engine has no abstract args to cut stages out against "
+                "(the flat-plane factories publish them at build)")
+        if self.abstract_args["fwd"][-1] is None:
+            raise ValueError(
+                "forward batch abstract unknown: step the engine once so "
+                "the backend path records the batch signature")
+        out = {}
+        for r, f in enumerate(self._stages["fwd"]):
+            out[f"fwd{r}"] = (f, self.abstract_args["fwd"])
+        out["update"] = (self._stages["update"],
+                         self.abstract_args["update"])
+        for g in self.group_names:
+            out[f"mix:{g}"] = (self._group_stages["mix"][g],
+                               self.abstract_args[f"mix:{g}"])
+        out["clock"] = (self._group_stages["clock"],
+                        self.abstract_args["clock"])
+        return out
+
     def lower(self) -> Dict[str, Any]:
         """Lower every stage executable against its abstract args (Model
         path only, mirrors ``PipelineEngine.lower``)."""

@@ -1579,7 +1579,9 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
               streams: int = 1,
               wire: str = "param",
               compensate: float = 0.0,
-              faults=None) -> ProdStep:
+              faults=None,
+              max_inflight_steps: Optional[int] = None,
+              tuning=None) -> ProdStep:
     """``overlap=True`` selects the stage-graph pipeline engine
     (repro.launch.pipeline): the decoupled lane compiled into separately
     jitted fwd-slice / bwd+update / gossip stages dispatched asynchronously
@@ -1611,10 +1613,31 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
     lane (per-worker ``alive`` mask, live-set push-sum renormalization —
     DESIGN.md §15) and attaches a ``ChaosController`` for the plan on
     the returned step (``.chaos``); an empty plan enables the machinery
-    without injecting anything."""
+    without injecting anything.
+
+    ``tuning`` (a :class:`repro.launch.tuner.TuningRecord` or a path to
+    its JSON) replaces the hand-picked schedule defaults with the
+    autotuned ones (DESIGN.md §16): any of ``fb_ratio``/``update_delay``/
+    ``flat``/``max_inflight_steps`` still at its documented default takes
+    the record's best candidate (explicit kwargs always win), and a
+    loaded record implies ``overlap=True`` — the record tunes the stage
+    schedule. A missing/corrupt/stale/mismatched record warns and leaves
+    every default untouched, never raises."""
     from repro.optim import momentum, constant
     optimizer = optimizer or momentum(0.9, state_dtype=model.cfg.dtype)
     schedule = schedule or constant(0.1)
+    if tuning is not None:
+        from repro.launch.tuner import apply_tuning, resolve_tuning
+        record = resolve_tuning(tuning)
+        if record is not None:
+            tuned = apply_tuning(record, fb_ratio=fb_ratio,
+                                 update_delay=update_delay, flat=flat,
+                                 max_inflight_steps=max_inflight_steps)
+            fb_ratio = tuned["fb_ratio"]
+            update_delay = tuned["update_delay"]
+            flat = tuned["flat"]
+            max_inflight_steps = tuned["max_inflight_steps"]
+            overlap = True
     decoupled = fb_ratio > 1 or update_delay > 0 or overlap
     membership = faults is not None
     if streams > 1 and not overlap:
@@ -1646,7 +1669,8 @@ def make_step(model: Model, mesh, shape: ShapeConfig, *, algo: str = "layup",
                     update_delay=update_delay,
                     constrain_grads=constrain_grads, flat=flat,
                     use_pallas=use_pallas, streams=streams, wire=wire,
-                    compensate=compensate, membership=membership)
+                    compensate=compensate, membership=membership,
+                    max_inflight_steps=max_inflight_steps)
             else:
                 step = make_layup_decoupled_train_step(
                     model, mesh, optimizer, schedule, shape, shifts,

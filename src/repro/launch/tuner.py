@@ -1,0 +1,510 @@
+"""Roofline-driven stage autotuner with a deterministic cutout harness
+(DESIGN.md §16).
+
+Every schedule knob of the decoupled lane — the fwd:bwd ratio R, the
+update delay D, the layer-grouping granularity, the engine's
+``max_inflight_steps`` backpressure bound and the gossip/quantize tile
+size — is hand-picked today ("R=2 because the paper did"). This module
+closes the loop between the analytic roofline model
+(``repro.launch.analysis``) and the measured :class:`~repro.launch.
+pipeline.StageTimeline`, in the style of DaCe's cutout tuner + roofline
+model: cut each jitted stage executable out of the engine, time it in
+isolation, score a small config grid against the roofline terms plus the
+measured overlap, and emit the winner as a reusable
+:class:`TuningRecord` that ``make_step`` / ``ProdTrainerBackend`` load
+in place of the hand-picked defaults.
+
+Three layers, each independently testable with NO real timing:
+
+* **Cutouts** (:class:`StageCutout`, :func:`extract_cutouts`) — the
+  engines expose ``stage_cutouts()``: every separately jitted stage
+  executable (fwd slice, bwd+update, gossip mix — per layer group on the
+  stream engine) paired with its abstract argument signature. A cutout
+  is independently runnable: :func:`synthesize_args` materializes fresh
+  concrete buffers from the abstract signature per invocation, so the
+  stages' donation contracts hold exactly as they do in-engine (a
+  donated synthetic buffer is consumed and replaced, never reused).
+* **Harness** (:class:`CutoutHarness`) — times a cutout over warmup +
+  measured repetitions. Both the clock and the runner (the thing that
+  actually executes the stage and blocks on its outputs) are injected,
+  so unit tests drive the whole grid search with a scripted clock and a
+  fake executable backend — fully deterministic, no wall time anywhere.
+  The default runner executes the real jit and blocks via
+  ``jax.block_until_ready``.
+* **Scoring + record** (:func:`score_candidate`, :func:`build_record`,
+  :class:`TuningRecord`) — a deterministic throughput model over the
+  measured per-stage times: forward-slice work and the update+gossip
+  tail overlap up to the efficiency the measured timeline actually
+  demonstrated, roofline terms (:func:`repro.launch.analysis.
+  stage_floors`) clamp any cutout time that claims to beat physics, and
+  a staleness discount prices the quality cost of deep R/D. The best
+  candidate lands in a versioned JSON record keyed by (model config,
+  mesh descriptor, wire dtype); loads that fail — corrupted JSON, stale
+  schema version, wrong key — warn and fall back to the hand-picked
+  defaults, never crash.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from dataclasses import asdict, dataclass, field, fields
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "TUNING_SCHEMA_VERSION", "Candidate", "DEFAULT_CANDIDATE",
+    "StageCutout", "CutoutHarness", "TuningRecord",
+    "apply_tuning", "build_record", "enumerate_grid", "extract_cutouts",
+    "load_tuning", "make_key", "mesh_descriptor", "overlap_efficiency",
+    "problem_descriptor", "resolve_tuning", "score_candidate",
+    "stage_times_from_cutouts", "synthesize_args",
+]
+
+# bump whenever the record layout or the scoring semantics change: a loader
+# seeing another version treats the record as stale and falls back to the
+# hand-picked defaults (never apply a schedule tuned under different rules)
+TUNING_SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# candidates
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the schedule grid.
+
+    ``grouping``: ``"layer"`` is the per-layer-group flat plane
+    (DESIGN.md §11 — one contiguous buffer per layer group, per-group
+    signals on the stream engine); ``"legacy"`` is the per-leaf tree
+    state with the per-step f32 ravel wire. ``tile`` is the
+    gossip/quantize lane-row tile (the Pallas kernels pin 128 rows
+    today, so other values score a modeled launch/padding penalty and
+    are recorded for the kernel lane rather than applied)."""
+
+    R: int = 2
+    D: int = 1
+    grouping: str = "layer"
+    max_inflight_steps: int = 3
+    tile: int = 128
+
+    def label(self) -> str:
+        return (f"R{self.R}_D{self.D}_{self.grouping}"
+                f"_q{self.max_inflight_steps}_t{self.tile}")
+
+
+#: the hand-picked defaults every PR so far shipped (R=2/D=1 from the
+#: paper, flat plane, max_inflight_steps=3, 128-lane kernel rows) — the
+#: baseline a tuned schedule must never score below.
+DEFAULT_CANDIDATE = Candidate()
+
+
+def enumerate_grid(R_values: Sequence[int] = (1, 2, 4),
+                   D_values: Sequence[int] = (0, 1, 2),
+                   groupings: Sequence[str] = ("layer",),
+                   max_inflight: Sequence[int] = (2, 3, 4),
+                   tiles: Sequence[int] = (128,)) -> List[Candidate]:
+    """The config grid, in a deterministic nested order (R outermost).
+
+    Pure enumeration — no filtering, no timing, no randomness — so tests
+    pin the exact candidate list."""
+    out = []
+    for r in R_values:
+        for d in D_values:
+            for g in groupings:
+                for q in max_inflight:
+                    for t in tiles:
+                        out.append(Candidate(R=int(r), D=int(d),
+                                             grouping=str(g),
+                                             max_inflight_steps=int(q),
+                                             tile=int(t)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cutouts
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StageCutout:
+    """One stage executable cut out of an engine: the jitted callable
+    plus the abstract argument signature to synthesize inputs from."""
+
+    name: str
+    fn: Callable
+    abstract_args: tuple
+
+
+def extract_cutouts(engine) -> Dict[str, StageCutout]:
+    """Extract every jitted stage executable from a
+    :class:`~repro.launch.pipeline.PipelineEngine` or
+    :class:`~repro.launch.streams.StreamEngine` as an independently
+    runnable cutout. Raises ``ValueError`` if the engine carries no
+    abstract argument signatures (``engine.stage_cutouts()`` owns that
+    check — backend-path engines fill the forward batch abstract at
+    their first step)."""
+    return {name: StageCutout(name, fn, args)
+            for name, (fn, args) in engine.stage_cutouts().items()}
+
+
+def synthesize_args(abstract_args) -> tuple:
+    """Fresh concrete buffers for an abstract argument signature.
+
+    Every ``ShapeDtypeStruct`` leaf becomes a numpy array of ones (ones,
+    not zeros: push-sum weights and version clocks stay benign). A NEW
+    tree is built per call — the stages donate inputs, so a cutout
+    invocation must never hand the runner a buffer a previous invocation
+    already consumed. The host→device transfer rides each timed call
+    uniformly across candidates, which is what a relative schedule
+    comparison needs."""
+    import jax
+
+    def mk(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return np.ones(tuple(leaf.shape), np.dtype(leaf.dtype))
+        return leaf
+
+    return jax.tree.map(mk, abstract_args)
+
+
+def _default_runner(fn, args):
+    """Execute a stage executable and block until its outputs retired —
+    the real-timing backend (the injectable seam for tests)."""
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out
+
+
+class CutoutHarness:
+    """Times stage cutouts in isolation with injectable clock + runner.
+
+    ``clock`` is read immediately before and after each measured
+    repetition ONLY (warmup repetitions never touch it), so a scripted
+    clock maps one tick pair per rep and the arithmetic is exact in
+    tests. ``runner(fn, args)`` performs the execution; the default runs
+    the real jit and blocks on its outputs. Synthetic arguments are
+    re-synthesized for every invocation (donation — see
+    :func:`synthesize_args`)."""
+
+    def __init__(self, *, clock: Callable[[], float] = time.perf_counter,
+                 runner: Optional[Callable] = None, warmup: int = 1,
+                 reps: int = 3):
+        if reps < 1:
+            raise ValueError(f"need at least one measured rep, got {reps}")
+        self.clock = clock
+        self.runner = runner if runner is not None else _default_runner
+        self.warmup = int(warmup)
+        self.reps = int(reps)
+
+    def time_cutout(self, cutout: StageCutout) -> Dict[str, float]:
+        for _ in range(self.warmup):
+            self.runner(cutout.fn, synthesize_args(cutout.abstract_args))
+        samples = []
+        for _ in range(self.reps):
+            args = synthesize_args(cutout.abstract_args)
+            t0 = self.clock()
+            self.runner(cutout.fn, args)
+            samples.append(self.clock() - t0)
+        return {"mean_s": sum(samples) / len(samples),
+                "best_s": min(samples), "reps": float(self.reps)}
+
+    def time_engine(self, engine) -> Dict[str, Dict[str, float]]:
+        """Time every cutout of an engine: ``{cutout_name: timing}``."""
+        return {name: self.time_cutout(c)
+                for name, c in extract_cutouts(engine).items()}
+
+
+def stage_times_from_cutouts(timings: Dict[str, Dict[str, float]],
+                             reduce: str = "mean_s") -> Dict[str, float]:
+    """Collapse per-cutout timings into the three canonical stage times
+    the scorer consumes: ``fwd`` (mean per forward slice), ``update``,
+    and ``gossip`` (the full-plane stage, or the sum of the per-group
+    mixes + the clock on the stream engine)."""
+    fwd = [v[reduce] for n, v in timings.items() if n.startswith("fwd")]
+    out = {"fwd": (sum(fwd) / len(fwd)) if fwd else 0.0,
+           "update": timings.get("update", {}).get(reduce, 0.0)}
+    if "gossip" in timings:
+        out["gossip"] = timings["gossip"][reduce]
+    else:
+        out["gossip"] = (sum(v[reduce] for n, v in timings.items()
+                             if n.startswith("mix:"))
+                         + timings.get("clock", {}).get(reduce, 0.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scoring
+# ---------------------------------------------------------------------------
+
+
+def overlap_efficiency(timeline_summary: Optional[Dict[str, Any]]) -> float:
+    """Fraction of the wall the measured timeline proved overlapped, in
+    [0, 1]. ``None`` means "no measurement" and scores as ideal (1.0 —
+    pure-model ranking); an EMPTY timeline (zero closed steps) scores
+    0.0 without dividing by zero."""
+    if timeline_summary is None:
+        return 1.0
+    wall = float(timeline_summary.get("wall_s") or 0.0)
+    if wall <= 0.0:
+        return 0.0
+    ov = max(float(timeline_summary.get("exec_overlap_s", 0.0)),
+             float(timeline_summary.get("fwd_gossip_overlap_s", 0.0)),
+             float(timeline_summary.get("overlap_s", 0.0)))
+    return min(1.0, max(0.0, ov / wall))
+
+
+def score_candidate(cand: Candidate, stage_times: Dict[str, float], *,
+                    floors: Optional[Dict[str, float]] = None,
+                    timeline: Optional[Dict[str, Any]] = None,
+                    staleness_penalty: float = 0.1,
+                    legacy_gossip_factor: float = 2.0) -> Dict[str, float]:
+    """Deterministic throughput score for one candidate. Higher is
+    better.
+
+    The model, term by term:
+
+    * stage times come from the cutout harness (``fwd`` is PER SLICE);
+      ``floors`` — per-stage roofline lower bounds from
+      :func:`repro.launch.analysis.stage_floors` — clamp any measured
+      time that claims to beat the hardware;
+    * ``grouping="legacy"`` multiplies the gossip time by
+      ``legacy_gossip_factor`` (the per-step f32 ravel repack + the f32
+      wire, vs. the zero-repack param-dtype plane — the measured ratio
+      in ``BENCH_gossip_path``); off-128 tiles pay a modeled launch
+      (smaller) or padding (larger) penalty;
+    * one step runs R forward slices against the update+gossip tail.
+      Fully serial that costs ``R·t_fwd + t_upd + t_gossip``; fully
+      overlapped, ``max(R·t_fwd, t_upd + t_gossip)``. The schedule
+      recovers the gap in proportion to (a) the overlap efficiency the
+      MEASURED timeline demonstrated and (b) the pipeline depth the
+      candidate affords (``1 − 2^−(max_inflight_steps + D)`` — each
+      extra in-flight step or FIFO slot halves the remaining stall);
+    * the score is forward passes per second (R per step — the paper's
+      throughput currency) discounted by the staleness the schedule
+      induces: ``D`` full delay slots plus ``(R−1)/2`` of forward
+      run-ahead.
+
+    Pure arithmetic over its inputs — the unit tests drive it with
+    hand-written times and pin exact values."""
+    t_fwd = float(stage_times["fwd"])
+    t_upd = float(stage_times["update"])
+    t_gos = float(stage_times["gossip"])
+    if cand.grouping == "legacy":
+        t_gos *= float(legacy_gossip_factor)
+    if cand.tile < 128:
+        t_gos *= 1.0 + 0.05 * (128.0 / cand.tile - 1.0)
+    elif cand.tile > 128:
+        t_gos *= 1.0 + 0.02 * (cand.tile / 128.0 - 1.0)
+    if floors:
+        t_fwd = max(t_fwd, float(floors.get("fwd", 0.0)))
+        t_upd = max(t_upd, float(floors.get("update", 0.0)))
+        t_gos = max(t_gos, float(floors.get("gossip", 0.0)))
+
+    R = max(int(cand.R), 1)
+    serial = R * t_fwd + t_upd + t_gos
+    critical = max(R * t_fwd, t_upd + t_gos)
+    eff = overlap_efficiency(timeline)
+    depth = 1.0 - 0.5 ** max(int(cand.max_inflight_steps) + int(cand.D), 1)
+    step_time = serial - eff * depth * (serial - critical)
+
+    staleness = float(cand.D) + 0.5 * (R - 1)
+    discount = 1.0 / (1.0 + float(staleness_penalty) * staleness)
+    score = (R * discount / step_time) if step_time > 0.0 else 0.0
+    return {"score": score, "step_time_s": step_time, "serial_s": serial,
+            "critical_s": critical, "staleness": staleness,
+            "overlap_eff": eff}
+
+
+# ---------------------------------------------------------------------------
+# the tuning record
+# ---------------------------------------------------------------------------
+
+
+def mesh_descriptor(mesh) -> str:
+    """``data4xmodel1``-style key component for a jax mesh."""
+    return "x".join(f"{name}{size}" for name, size
+                    in zip(mesh.axis_names, mesh.devices.shape))
+
+
+def problem_descriptor(part) -> str:
+    """Key component pinning the model's flat-plane layout (a
+    :class:`~repro.core.layerview.FlatPartition`): group names + sizes —
+    two models tune interchangeably iff their planes match."""
+    items = sorted((str(n), int(s)) for n, s in part.group_sizes.items())
+    return "plane[" + ",".join(f"{n}:{s}" for n, s in items) + "]"
+
+
+def make_key(problem: str, mesh_desc: str, wire: str) -> str:
+    """The record key: model config + mesh descriptor + wire dtype."""
+    return f"{problem}|{mesh_desc}|wire={wire}"
+
+
+@dataclass
+class TuningRecord:
+    """A versioned, keyed tuning result — what the autotuner emits and
+    ``make_step`` / ``ProdTrainerBackend`` load."""
+
+    version: int
+    key: str
+    best: Dict[str, Any]
+    score: float
+    table: List[Dict[str, Any]] = field(default_factory=list)
+    stage_times: Dict[str, float] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def best_candidate(self) -> Candidate:
+        names = {f.name for f in fields(Candidate)}
+        return Candidate(**{k: v for k, v in self.best.items()
+                            if k in names})
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, doc: Dict[str, Any]) -> "TuningRecord":
+        if not isinstance(doc, dict):
+            raise ValueError(f"tuning record must be a dict, got "
+                             f"{type(doc).__name__}")
+        for req in ("version", "key", "best", "score"):
+            if req not in doc:
+                raise ValueError(f"tuning record missing field {req!r}")
+        best = doc["best"]
+        if not isinstance(best, dict):
+            raise ValueError("tuning record 'best' must be a dict")
+        for req in ("R", "D"):
+            if req not in best:
+                raise ValueError(f"tuning record best missing {req!r}")
+        rec = cls(version=int(doc["version"]), key=str(doc["key"]),
+                  best=dict(best), score=float(doc["score"]),
+                  table=list(doc.get("table", [])),
+                  stage_times=dict(doc.get("stage_times", {})),
+                  meta=dict(doc.get("meta", {})))
+        rec.best_candidate()  # validates the candidate fields coerce
+        return rec
+
+    def save(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+        return path
+
+
+def build_record(entries: Iterable[Tuple[Candidate, Dict[str, float],
+                                         Optional[Dict[str, Any]]]], *,
+                 key: str, floors: Optional[Dict[str, float]] = None,
+                 staleness_penalty: float = 0.1,
+                 meta: Optional[Dict[str, Any]] = None) -> TuningRecord:
+    """Score measured candidates and emit the record.
+
+    ``entries`` — ``(candidate, stage_times, timeline_summary)`` triples
+    (timeline may be None). ``floors`` is a per-stage dict, or a callable
+    ``cand -> dict`` when the floor depends on the candidate (the fwd
+    roofline floor divides by R — ``analysis.stage_floors(report,
+    R=cand.R)``). The best candidate is the max score; ties break toward
+    the EARLIEST entry, so putting the hand-picked default first
+    guarantees "tuned never scores worse than untuned" degrades to the
+    default under exact ties. The table keeps every scored row, sorted
+    best-first, for the nightly artifact."""
+    rows = []
+    for i, (cand, stage_times, timeline) in enumerate(entries):
+        fl = floors(cand) if callable(floors) else floors
+        s = score_candidate(cand, stage_times, floors=fl,
+                            timeline=timeline,
+                            staleness_penalty=staleness_penalty)
+        rows.append((s["score"], -i, cand, stage_times, s))
+    if not rows:
+        raise ValueError("build_record needs at least one scored candidate")
+    rows.sort(key=lambda r: (r[0], r[1]), reverse=True)
+    best_score, _, best, best_times, best_s = rows[0]
+    table = [{**asdict(c), **s, "label": c.label()}
+             for _, _, c, _, s in rows]
+    return TuningRecord(
+        version=TUNING_SCHEMA_VERSION, key=key,
+        best={**asdict(best), "label": best.label()}, score=best_score,
+        table=table, stage_times=dict(best_times), meta=dict(meta or {}))
+
+
+# ---------------------------------------------------------------------------
+# loading + applying (the make_step / ProdTrainerBackend entry points)
+# ---------------------------------------------------------------------------
+
+
+def _warn(msg: str) -> None:
+    warnings.warn(f"tuning record: {msg}; falling back to hand-picked "
+                  f"defaults", UserWarning, stacklevel=3)
+
+
+def load_tuning(path: str, *, key: Optional[str] = None,
+                version: int = TUNING_SCHEMA_VERSION
+                ) -> Optional[TuningRecord]:
+    """Load a record from JSON; NEVER raises. A missing file, corrupted
+    JSON, a stale/foreign schema version, a key mismatch or a malformed
+    body each warn and return ``None`` — the caller keeps its
+    hand-picked defaults."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except Exception as e:
+        _warn(f"{path!r} unreadable ({type(e).__name__}: {e})")
+        return None
+    if not isinstance(doc, dict) or doc.get("version") != version:
+        got = doc.get("version") if isinstance(doc, dict) else None
+        _warn(f"{path!r} has schema version {got!r}, expected {version} "
+              f"(stale record)")
+        return None
+    if key is not None and doc.get("key") != key:
+        _warn(f"{path!r} keyed for {doc.get('key')!r}, not {key!r}")
+        return None
+    try:
+        return TuningRecord.from_dict(doc)
+    except Exception as e:
+        _warn(f"{path!r} malformed ({e})")
+        return None
+
+
+def resolve_tuning(tuning, *, key: Optional[str] = None
+                   ) -> Optional[TuningRecord]:
+    """Normalize the ``tuning=`` argument: ``None`` passes through, a
+    :class:`TuningRecord` is key-checked, anything else is treated as a
+    path and loaded via :func:`load_tuning` (same never-crash
+    contract)."""
+    if tuning is None:
+        return None
+    if isinstance(tuning, TuningRecord):
+        if key is not None and tuning.key != key:
+            _warn(f"record keyed for {tuning.key!r}, not {key!r}")
+            return None
+        return tuning
+    return load_tuning(os.fspath(tuning), key=key)
+
+
+def apply_tuning(record: Optional[TuningRecord], *, fb_ratio: int = 1,
+                 update_delay: int = 0, flat: bool = True,
+                 max_inflight_steps: Optional[int] = None
+                 ) -> Dict[str, Any]:
+    """Merge a record under the caller's kwargs: a knob the caller moved
+    off its documented default (``fb_ratio=1``, ``update_delay=0``,
+    ``flat=True``, ``max_inflight_steps=None``) always wins; the record
+    only replaces untouched defaults. Returns the effective kwargs."""
+    out = {"fb_ratio": int(fb_ratio), "update_delay": int(update_delay),
+           "flat": bool(flat), "max_inflight_steps": max_inflight_steps}
+    if record is None:
+        return out
+    best = record.best_candidate()
+    if out["fb_ratio"] == 1:
+        out["fb_ratio"] = int(best.R)
+    if out["update_delay"] == 0:
+        out["update_delay"] = int(best.D)
+    if out["max_inflight_steps"] is None:
+        out["max_inflight_steps"] = int(best.max_inflight_steps)
+    if out["flat"] and best.grouping == "legacy":
+        out["flat"] = False
+    return out
